@@ -1,0 +1,28 @@
+"""Closing the loop: mesh collectives SIMULATED on the HyperX fabric per
+allocation strategy (cost-model validation against the cycle simulator)."""
+
+from benchmarks.common import emit
+from repro.fabric.collective_sim import compare_strategies_simulated
+
+
+def run(quick=False):
+    if quick:
+        mesh, groups = (8, 8), 4        # 64-chip job on the n=4 fleet
+        strategies = ("row", "diagonal", "full_spread", "rectangular")
+    else:
+        mesh, groups = (16, 16), 8      # 256-chip pod on the n=8 fleet
+        strategies = ("row", "diagonal", "full_spread", "rectangular",
+                      "l_shape", "random_endpoint", "random_switch")
+    rows = []
+    for kind in ("all_to_all", "all_reduce"):
+        out = compare_strategies_simulated(
+            mesh_shape=mesh, axis="model", kind=kind,
+            num_groups=groups, strategies=strategies,
+        )
+        rows.extend(out)
+    emit(rows, "collective_sim (mesh collectives measured on the fabric)")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

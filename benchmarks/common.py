@@ -1,0 +1,102 @@
+"""Shared helpers for the benchmark suite (one module per paper artifact)."""
+
+from __future__ import annotations
+
+import csv
+import io
+import sys
+import time
+
+import numpy as np
+
+from repro.core.hyperx import HyperX
+from repro.core.allocation import allocate_partition, machine_partitions
+from repro.core import traffic as tr
+from repro.core.simulator import build_simulator
+
+STRATEGIES = [
+    "row", "diagonal", "full_spread", "rectangular", "l_shape",
+    "random_endpoint", "random_switch",
+]
+
+PAPER_TOPO = HyperX(n=8, q=2)
+
+
+def emit(rows: list[dict], name: str):
+    """Print rows as CSV with a '# <name>' header (the harness contract)."""
+    if not rows:
+        print(f"# {name}: no rows")
+        return
+    out = io.StringIO()
+    w = csv.DictWriter(out, fieldnames=list(rows[0].keys()))
+    w.writeheader()
+    for r in rows:
+        w.writerow(r)
+    print(f"# {name}")
+    sys.stdout.write(out.getvalue())
+    sys.stdout.flush()
+
+
+def kernel_app(kind: str, k: int, seed: int = 0):
+    if kind == "all_to_all":
+        return tr.all_to_all(k)
+    if kind == "all_reduce":
+        return tr.all_reduce(k, vector_packets=64)
+    if kind == "stencil_von_neumann":
+        return tr.stencil(k, "von_neumann")
+    if kind == "stencil_moore":
+        return tr.stencil(k, "moore")
+    if kind == "random_involution":
+        return tr.random_involution(k, packets=63, seed=seed)
+    if kind == "uniform":
+        return tr.uniform(k, packets=64)
+    if kind == "random_permutation":
+        return tr.random_permutation(k, packets=64, seed=seed)
+    if kind == "random_switch_permutation":
+        return tr.random_switch_permutation(k, group=PAPER_TOPO.n,
+                                            packets=64, seed=seed)
+    raise ValueError(kind)
+
+
+def escalation_makespan(strategy: str, kind: str, replicas: int, k: int = 64,
+                        mode: str = "omniwar", seed: int = 0,
+                        horizon: int = 60000) -> dict:
+    """k-rank app x replicas on the paper machine; all replicas targets."""
+    per_job = k
+    parts = machine_partitions(strategy, PAPER_TOPO,
+                               num_jobs=512 // per_job, job_size=per_job)
+    apps = [(kernel_app(kind, k, seed + j), parts[j]) for j in range(replicas)]
+    wl = tr.compose_workload(PAPER_TOPO, apps)
+    res = build_simulator(PAPER_TOPO, wl, mode=mode, horizon=horizon)(seed)
+    return {
+        "strategy": strategy, "kernel": kind, "replicas": replicas, "k": k,
+        "makespan": res.makespan if res.completed else -1,
+        "makespan_cycles": res.makespan_cycles if res.completed else -1,
+        "avg_latency": round(res.avg_latency, 2),
+        "avg_hops": round(res.avg_hops, 3),
+        "completed": res.completed,
+    }
+
+
+def interference_makespan(strategy: str, kind: str, k: int = 64,
+                          fabric: str = "shared", with_bg: bool = True,
+                          warmup: int = 400, seed: int = 0,
+                          horizon: int = 80000) -> dict:
+    part = allocate_partition(strategy, PAPER_TOPO, 0,
+                              size=k)
+    apps = [(kernel_app(kind, k, seed), part)]
+    bgs = []
+    if with_bg:
+        free = np.setdiff1d(np.arange(PAPER_TOPO.num_endpoints),
+                            part.endpoints)
+        bgs = [tr.background_noise(PAPER_TOPO, free, seed=seed + 99)]
+    wl = tr.compose_workload(PAPER_TOPO, apps, background=bgs,
+                             fabric_partitioning=fabric,
+                             warmup=warmup if with_bg else 0)
+    res = build_simulator(PAPER_TOPO, wl, horizon=horizon)(seed)
+    return {
+        "strategy": strategy, "kernel": kind, "k": k, "fabric": fabric,
+        "bg": with_bg,
+        "makespan": res.makespan if res.completed else -1,
+        "completed": res.completed,
+    }

@@ -1,0 +1,28 @@
+"""Paper Figs. 11-12: interference with the background on its own VC set
+(fabric partitioning) vs shared VCs."""
+
+from benchmarks.common import STRATEGIES, emit, interference_makespan
+
+KERNELS = ["all_to_all", "stencil_von_neumann", "random_involution"]
+
+
+def run(quick=False):
+    kernels = KERNELS[:2] if quick else KERNELS
+    rows = []
+    for kind in kernels:
+        for strat in STRATEGIES:
+            shared = interference_makespan(strat, kind, fabric="shared")
+            sep = interference_makespan(strat, kind, fabric="background")
+            rows.append({
+                "kernel": kind, "strategy": strat,
+                "makespan_shared_vcs": shared["makespan"],
+                "makespan_bg_own_vcs": sep["makespan"],
+                "vc_isolation_gain": round(
+                    shared["makespan"] / max(sep["makespan"], 1), 3),
+            })
+    emit(rows, "fig11_fabric_partitioning (paper Figs. 11-12)")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

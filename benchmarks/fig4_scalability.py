@@ -1,0 +1,17 @@
+"""Paper Figure 4: endpoints supported per switch radix per topology."""
+
+from repro.core.scalability import scalability_table, paper_examples
+
+from benchmarks.common import emit
+
+
+def run(quick=False):
+    rows = scalability_table()
+    emit(rows, "fig4_scalability (paper Fig. 4)")
+    ex = paper_examples()
+    emit([ex], "fig4_paper_examples (Sec 2.3 exact claims)")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

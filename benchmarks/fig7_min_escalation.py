@@ -1,0 +1,19 @@
+"""Paper Figure 7: escalation under MIN routing, uniform + random
+permutation, 1..8 replicas of 64-rank apps."""
+
+from benchmarks.common import STRATEGIES, emit, escalation_makespan
+
+
+def run(quick=False):
+    loads = [1, 4, 8] if quick else [1, 2, 4, 6, 8]
+    rows = []
+    for kind in ("uniform", "random_permutation"):
+        for strat in STRATEGIES:
+            for r in loads:
+                rows.append(escalation_makespan(strat, kind, r, mode="min"))
+    emit(rows, "fig7_min_escalation (paper Fig. 7)")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,24 @@
+"""Paper Figure 8: static patterns under Omni-WAR with random-permutation
+background noise."""
+
+from benchmarks.common import STRATEGIES, emit, interference_makespan
+
+
+def run(quick=False):
+    rows = []
+    for kind in ("uniform", "random_switch_permutation"):
+        for strat in STRATEGIES:
+            iso = interference_makespan(strat, kind, with_bg=False)
+            bg = interference_makespan(strat, kind, with_bg=True)
+            rows.append({
+                "kernel": kind, "strategy": strat,
+                "makespan_isolated": iso["makespan"],
+                "makespan_bg": bg["makespan"],
+                "slowdown": round(bg["makespan"] / max(iso["makespan"], 1), 3),
+            })
+    emit(rows, "fig8_static_interference (paper Fig. 8)")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

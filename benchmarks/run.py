@@ -1,0 +1,45 @@
+"""Run every benchmark (one per paper table/figure + the roofline bench).
+
+    PYTHONPATH=src python -m benchmarks.run [--quick|--full]
+
+--quick trims replica counts / kernel sets (1-core CPU friendly); --full
+runs the complete paper grids.  Default: quick.
+"""
+
+import argparse
+import sys
+import time
+
+
+MODULES = [
+    "table1_properties",
+    "fig4_scalability",
+    "fig7_min_escalation",
+    "fig8_static_interference",
+    "table3_escalation",
+    "table4_interference",
+    "fig11_fabric_partitioning",
+    "collective_sim_bench",
+    "roofline_bench",
+]
+
+
+def main(argv=None):
+    p = argparse.ArgumentParser()
+    p.add_argument("--full", action="store_true")
+    p.add_argument("--only", default=None)
+    args = p.parse_args(argv)
+    quick = not args.full
+    mods = [m for m in MODULES if args.only is None or args.only in m]
+    t00 = time.time()
+    for name in mods:
+        mod = __import__(f"benchmarks.{name}", fromlist=["run"])
+        t0 = time.time()
+        mod.run(quick=quick)
+        print(f"# [{name}] {time.time()-t0:.1f}s\n")
+    print(f"# total {time.time()-t00:.1f}s")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

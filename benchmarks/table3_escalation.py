@@ -1,0 +1,43 @@
+"""Paper Fig. 9 / Table 3: kernel escalation under Omni-WAR, normalized to
+Diagonal (values > 1 mean faster than Diagonal, as in the paper)."""
+
+from benchmarks.common import STRATEGIES, emit, escalation_makespan
+
+KERNELS = ["all_to_all", "all_reduce", "stencil_von_neumann",
+           "stencil_moore", "random_involution"]
+
+
+def run(quick=False):
+    kernels = KERNELS[:3] if quick else KERNELS
+    loads = [4, 8] if quick else [1, 4, 8]  # 50% and 100% occupancy
+    raw = []
+    for kind in kernels:
+        for r in loads:
+            per = {}
+            for strat in STRATEGIES:
+                m = escalation_makespan(strat, kind, r)
+                per[strat] = m["makespan"]
+                raw.append(m)
+    emit(raw, "fig9_kernel_escalation_raw (paper Fig. 9)")
+    # normalized table (mean over kernels, per load)
+    rows = []
+    for r in loads:
+        sums = {s: [] for s in STRATEGIES}
+        for kind in kernels:
+            base = next(x["makespan"] for x in raw
+                        if x["strategy"] == "diagonal"
+                        and x["kernel"] == kind and x["replicas"] == r)
+            for s in STRATEGIES:
+                m = next(x["makespan"] for x in raw
+                         if x["strategy"] == s and x["kernel"] == kind
+                         and x["replicas"] == r)
+                sums[s].append(base / max(m, 1))
+        row = {"replicas": r, "occupancy": f"{r*64*100//512}%"}
+        row.update({s: round(sum(v) / len(v), 3) for s, v in sums.items()})
+        rows.append(row)
+    emit(rows, "table3_normalized_to_diagonal (paper Table 3)")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,38 @@
+"""Paper Fig. 10 / Table 4: per-kernel interference (random-permutation
+background), slowdown relative to Diagonal."""
+
+from benchmarks.common import STRATEGIES, emit, interference_makespan
+
+KERNELS = ["all_to_all", "all_reduce", "stencil_von_neumann",
+           "stencil_moore", "random_involution"]
+
+
+def run(quick=False):
+    kernels = KERNELS[:3] if quick else KERNELS
+    raw = []
+    for kind in kernels:
+        for strat in STRATEGIES:
+            iso = interference_makespan(strat, kind, with_bg=False)
+            bg = interference_makespan(strat, kind, with_bg=True)
+            raw.append({
+                "kernel": kind, "strategy": strat,
+                "iso": iso["makespan"], "bg": bg["makespan"],
+                "extra": bg["makespan"] - iso["makespan"],
+            })
+    emit(raw, "fig10_kernel_interference_raw (paper Fig. 10)")
+    rows = []
+    sums = {s: [] for s in STRATEGIES}
+    for kind in kernels:
+        base = next(x["bg"] for x in raw
+                    if x["strategy"] == "diagonal" and x["kernel"] == kind)
+        for s in STRATEGIES:
+            m = next(x["bg"] for x in raw
+                     if x["strategy"] == s and x["kernel"] == kind)
+            sums[s].append(base / max(m, 1))
+    rows.append({s: round(sum(v) / len(v), 3) for s, v in sums.items()})
+    emit(rows, "table4_interference_normalized (paper Table 4)")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

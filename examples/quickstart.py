@@ -1,0 +1,49 @@
+"""Quickstart: the paper's resource allocation machinery in 60 seconds.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import numpy as np
+
+from repro.core.hyperx import HyperX
+from repro.core.allocation import allocate_partition, machine_partitions
+from repro.core.properties import analyze_partition
+from repro.core import traffic as tr
+from repro.core.simulator import simulate
+from repro.fabric.placement import place_job
+from repro.fabric.collective_model import CollectiveModel
+
+
+def main():
+    # 1) the paper machine: 8x8 HyperX, 8 endpoints/switch
+    topo = HyperX(n=8, q=2)
+    print(f"machine: {topo} — {topo.num_endpoints} endpoints, "
+          f"{topo.num_links} links, diameter {topo.diameter}")
+
+    # 2) allocate one 64-rank job under two strategies and compare (Table 1)
+    for strat in ("row", "diagonal"):
+        part = allocate_partition(strat, topo, 0)
+        p = analyze_partition(topo, part)
+        print(f"{strat:10s} avg_dist={p.avg_distance:.3f} "
+              f"convex={p.convexity:13s} PB={p.partition_bandwidth:.2f}")
+
+    # 3) simulate an All-to-All on each allocation (the paper's evaluation)
+    for strat in ("row", "diagonal"):
+        parts = machine_partitions(strat, topo, num_jobs=8)
+        wl = tr.compose_workload(topo, [(tr.all_to_all(64), p) for p in parts])
+        res = simulate(topo, wl, mode="omniwar", horizon=40000)
+        print(f"{strat:10s} 8x all-to-all makespan = "
+              f"{res.makespan_cycles} cycles (avg hops {res.avg_hops:.2f})")
+
+    # 4) the framework side: place a 256-chip training mesh by strategy and
+    # price its collectives with the partition-bandwidth cost model
+    for strat in ("rectangular", "diagonal"):
+        placement = place_job(strat, (16, 16), ("data", "model"))
+        model = CollectiveModel(placement)
+        c = model.cost("all_reduce", "data", 64e6)
+        print(f"{strat:12s} data-axis PB={c.pb:5.2f} -> "
+              f"64MB grad all-reduce {c.total_s*1e3:.2f} ms")
+
+
+if __name__ == "__main__":
+    main()

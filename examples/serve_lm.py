@@ -1,0 +1,19 @@
+"""Serve a small LM with batched requests: prefill + jitted greedy decode.
+
+    PYTHONPATH=src python examples/serve_lm.py
+"""
+
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.launch import serve as S
+
+
+def main():
+    S.main(["--arch", "qwen3_0_6b", "--reduced",
+            "--batch", "4", "--prompt-len", "32", "--gen", "16"])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,146 @@
+"""Checkpoint/restart substrate (fault-tolerance deliverable).
+
+Layout per step:
+
+    <dir>/step_000123/
+        manifest.json      step, flat key list, shapes/dtypes, extra state
+        arrays.npz         flattened '/'-joined-path -> ndarray
+        _COMMITTED         written last: restore only sees complete saves
+
+Features: atomic commit marker, keep_n garbage collection, optional
+background-thread (async) save so the train loop never blocks on disk,
+extra-state dict (data-pipeline position, RNG, runtime info) carried in the
+manifest.  Arrays are gathered to host (fully replicated or addressable)
+— the multi-host generalization shards the npz per process, noted in
+DESIGN.md.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+
+import jax
+import numpy as np
+
+
+def _flatten(tree, prefix=""):
+    out = {}
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            out.update(_flatten(v, f"{prefix}{k}/"))
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            out.update(_flatten(v, f"{prefix}{i}/"))
+        if hasattr(tree, "_fields"):  # NamedTuple
+            pass
+    else:
+        out[prefix[:-1]] = tree
+    return out
+
+
+def _tree_like(template, flat, prefix=""):
+    if isinstance(template, dict):
+        return {k: _tree_like(v, flat, f"{prefix}{k}/") for k, v in template.items()}
+    if isinstance(template, tuple) and hasattr(template, "_fields"):
+        vals = [
+            _tree_like(v, flat, f"{prefix}{i}/") for i, v in enumerate(template)
+        ]
+        return type(template)(*vals)
+    if isinstance(template, (list, tuple)):
+        vals = [
+            _tree_like(v, flat, f"{prefix}{i}/") for i, v in enumerate(template)
+        ]
+        return type(template)(vals)
+    return flat[prefix[:-1]]
+
+
+class Checkpointer:
+    def __init__(self, directory: str, keep_n: int = 3, async_save: bool = False):
+        self.dir = directory
+        self.keep_n = keep_n
+        self.async_save = async_save
+        self._thread: threading.Thread | None = None
+        os.makedirs(directory, exist_ok=True)
+
+    # ------------------------------------------------------------- save
+    def save(self, step: int, tree, extra: dict | None = None):
+        flat = _flatten(tree)
+        host = {k: np.asarray(jax.device_get(v)) for k, v in flat.items()}
+        if self.async_save:
+            self.wait()
+            self._thread = threading.Thread(
+                target=self._write, args=(step, host, extra or {}), daemon=True
+            )
+            self._thread.start()
+        else:
+            self._write(step, host, extra or {})
+
+    def _write(self, step: int, host: dict, extra: dict):
+        path = self._path(step)
+        tmp = path + ".tmp"
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+        np.savez(os.path.join(tmp, "arrays.npz"), **host)
+        manifest = {
+            "step": step,
+            "time": time.time(),
+            "keys": sorted(host),
+            "shapes": {k: list(v.shape) for k, v in host.items()},
+            "dtypes": {k: str(v.dtype) for k, v in host.items()},
+            "extra": extra,
+        }
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        open(os.path.join(tmp, "_COMMITTED"), "w").close()
+        if os.path.exists(path):
+            shutil.rmtree(path)
+        os.rename(tmp, path)
+        self._gc()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    # ---------------------------------------------------------- restore
+    def latest_step(self) -> int | None:
+        steps = []
+        for d in os.listdir(self.dir):
+            if d.startswith("step_") and os.path.exists(
+                os.path.join(self.dir, d, "_COMMITTED")
+            ):
+                steps.append(int(d.split("_")[1]))
+        return max(steps) if steps else None
+
+    def restore(self, template, step: int | None = None):
+        """Restore into the structure of ``template``; returns (tree, extra)."""
+        self.wait()
+        if step is None:
+            step = self.latest_step()
+            if step is None:
+                raise FileNotFoundError(f"no committed checkpoints in {self.dir}")
+        path = self._path(step)
+        with open(os.path.join(path, "manifest.json")) as f:
+            manifest = json.load(f)
+        with np.load(os.path.join(path, "arrays.npz")) as z:
+            flat = {k: z[k] for k in z.files}
+        tree = _tree_like(template, flat)
+        return tree, manifest["extra"]
+
+    # --------------------------------------------------------------- gc
+    def _path(self, step: int) -> str:
+        return os.path.join(self.dir, f"step_{step:09d}")
+
+    def _gc(self):
+        steps = sorted(
+            int(d.split("_")[1])
+            for d in os.listdir(self.dir)
+            if d.startswith("step_") and not d.endswith(".tmp")
+        )
+        for s in steps[: -self.keep_n]:
+            shutil.rmtree(self._path(s), ignore_errors=True)

@@ -1,0 +1,37 @@
+"""Architecture registry: one module per assigned architecture.
+
+``get_config(name)`` returns the full published config; ``get_config(name,
+reduced=True)`` returns the family-preserving smoke-test reduction (small
+depth/width/experts, tiny vocab) used by CPU tests.  The full configs are
+exercised only through the dry-run (ShapeDtypeStruct, no allocation).
+"""
+
+from __future__ import annotations
+
+import importlib
+
+ARCHS = [
+    "deepseek_67b",
+    "qwen3_0_6b",
+    "internlm2_1_8b",
+    "olmo_1b",
+    "mamba2_1_3b",
+    "hubert_xlarge",
+    "deepseek_v2_236b",
+    "qwen3_moe_30b_a3b",
+    "llama_3_2_vision_90b",
+    "recurrentgemma_9b",
+]
+
+# CLI ids (--arch) use dashes, module names use underscores
+def _norm(name: str) -> str:
+    return name.replace("-", "_").replace(".", "_")
+
+
+def get_config(name: str, reduced: bool = False):
+    mod = importlib.import_module(f"repro.configs.{_norm(name)}")
+    return mod.reduced() if reduced else mod.config()
+
+
+def all_configs(reduced: bool = False):
+    return {a: get_config(a, reduced) for a in ARCHS}

@@ -1,0 +1,21 @@
+"""deepseek-67b [dense]: 95L d_model=8192 64H (GQA kv=8) d_ff=22016
+vocab=102400 — llama-arch [arXiv:2401.02954]."""
+
+import dataclasses
+
+from repro.models.config import ArchConfig
+
+
+def config() -> ArchConfig:
+    return ArchConfig(
+        name="deepseek-67b", family="dense",
+        n_layers=95, d_model=8192, n_heads=64, n_kv=8,
+        d_ff=22016, vocab=102400,
+    )
+
+
+def reduced() -> ArchConfig:
+    return dataclasses.replace(
+        config(), n_layers=2, d_model=64, n_heads=4, n_kv=2, d_head=16,
+        d_ff=128, vocab=256,
+    )

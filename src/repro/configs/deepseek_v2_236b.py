@@ -1,0 +1,25 @@
+"""deepseek-v2-236b [moe]: 60L d_model=5120 128H d_ff(expert)=1536
+vocab=102400, MLA kv_lora=512, 2 shared + 160 routed experts top-6
+[arXiv:2405.04434]."""
+
+import dataclasses
+
+from repro.models.config import ArchConfig
+
+
+def config() -> ArchConfig:
+    return ArchConfig(
+        name="deepseek-v2-236b", family="moe",
+        n_layers=60, d_model=5120, n_heads=128, n_kv=128, d_head=128,
+        d_ff=12288, vocab=102400,
+        n_experts=160, top_k=6, n_shared=2, d_ff_expert=1536,
+        kv_lora=512, q_lora=1536, rope_head_dim=64,
+    )
+
+
+def reduced() -> ArchConfig:
+    return dataclasses.replace(
+        config(), n_layers=2, d_model=64, n_heads=4, n_kv=4, d_head=16,
+        d_ff=128, vocab=256, n_experts=8, top_k=2, n_shared=1,
+        d_ff_expert=32, kv_lora=32, q_lora=48, rope_head_dim=8,
+    )

@@ -1,0 +1,22 @@
+"""hubert-xlarge [audio]: 48L d_model=1280 16H (MHA) d_ff=5120 vocab=504
+— encoder-only; the CNN waveform frontend is a STUB (precomputed frame
+embeddings per the assignment) [arXiv:2106.07447]."""
+
+import dataclasses
+
+from repro.models.config import ArchConfig
+
+
+def config() -> ArchConfig:
+    return ArchConfig(
+        name="hubert-xlarge", family="audio",
+        n_layers=48, d_model=1280, n_heads=16, n_kv=16,
+        d_ff=5120, vocab=504, encoder_only=True, frame_input=True,
+    )
+
+
+def reduced() -> ArchConfig:
+    return dataclasses.replace(
+        config(), n_layers=2, d_model=64, n_heads=4, n_kv=4, d_head=16,
+        d_ff=128, vocab=32,
+    )

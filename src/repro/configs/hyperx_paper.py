@@ -1,0 +1,30 @@
+"""The paper's own experimental machine: 8x8 HyperX, 8 endpoints/switch,
+512 endpoints, Omni-WAR routing, partitions of 64 (Table 2 / Sec. 6.2)."""
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class PaperConfig:
+    n: int = 8
+    q: int = 2
+    concentration: int = 8
+    packet_flits: int = 16
+    input_buffer_pkts: int = 8
+    output_buffer_pkts: int = 4
+    vcs_per_port: int = 4
+    deroute_penalty_phits: int = 64
+    max_deroutes: int = 2          # m = q
+    app_sizes: tuple = (64, 128, 256)
+    strategies: tuple = (
+        "row", "diagonal", "full_spread", "rectangular", "l_shape",
+        "random_endpoint", "random_switch",
+    )
+
+
+def config() -> PaperConfig:
+    return PaperConfig()
+
+
+def reduced() -> PaperConfig:
+    return dataclasses.replace(config(), n=4, concentration=4)

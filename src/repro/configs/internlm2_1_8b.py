@@ -1,0 +1,21 @@
+"""internlm2-1.8b [dense]: 24L d_model=2048 16H (GQA kv=8) d_ff=8192
+vocab=92544 — GQA [arXiv:2403.17297]."""
+
+import dataclasses
+
+from repro.models.config import ArchConfig
+
+
+def config() -> ArchConfig:
+    return ArchConfig(
+        name="internlm2-1.8b", family="dense",
+        n_layers=24, d_model=2048, n_heads=16, n_kv=8,
+        d_ff=8192, vocab=92544,
+    )
+
+
+def reduced() -> ArchConfig:
+    return dataclasses.replace(
+        config(), n_layers=2, d_model=64, n_heads=4, n_kv=2, d_head=16,
+        d_ff=128, vocab=256,
+    )

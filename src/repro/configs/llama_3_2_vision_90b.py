@@ -1,0 +1,24 @@
+"""llama-3.2-vision-90b [vlm]: 100L d_model=8192 64H (GQA kv=8)
+d_ff=28672 vocab=128256 — gated cross-attention image layers 1:4 with the
+vision patch frontend STUBBED (precomputed patch embeddings)
+[hf:meta-llama/Llama-3.2-90B-Vision]."""
+
+import dataclasses
+
+from repro.models.config import ArchConfig
+
+
+def config() -> ArchConfig:
+    return ArchConfig(
+        name="llama-3.2-vision-90b", family="vlm",
+        n_layers=100, d_model=8192, n_heads=64, n_kv=8,
+        d_ff=28672, vocab=128256,
+        cross_attn_every=4, frontend_tokens=1601,
+    )
+
+
+def reduced() -> ArchConfig:
+    return dataclasses.replace(
+        config(), n_layers=5, d_model=64, n_heads=4, n_kv=2, d_head=16,
+        d_ff=128, vocab=256, cross_attn_every=4, frontend_tokens=16,
+    )

@@ -1,0 +1,23 @@
+"""mamba2-1.3b [ssm]: 48L d_model=2048 attention-free, vocab=50280,
+ssm_state=128 — SSD state-space duality [arXiv:2405.21060]."""
+
+import dataclasses
+
+from repro.models.config import ArchConfig
+
+
+def config() -> ArchConfig:
+    return ArchConfig(
+        name="mamba2-1.3b", family="ssm",
+        n_layers=48, d_model=2048, n_heads=1, n_kv=1, d_head=64,
+        d_ff=0, vocab=50280,
+        ssm_state=128, ssm_expand=2, ssm_head_dim=64, ssm_chunk=256,
+        tie_embeddings=True,
+    )
+
+
+def reduced() -> ArchConfig:
+    return dataclasses.replace(
+        config(), n_layers=2, d_model=64, vocab=256,
+        ssm_state=16, ssm_head_dim=16, ssm_chunk=8,
+    )

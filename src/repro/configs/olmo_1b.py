@@ -1,0 +1,21 @@
+"""olmo-1b [dense]: 16L d_model=2048 16H (kv=16, MHA) d_ff=8192
+vocab=50304 — non-parametric LN [arXiv:2402.00838]."""
+
+import dataclasses
+
+from repro.models.config import ArchConfig
+
+
+def config() -> ArchConfig:
+    return ArchConfig(
+        name="olmo-1b", family="dense",
+        n_layers=16, d_model=2048, n_heads=16, n_kv=16,
+        d_ff=8192, vocab=50304, nonparam_ln=True, tie_embeddings=True,
+    )
+
+
+def reduced() -> ArchConfig:
+    return dataclasses.replace(
+        config(), n_layers=2, d_model=64, n_heads=4, n_kv=4, d_head=16,
+        d_ff=128, vocab=256,
+    )

@@ -1,0 +1,22 @@
+"""qwen3-moe-30b-a3b [moe]: 48L d_model=2048 32H (GQA kv=4)
+d_ff(expert)=768 vocab=151936, 128 experts top-8 [hf:Qwen/Qwen3-30B-A3B]."""
+
+import dataclasses
+
+from repro.models.config import ArchConfig
+
+
+def config() -> ArchConfig:
+    return ArchConfig(
+        name="qwen3-moe-30b-a3b", family="moe",
+        n_layers=48, d_model=2048, n_heads=32, n_kv=4, d_head=128,
+        d_ff=6144, vocab=151936, qk_norm=True,
+        n_experts=128, top_k=8, n_shared=0, d_ff_expert=768,
+    )
+
+
+def reduced() -> ArchConfig:
+    return dataclasses.replace(
+        config(), n_layers=2, d_model=64, n_heads=4, n_kv=2, d_head=16,
+        d_ff=128, vocab=256, n_experts=8, top_k=2, d_ff_expert=32,
+    )

@@ -1,0 +1,23 @@
+"""recurrentgemma-9b [hybrid]: 38L d_model=4096 16H (MQA kv=1) d_ff=12288
+vocab=256000 — RG-LRU + local attention, pattern 2 recurrent : 1 attention,
+window 2048 [arXiv:2402.19427]."""
+
+import dataclasses
+
+from repro.models.config import ArchConfig
+
+
+def config() -> ArchConfig:
+    return ArchConfig(
+        name="recurrentgemma-9b", family="hybrid",
+        n_layers=38, d_model=4096, n_heads=16, n_kv=1, d_head=256,
+        d_ff=12288, vocab=256000,
+        rglru_pattern=2, window=2048, lru_width=4096,
+    )
+
+
+def reduced() -> ArchConfig:
+    return dataclasses.replace(
+        config(), n_layers=8, d_model=64, n_heads=4, n_kv=1, d_head=16,
+        d_ff=128, vocab=256, window=16, lru_width=64,
+    )

@@ -1,0 +1,320 @@
+"""Resource allocation functions for HyperX networks (paper Section 4).
+
+Each allocation function maps the logical coordinates of a job's rank onto
+physical topology coordinates:
+
+    f(p, r_y, r_x) = (s_y, s_x, c)
+
+where ``p`` is the partition identifier, ``r = n*r_y + r_x`` is the linear
+rank inside the partition, ``(s_y, s_x)`` the physical switch and ``c`` the
+endpoint offset within the switch.  On an n x n HyperX with concentration n,
+the machine supports exactly n disjoint partitions of n**2 endpoints each.
+
+Implemented strategies (names follow the paper):
+
+  linear:     row, diagonal, full_spread
+  tiled:      rectangular, l_shape
+  stochastic: random_endpoint, random_switch
+
+Jobs larger than n**2 take the union of consecutive base blocks (paper
+Section 6.2: "a partition consists on the union of consecutive blocks").
+
+All ``map_block`` implementations are vectorized over numpy int arrays so the
+simulator, the property analysis and the fabric placement layer can evaluate
+them for thousands of ranks at once.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Tuple
+
+import numpy as np
+
+from repro.core.hyperx import HyperX
+
+Triplet = Tuple[np.ndarray, np.ndarray, np.ndarray]
+
+
+# --------------------------------------------------------------------------
+# Strategy definitions
+# --------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class AllocationStrategy:
+    """A named allocation function plus its static properties (paper Table 1)."""
+
+    name: str
+    kind: str  # 'linear' | 'tiling' | 'random'
+    locality_aware: bool
+    convexity: str  # 'convex' | 'weakly-convex' | 'non-convex'
+    # map_block(p, r_y, r_x, n, rng) -> (s_y, s_x, c); vectorized over arrays.
+    map_block: Callable[[np.ndarray, np.ndarray, np.ndarray, int, np.random.Generator], Triplet]
+    needs_rng: bool = False
+
+    def __call__(self, p, r_y, r_x, n, rng=None):
+        p = np.asarray(p, dtype=np.int64)
+        r_y = np.asarray(r_y, dtype=np.int64)
+        r_x = np.asarray(r_x, dtype=np.int64)
+        if self.needs_rng and rng is None:
+            rng = np.random.default_rng(0)
+        return self.map_block(p, r_y, r_x, n, rng)
+
+
+def _row(p, r_y, r_x, n, rng):
+    # row(p, r_y, r_x) = (p, r_y, r_x): all endpoints in row p.
+    return p % n, r_y % n, r_x % n
+
+
+def _full_spread(p, r_y, r_x, n, rng):
+    # full_spread(p, r_y, r_x) = (r_y, r_x, p): one endpoint on EVERY switch.
+    return r_y % n, r_x % n, p % n
+
+
+def _diagonal(p, r_y, r_x, n, rng):
+    # diagonal(p, r_y, r_x) = (r_y, (r_y + p) mod n, r_x): one switch per
+    # row/column -- maximal distance, maximal partition bandwidth among
+    # locality-aware strategies.
+    return r_y % n, (r_y + p) % n, r_x % n
+
+
+def _rectangular(p, r_y, r_x, n, rng):
+    # Paper formula (Sec. 4.2):
+    #   (rem(r_y,2) + n/2*rem(p,2), quo(r_y,2) + 2*quo(p,2), r_x)
+    # As printed this yields OVERLAPPING rectangles (p=0 covers rows {0,1} x
+    # cols {0..3}, p=2 covers rows {0,1} x cols {2..5}), contradicting the
+    # paper's own claim of n non-overlapping partitions.  Swapping the two
+    # offset terms gives the intended disjoint sqrt(n/2) x sqrt(2n) tiling
+    # (2 rows x 4 cols for n=8); erratum recorded in DESIGN.md.
+    if n % 2:
+        raise ValueError("rectangular tessellation requires even n")
+    s_y = (r_y % 2) + 2 * (p // 2)
+    s_x = (r_y // 2) + (n // 2) * (p % 2)
+    return s_y % n, s_x % n, r_x % n
+
+
+def _l_shape(p, r_y, r_x, n, rng):
+    # Piecewise: a vertical ray anchored at (p, p) plus a horizontal ray.
+    #   (p + r_y, p, r_x)                       for r_y <  n//2
+    #   (p, p + r_y - n//2 + 1, r_x)            otherwise
+    # Modular arithmetic applies to switch coordinates.
+    half = n // 2
+    vert = r_y < half
+    s_y = np.where(vert, (p + r_y) % n, p % n)
+    s_x = np.where(vert, p % n, (p + r_y - half + 1) % n)
+    return s_y, s_x, r_x % n
+
+
+def _perm_from_rng(rng: np.random.Generator, size: int) -> np.ndarray:
+    return rng.permutation(size)
+
+
+def _random_endpoint(p, r_y, r_x, n, rng):
+    # pi is a random permutation of the n**3 endpoint triplets; the linear
+    # rank index maps straight into the permuted space.
+    pi = _perm_from_rng(rng, n**3)
+    lin = (p * n * n + r_y * n + r_x) % (n**3)
+    tgt = pi[lin]
+    c = tgt % n
+    s_x = (tgt // n) % n
+    s_y = tgt // (n * n)
+    return s_y, s_x, c
+
+
+def _random_switch(p, r_y, r_x, n, rng):
+    # sigma is a random permutation of the n**2 switches; r_y selects the
+    # switch, r_x the endpoint offset -> switch locality preserved.
+    sigma = _perm_from_rng(rng, n * n)
+    lin = (p * n + r_y) % (n * n)
+    tgt = sigma[lin]
+    return tgt // n, tgt % n, r_x % n
+
+
+ALLOCATIONS: Dict[str, AllocationStrategy] = {
+    s.name: s
+    for s in [
+        AllocationStrategy("row", "linear", True, "convex", _row),
+        AllocationStrategy("diagonal", "linear", True, "non-convex", _diagonal),
+        AllocationStrategy("full_spread", "linear", False, "convex", _full_spread),
+        AllocationStrategy("rectangular", "tiling", True, "convex", _rectangular),
+        AllocationStrategy("l_shape", "tiling", True, "weakly-convex", _l_shape),
+        AllocationStrategy(
+            "random_endpoint", "random", False, "non-convex", _random_endpoint, True
+        ),
+        AllocationStrategy(
+            "random_switch", "random", True, "non-convex", _random_switch, True
+        ),
+    ]
+}
+
+
+def get_strategy(name: str) -> AllocationStrategy:
+    try:
+        return ALLOCATIONS[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown allocation strategy {name!r}; available: {sorted(ALLOCATIONS)}"
+        ) from None
+
+
+# --------------------------------------------------------------------------
+# Partition construction
+# --------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class Partition:
+    """A concrete set of endpoints allocated to one job."""
+
+    strategy: str
+    topo: HyperX
+    job_id: int
+    size: int  # endpoints
+    endpoints: np.ndarray  # (size,) linear endpoint ids, rank order
+    switches: np.ndarray  # sorted unique switch ids touched
+
+    @property
+    def rank_to_endpoint(self) -> np.ndarray:
+        return self.endpoints
+
+    def endpoint_to_rank(self) -> Dict[int, int]:
+        return {int(e): r for r, e in enumerate(self.endpoints)}
+
+
+def allocate_partition(
+    strategy: str | AllocationStrategy,
+    topo: HyperX,
+    job_id: int,
+    size: int | None = None,
+    seed: int = 0,
+) -> Partition:
+    """Allocate ``size`` endpoints (default n**2) for job ``job_id``.
+
+    Jobs of k*n**2 endpoints take base blocks p = job_id*k .. job_id*k + k-1
+    (consecutive blocks, paper Section 6.2).  Sizes that are not multiples of
+    n**2 take a prefix of the final block.  The random permutations are keyed
+    by ``seed`` only (machine-wide), so different jobs on one machine draw
+    from the same permutation and stay disjoint.
+    """
+    strat = get_strategy(strategy) if isinstance(strategy, str) else strategy
+    n = topo.n
+    block = n * n
+    if size is None:
+        size = block
+    if size <= 0 or size > topo.num_endpoints:
+        raise ValueError(f"partition size {size} out of range")
+    k = -(-size // block)  # blocks needed (ceil)
+    first_block = job_id * k
+    ranks = np.arange(size, dtype=np.int64)
+    blk = first_block + ranks // block  # base partition id per rank
+    r_in = ranks % block
+    r_y = r_in // n
+    r_x = r_in % n
+    rng = np.random.default_rng(seed) if strat.needs_rng else None
+    s_y, s_x, c = strat(blk, r_y, r_x, n, rng)
+    endpoints = (s_y * n + s_x) * topo.concentration + c
+    switches = np.unique(s_y * n + s_x)
+    return Partition(
+        strategy=strat.name,
+        topo=topo,
+        job_id=job_id,
+        size=size,
+        endpoints=endpoints.astype(np.int64),
+        switches=switches.astype(np.int64),
+    )
+
+
+def machine_partitions(
+    strategy: str | AllocationStrategy,
+    topo: HyperX,
+    num_jobs: int,
+    job_size: int | None = None,
+    seed: int = 0,
+) -> list[Partition]:
+    """All ``num_jobs`` disjoint partitions on one machine instance."""
+    return [
+        allocate_partition(strategy, topo, j, job_size, seed) for j in range(num_jobs)
+    ]
+
+
+def endpoint_owner(partitions: list[Partition], num_endpoints: int) -> np.ndarray:
+    """(num_endpoints,) array: partition index owning each endpoint, -1 if free.
+
+    Raises if two partitions claim the same endpoint (allocation bug).
+    """
+    owner = np.full(num_endpoints, -1, dtype=np.int64)
+    for i, part in enumerate(partitions):
+        if (owner[part.endpoints] != -1).any():
+            clash = part.endpoints[owner[part.endpoints] != -1]
+            raise ValueError(
+                f"partition overlap: job {i} ({part.strategy}) claims endpoints "
+                f"{clash[:8].tolist()} already owned"
+            )
+        owner[part.endpoints] = i
+    return owner
+
+
+# --------------------------------------------------------------------------
+# Incremental job allocator (SLURM-like resource manager facade)
+# --------------------------------------------------------------------------
+class JobAllocator:
+    """Incremental resource manager over one HyperX machine.
+
+    Tracks free endpoints; serves jobs by trying the requested strategy's
+    next free base block(s).  This is the layer the training launcher and the
+    elastic runtime talk to.
+    """
+
+    def __init__(self, topo: HyperX, strategy: str = "diagonal", seed: int = 0):
+        self.topo = topo
+        self.strategy = get_strategy(strategy)
+        self.seed = seed
+        self.free = np.ones(topo.num_endpoints, dtype=bool)
+        self.failed = np.zeros(topo.num_endpoints, dtype=bool)
+        self.jobs: Dict[int, Partition] = {}
+        self._next_job = 0
+
+    def capacity(self) -> int:
+        return int(self.free.sum())
+
+    def allocate(self, size: int | None = None, strategy: str | None = None) -> Partition:
+        strat = get_strategy(strategy) if strategy else self.strategy
+        n = self.topo.n
+        block = n * n
+        size = size or block
+        k = -(-size // block)
+        max_jobs = self.topo.num_endpoints // (k * block)
+        for slot in range(max_jobs):
+            part = allocate_partition(strat, self.topo, slot, size, self.seed)
+            if self.free[part.endpoints].all():
+                part = dataclasses.replace(part, job_id=self._next_job)
+                self.free[part.endpoints] = False
+                self.jobs[self._next_job] = part
+                self._next_job += 1
+                return part
+        raise RuntimeError(
+            f"no free {strat.name} partition of size {size} "
+            f"(free endpoints: {self.capacity()})"
+        )
+
+    def release(self, job_id: int) -> None:
+        part = self.jobs.pop(job_id)
+        # failed endpoints stay out of the pool until repaired
+        self.free[part.endpoints] = ~self.failed[part.endpoints]
+
+    def fail_endpoints(self, endpoints: np.ndarray) -> list[int]:
+        """Mark endpoints as failed (not free); return affected job ids."""
+        endpoints = np.asarray(endpoints, dtype=np.int64)
+        affected = []
+        for jid, part in self.jobs.items():
+            if np.intersect1d(part.endpoints, endpoints).size:
+                affected.append(jid)
+        self.failed[endpoints] = True
+        self.free[endpoints] = False
+        return affected
+
+    def repair_endpoints(self, endpoints: np.ndarray) -> None:
+        """Return repaired endpoints to the free pool (maintenance done)."""
+        endpoints = np.asarray(endpoints, dtype=np.int64)
+        self.failed[endpoints] = False
+        owned = np.zeros_like(self.free)
+        for part in self.jobs.values():
+            owned[part.endpoints] = True
+        self.free[endpoints] = ~owned[endpoints]

@@ -1,0 +1,210 @@
+"""HyperX (Hamming graph) topology model.
+
+A symmetric qD HyperX organizes n**q switches on a q-dimensional grid of side
+n; two switches are linked iff their addresses differ in exactly one
+coordinate (Hamming distance 1).  Each switch hosts ``concentration``
+endpoints (a well-balanced HyperX uses concentration == n), giving
+n**(q+1) endpoints total for the well-balanced case.
+
+Endpoints are addressed as (switch coordinates..., local offset c); linear
+endpoint ids enumerate offsets fastest, i.e. for 2D:
+
+    endpoint_id = (s_y * n + s_x) * concentration + c
+
+All distance / link math follows Section 2 of the paper:
+  * diameter = q
+  * average switch distance (self-pairs included) = q - q/n
+  * total switch-to-switch links = q * (n - 1) * n**q / 2
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Iterator, Sequence, Tuple
+
+import numpy as np
+
+Coord = Tuple[int, ...]
+
+
+@dataclasses.dataclass(frozen=True)
+class HyperX:
+    """A symmetric qD HyperX of side ``n`` with ``concentration`` endpoints/switch."""
+
+    n: int
+    q: int = 2
+    concentration: int | None = None  # defaults to n (well-balanced)
+
+    def __post_init__(self):
+        if self.n < 2:
+            raise ValueError(f"HyperX side must be >= 2, got n={self.n}")
+        if self.q < 1:
+            raise ValueError(f"HyperX dimension must be >= 1, got q={self.q}")
+        if self.concentration is None:
+            object.__setattr__(self, "concentration", self.n)
+
+    # ------------------------------------------------------------------ sizes
+    @property
+    def num_switches(self) -> int:
+        return self.n**self.q
+
+    @property
+    def num_endpoints(self) -> int:
+        return self.num_switches * self.concentration
+
+    @property
+    def num_links(self) -> int:
+        """Switch-to-switch bidirectional links (cables)."""
+        return self.q * (self.n - 1) * self.num_switches // 2
+
+    @property
+    def diameter(self) -> int:
+        return self.q
+
+    @property
+    def switch_radix(self) -> int:
+        """Ports per switch: network ports + endpoint (local) ports."""
+        return self.q * (self.n - 1) + self.concentration
+
+    def average_switch_distance(self, include_self: bool = True) -> float:
+        """Average Hamming distance over ordered switch pairs.
+
+        With self-pairs included (the paper's convention) this is q - q/n.
+        """
+        if include_self:
+            return self.q - self.q / self.n
+        # Excluding self pairs: E[d] * N^2 / (N^2 - N)
+        ns = self.num_switches
+        return (self.q - self.q / self.n) * ns / (ns - 1)
+
+    def wires_per_endpoint(self) -> float:
+        """Raw cost: network cables per endpoint computer (-> q/2 from below)."""
+        return self.q * (self.n - 1) / (2 * self.concentration)
+
+    # ------------------------------------------------------- coordinate logic
+    def switch_coords(self, s: int) -> Coord:
+        """Decompose linear switch id into q coordinates, slowest dim first.
+
+        For q=2 the result is (s_y, s_x) with s = s_y*n + s_x.
+        """
+        if not 0 <= s < self.num_switches:
+            raise ValueError(f"switch id {s} out of range for {self}")
+        coords = []
+        for _ in range(self.q):
+            coords.append(s % self.n)
+            s //= self.n
+        return tuple(reversed(coords))
+
+    def switch_id(self, coords: Sequence[int]) -> int:
+        if len(coords) != self.q:
+            raise ValueError(f"expected {self.q} coordinates, got {coords}")
+        s = 0
+        for c in coords:
+            if not 0 <= c < self.n:
+                raise ValueError(f"coordinate {c} out of range [0,{self.n})")
+            s = s * self.n + c
+        return s
+
+    def endpoint_id(self, coords: Sequence[int], c: int) -> int:
+        if not 0 <= c < self.concentration:
+            raise ValueError(f"endpoint offset {c} out of range")
+        return self.switch_id(coords) * self.concentration + c
+
+    def endpoint_switch(self, e: int) -> int:
+        return e // self.concentration
+
+    def endpoint_offset(self, e: int) -> int:
+        return e % self.concentration
+
+    # --------------------------------------------------------------- distance
+    def distance(self, a: int, b: int) -> int:
+        """Hamming (graph) distance between two switch ids."""
+        ca, cb = self.switch_coords(a), self.switch_coords(b)
+        return sum(x != y for x, y in zip(ca, cb))
+
+    def endpoint_distance(self, e1: int, e2: int) -> int:
+        return self.distance(self.endpoint_switch(e1), self.endpoint_switch(e2))
+
+    def all_switch_coords(self) -> np.ndarray:
+        """(num_switches, q) int array of coordinates, slowest dim first."""
+        grids = np.meshgrid(
+            *[np.arange(self.n)] * self.q, indexing="ij"
+        )
+        return np.stack([g.ravel() for g in grids], axis=-1)
+
+    def distance_matrix(self) -> np.ndarray:
+        """(S, S) Hamming distance matrix over switches (vectorized)."""
+        coords = self.all_switch_coords()  # (S, q)
+        return (coords[:, None, :] != coords[None, :, :]).sum(axis=-1)
+
+    # ------------------------------------------------------------------ links
+    def links(self) -> Iterator[Tuple[int, int]]:
+        """Yield each undirected switch link once as (low_id, high_id)."""
+        for s in range(self.num_switches):
+            coords = self.switch_coords(s)
+            for dim in range(self.q):
+                for v in range(coords[dim] + 1, self.n):
+                    other = list(coords)
+                    other[dim] = v
+                    yield (s, self.switch_id(other))
+
+    def link_array(self) -> np.ndarray:
+        """(L, 2) array of undirected links."""
+        return np.array(list(self.links()), dtype=np.int64)
+
+    def neighbors(self, s: int) -> list[int]:
+        coords = self.switch_coords(s)
+        out = []
+        for dim in range(self.q):
+            for v in range(self.n):
+                if v != coords[dim]:
+                    other = list(coords)
+                    other[dim] = v
+                    out.append(self.switch_id(other))
+        return out
+
+    def link_index(self) -> dict[Tuple[int, int], int]:
+        """Map each *directed* (src, dst) switch pair at distance 1 to a dense id.
+
+        Directed links: 2 * num_links entries.  Used by routing/link-load code.
+        """
+        idx = {}
+        for a, b in self.links():
+            idx[(a, b)] = len(idx)
+            idx[(b, a)] = len(idx)
+        return idx
+
+    # ------------------------------------------------------------- directions
+    def unaligned_dims(self, src: int, dst: int) -> list[int]:
+        cs, cd = self.switch_coords(src), self.switch_coords(dst)
+        return [i for i in range(self.q) if cs[i] != cd[i]]
+
+    def move(self, s: int, dim: int, value: int) -> int:
+        coords = list(self.switch_coords(s))
+        coords[dim] = value
+        return self.switch_id(coords)
+
+    def minimal_paths(self, src: int, dst: int) -> list[list[int]]:
+        """All minimal switch paths src -> dst (each a list of switch ids)."""
+        dims = self.unaligned_dims(src, dst)
+        cd = self.switch_coords(dst)
+        paths = []
+        for order in itertools.permutations(dims):
+            cur, path = src, [src]
+            for dim in order:
+                cur = self.move(cur, dim, cd[dim])
+                path.append(cur)
+            paths.append(path)
+        # dedupe (permutations of equal dims can't collide here, but be safe)
+        uniq = []
+        seen = set()
+        for p in paths:
+            t = tuple(p)
+            if t not in seen:
+                seen.add(t)
+                uniq.append(p)
+        return uniq
+
+    def __repr__(self) -> str:  # keep dataclass repr short in logs
+        return f"HyperX(n={self.n}, q={self.q}, c={self.concentration})"

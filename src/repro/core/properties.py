@@ -1,0 +1,248 @@
+"""Topological properties of HyperX partitions (paper Section 5).
+
+Implements, for an arbitrary set of allocated endpoints:
+
+  * average / maximum intra-partition distance (paper Eq. 2, self-pairs
+    included by convention),
+  * convexity / weak convexity (Definition 2),
+  * switch locality (Definition 3),
+  * convex hull links (Definition 4),
+  * partition bandwidth PB (Eq. 3), including the per-dimension refinement
+    the paper applies to the Rectangular tessellation.
+
+Everything is vectorized numpy over the (at most n**q) switches involved.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable
+
+import numpy as np
+
+from repro.core.allocation import Partition
+from repro.core.hyperx import HyperX
+
+
+# --------------------------------------------------------------------------
+# Distances
+# --------------------------------------------------------------------------
+def endpoint_distance_stats(topo: HyperX, endpoints: np.ndarray) -> tuple[float, int]:
+    """(average, maximum) distance over ordered endpoint pairs incl. self.
+
+    This is Eq. (2): D_P = (1/|P|^2) * sum_{e1,e2} d(e1,e2).  (The paper
+    writes 1/|P| but normalizes by the pair count in all derived values;
+    we use the pair count so Row gives exactly 1 - 1/n.)
+    """
+    endpoints = np.asarray(endpoints)
+    switches = endpoints // topo.concentration
+    coords = np.stack([np.array(topo.switch_coords(int(s))) for s in np.unique(switches)])
+    uniq, counts = np.unique(switches, return_counts=True)
+    # pairwise switch distances weighted by endpoint multiplicity
+    dmat = (coords[:, None, :] != coords[None, :, :]).sum(-1)
+    w = counts.astype(np.float64)
+    total = (w[:, None] * w[None, :] * dmat).sum()
+    avg = total / (len(endpoints) ** 2)
+    dmax = int(dmat.max()) if len(uniq) > 1 else 0
+    return float(avg), dmax
+
+
+def per_dimension_distance(topo: HyperX, endpoints: np.ndarray) -> np.ndarray:
+    """(q,) average hop count per dimension over ordered endpoint pairs."""
+    endpoints = np.asarray(endpoints)
+    switches = endpoints // topo.concentration
+    uniq, counts = np.unique(switches, return_counts=True)
+    coords = np.stack([np.array(topo.switch_coords(int(s))) for s in uniq])
+    w = counts.astype(np.float64)
+    out = np.zeros(topo.q)
+    for d in range(topo.q):
+        diff = (coords[:, None, d] != coords[None, :, d]).astype(np.float64)
+        out[d] = (w[:, None] * w[None, :] * diff).sum() / (len(endpoints) ** 2)
+    return out
+
+
+# --------------------------------------------------------------------------
+# Convexity
+# --------------------------------------------------------------------------
+def interval_vertices(topo: HyperX, u: int, v: int) -> list[int]:
+    """All switches on some minimal path u -> v (the Hamming 'interval')."""
+    cu, cv = topo.switch_coords(u), topo.switch_coords(v)
+    verts = [()]
+    for a, b in zip(cu, cv):
+        choices = (a,) if a == b else (a, b)
+        verts = [t + (c,) for t in verts for c in choices]
+    return [topo.switch_id(t) for t in verts]
+
+
+def is_convex(topo: HyperX, switches: Iterable[int]) -> bool:
+    """True iff every minimal path between members stays inside the set."""
+    sset = set(int(s) for s in switches)
+    slist = sorted(sset)
+    for i, u in enumerate(slist):
+        for v in slist[i + 1 :]:
+            if not all(w in sset for w in interval_vertices(topo, u, v)):
+                return False
+    return True
+
+
+def is_weakly_convex(topo: HyperX, switches: Iterable[int]) -> bool:
+    """True iff at least one minimal path between members stays inside."""
+    sset = set(int(s) for s in switches)
+    slist = sorted(sset)
+    for i, u in enumerate(slist):
+        for v in slist[i + 1 :]:
+            if not _reachable_minimally(topo, u, v, sset):
+                return False
+    return True
+
+
+def _reachable_minimally(topo: HyperX, u: int, v: int, allowed: set[int]) -> bool:
+    """BFS from u to v using only minimal-path moves inside ``allowed``."""
+    target = topo.switch_coords(v)
+    frontier = {u}
+    dist = topo.distance(u, v)
+    for _ in range(dist):
+        nxt = set()
+        for s in frontier:
+            cs = topo.switch_coords(s)
+            for dim in range(topo.q):
+                if cs[dim] != target[dim]:
+                    cand = topo.move(s, dim, target[dim])
+                    if cand in allowed:
+                        nxt.add(cand)
+        if not nxt:
+            return False
+        frontier = nxt
+    return v in frontier
+
+
+def convexity_class(topo: HyperX, switches: Iterable[int]) -> str:
+    if is_convex(topo, switches):
+        return "convex"
+    if is_weakly_convex(topo, switches):
+        return "weakly-convex"
+    return "non-convex"
+
+
+def has_switch_locality(topo: HyperX, endpoints: np.ndarray) -> bool:
+    """Definition 3: every touched switch contributes ALL its endpoints."""
+    endpoints = np.asarray(endpoints)
+    switches = endpoints // topo.concentration
+    uniq, counts = np.unique(switches, return_counts=True)
+    return bool((counts == topo.concentration).all())
+
+
+# --------------------------------------------------------------------------
+# Convex hull and partition bandwidth
+# --------------------------------------------------------------------------
+def convex_hull_links(topo: HyperX, switches: Iterable[int]) -> np.ndarray:
+    """(L, 2) undirected links on some shortest path between members (Def. 4)."""
+    slist = np.array(sorted(set(int(s) for s in switches)), dtype=np.int64)
+    if len(slist) == 0:
+        return np.zeros((0, 2), dtype=np.int64)
+    links = topo.link_array()  # (L, 2)
+    dmat = topo.distance_matrix()  # (S, S)
+    a, b = links[:, 0], links[:, 1]
+    # link (a,b) on a shortest u->v path iff d(u,a)+1+d(b,v) == d(u,v)
+    # (checked in both directions since links are undirected)
+    du_a = dmat[np.ix_(slist, a)]  # (P, L)
+    du_b = dmat[np.ix_(slist, b)]
+    duv = dmat[np.ix_(slist, slist)]  # (P, P)
+    on_path = np.zeros(len(links), dtype=bool)
+    # forward direction u -> a -> b -> v
+    fwd = du_a[:, None, :] + 1 + du_b[None, :, :] == duv[:, :, None].transpose(1, 0, 2)
+    bwd = du_b[:, None, :] + 1 + du_a[None, :, :] == duv[:, :, None].transpose(1, 0, 2)
+    on_path = (fwd | bwd).any(axis=(0, 1))
+    return links[on_path]
+
+
+def link_dimension(topo: HyperX, links: np.ndarray) -> np.ndarray:
+    """(L,) which dimension each link belongs to."""
+    dims = np.empty(len(links), dtype=np.int64)
+    for i, (a, b) in enumerate(links):
+        ca, cb = topo.switch_coords(int(a)), topo.switch_coords(int(b))
+        dims[i] = next(d for d in range(topo.q) if ca[d] != cb[d])
+    return dims
+
+
+@dataclasses.dataclass(frozen=True)
+class PartitionProperties:
+    """Bundle of everything Table 1 reports, for one concrete partition."""
+
+    strategy: str
+    avg_distance: float
+    max_distance: int
+    convexity: str
+    switch_locality: bool
+    hull_links: int
+    partition_bandwidth: float  # per-dimension refined (phits/cycle/endpoint)
+    partition_bandwidth_bound: float  # aggregate upper bound, Eq. (3)
+
+
+def partition_bandwidth(
+    topo: HyperX, endpoints: np.ndarray, per_dimension: bool = True
+) -> tuple[float, float]:
+    """(refined PB, aggregate Eq.3 bound) for a set of endpoints.
+
+    Aggregate bound: PB <= 2L / (|P| * D_P).  The refined value applies the
+    same bound per dimension (links of that dimension vs hops in that
+    dimension) and takes the minimum, catching anisotropic partitions such
+    as the Rectangular tessellation where the short dimension saturates
+    first (paper Sec. 5.3).
+    """
+    endpoints = np.asarray(endpoints)
+    switches = np.unique(endpoints // topo.concentration)
+    hull = convex_hull_links(topo, switches)
+    avg, _ = endpoint_distance_stats(topo, endpoints)
+    if avg == 0:
+        return float("inf"), float("inf")
+    bound = 2.0 * len(hull) / (len(endpoints) * avg)
+    if not per_dimension:
+        return bound, bound
+    dims = link_dimension(topo, hull)
+    dim_dist = per_dimension_distance(topo, endpoints)
+    vals = []
+    for d in range(topo.q):
+        if dim_dist[d] > 0:
+            l_d = int((dims == d).sum())
+            vals.append(2.0 * l_d / (len(endpoints) * dim_dist[d]))
+    refined = min(vals) if vals else float("inf")
+    return float(min(refined, bound)), float(bound)
+
+
+def analyze_partition(topo: HyperX, part: Partition) -> PartitionProperties:
+    avg, dmax = endpoint_distance_stats(topo, part.endpoints)
+    pb, pb_bound = partition_bandwidth(topo, part.endpoints)
+    hull = convex_hull_links(topo, part.switches)
+    return PartitionProperties(
+        strategy=part.strategy,
+        avg_distance=avg,
+        max_distance=dmax,
+        convexity=convexity_class(topo, part.switches),
+        switch_locality=has_switch_locality(topo, part.endpoints),
+        hull_links=len(hull),
+        partition_bandwidth=pb,
+        partition_bandwidth_bound=pb_bound,
+    )
+
+
+# --------------------------------------------------------------------------
+# Dilation of an application embedding (Definition 1)
+# --------------------------------------------------------------------------
+def dilation(
+    topo: HyperX,
+    app_edges: np.ndarray,
+    rank_to_endpoint: np.ndarray,
+) -> tuple[float, int]:
+    """(average, maximum) dilation of application edges under an embedding.
+
+    ``app_edges``: (E, 2) rank pairs; ``rank_to_endpoint``: (R,) endpoint ids.
+    """
+    app_edges = np.asarray(app_edges)
+    if len(app_edges) == 0:
+        return 0.0, 0
+    e1 = rank_to_endpoint[app_edges[:, 0]] // topo.concentration
+    e2 = rank_to_endpoint[app_edges[:, 1]] // topo.concentration
+    coords = topo.all_switch_coords()
+    d = (coords[e1] != coords[e2]).sum(-1)
+    return float(d.mean()), int(d.max())

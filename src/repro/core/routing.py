@@ -1,0 +1,192 @@
+"""Routing models for HyperX (paper Section 2.2).
+
+Two layers:
+
+  * Path-set enumeration for MIN (all minimal paths, split evenly) and an
+    idealized Valiant-within-set non-minimal scheme, feeding the analytical
+    link-load / throughput model in ``analytical.py``.
+  * Candidate-port logic shared with the cycle-level simulator: from a
+    (current switch, destination switch) pair, the set of legal Omni-WAR
+    output ports (minimal hop per unaligned dimension plus deroutes while
+    the non-minimal hop budget m lasts; m = q by default).
+
+Omni-WAR reference: McDonald et al., SC'19.  The same route set underlies
+DAL (Ahn et al., SC'09).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.hyperx import HyperX
+
+
+# --------------------------------------------------------------------------
+# Directed-link indexing shared by analytical model and simulator
+# --------------------------------------------------------------------------
+class LinkSpace:
+    """Dense ids for directed switch-to-switch links of a HyperX.
+
+    A directed link is (src_switch, dim, target_coord) with
+    target_coord != src_coord[dim].  Dense id layout:
+
+        link_id = (src * q + dim) * n + target_coord
+
+    ids where target_coord == src_coord[dim] are *invalid* (self loops) and
+    never used; keeping the dense layout makes id computation branch-free
+    inside jit.  Total id space = S * q * n.
+    """
+
+    def __init__(self, topo: HyperX):
+        self.topo = topo
+        self.n, self.q = topo.n, topo.q
+        self.num_ids = topo.num_switches * topo.q * topo.n
+        coords = topo.all_switch_coords()  # (S, q)
+        self.switch_coords = coords
+        # dst switch id for every (src, dim, val)
+        s = np.arange(topo.num_switches)
+        self.dst_switch = np.empty((topo.num_switches, topo.q, topo.n), dtype=np.int64)
+        for dim in range(topo.q):
+            for v in range(topo.n):
+                nc = coords.copy()
+                nc[:, dim] = v
+                ids = np.zeros(topo.num_switches, dtype=np.int64)
+                for d2 in range(topo.q):
+                    ids = ids * topo.n + nc[:, d2]
+                self.dst_switch[:, dim, v] = ids
+        self.valid = np.ones((topo.num_switches, topo.q, topo.n), dtype=bool)
+        for dim in range(topo.q):
+            self.valid[s, dim, coords[:, dim]] = False
+
+    def link_id(self, src: np.ndarray, dim: np.ndarray, val: np.ndarray) -> np.ndarray:
+        return (np.asarray(src) * self.q + np.asarray(dim)) * self.n + np.asarray(val)
+
+    def decode(self, link_id: np.ndarray):
+        val = link_id % self.n
+        dim = (link_id // self.n) % self.q
+        src = link_id // (self.n * self.q)
+        return src, dim, val
+
+
+# --------------------------------------------------------------------------
+# Analytical link loads
+# --------------------------------------------------------------------------
+def minimal_link_loads(topo: HyperX, traffic: np.ndarray) -> np.ndarray:
+    """Per-directed-link load under MIN routing with even path splitting.
+
+    ``traffic``: (S, S) switch-level rate matrix (phits/cycle aggregated over
+    the endpoints of each switch).  Returns a dense (S*q*n,) load vector in
+    LinkSpace ids.  Minimal paths correct one unaligned dimension per hop in
+    any order; with even splitting over dimension orders, the flow crossing
+    dimension d between u and v is carried on the single link fixing d, from
+    a switch whose other unaligned coords are a mix of u's and v's.  For
+    q=2 this is exact and cheap; implemented for general q by enumerating
+    dimension orders (q! small: q <= 4 in practice).
+    """
+    import itertools
+
+    ls = LinkSpace(topo)
+    load = np.zeros(ls.num_ids)
+    S = topo.num_switches
+    coords = ls.switch_coords
+    nz = np.argwhere(traffic > 0)
+    for u, v in nz:
+        rate = traffic[u, v]
+        if u == v:
+            continue
+        dims = [d for d in range(topo.q) if coords[u, d] != coords[v, d]]
+        orders = list(itertools.permutations(dims))
+        share = rate / len(orders)
+        for order in orders:
+            cur = u
+            for d in order:
+                lid = ls.link_id(cur, d, coords[v, d])
+                load[lid] += share
+                cur = ls.dst_switch[cur, d, coords[v, d]]
+    return load
+
+
+def saturation_throughput(topo: HyperX, traffic: np.ndarray) -> float:
+    """Max per-unit scaling factor before some link exceeds 1 phit/cycle.
+
+    ``traffic`` is normalized so each endpoint injects 1 phit/cycle; the
+    result is therefore the accepted rate per endpoint at saturation -- the
+    quantity the paper's PB metric bounds.
+    """
+    load = minimal_link_loads(topo, traffic)
+    peak = load.max()
+    return float("inf") if peak == 0 else 1.0 / float(peak)
+
+
+def uniform_partition_traffic(topo: HyperX, endpoints: np.ndarray) -> np.ndarray:
+    """(S, S) switch rate matrix for uniform traffic inside a partition.
+
+    Each endpoint injects 1 phit/cycle to uniformly random members of the
+    partition (self included, the paper's convention).
+    """
+    S = topo.num_switches
+    endpoints = np.asarray(endpoints)
+    switches = endpoints // topo.concentration
+    uniq, counts = np.unique(switches, return_counts=True)
+    m = len(endpoints)
+    t = np.zeros((S, S))
+    # endpoint at switch i sends count_j / m of its rate to switch j
+    for i, ci in zip(uniq, counts):
+        for j, cj in zip(uniq, counts):
+            t[i, j] += ci * cj / m
+    return t
+
+
+def empirical_partition_bandwidth(topo: HyperX, endpoints: np.ndarray) -> float:
+    """Saturation throughput of uniform-in-partition traffic under MIN.
+
+    This is the *measured* counterpart of the PB metric: for the symmetric
+    partitions the paper analyzes, it matches Eq. (3) exactly.
+    """
+    t = uniform_partition_traffic(topo, endpoints)
+    return saturation_throughput(topo, t)
+
+
+# --------------------------------------------------------------------------
+# Omni-WAR candidate ports (shared with the simulator)
+# --------------------------------------------------------------------------
+def candidate_ports(
+    ls: LinkSpace,
+    cur: np.ndarray,
+    dst: np.ndarray,
+    deroutes_left: np.ndarray,
+    mode: str = "omniwar",
+):
+    """Vectorized legal output ports for packets at ``cur`` heading to ``dst``.
+
+    Returns (link_ids, is_minimal, valid) with shape (N, q*n): for each
+    packet, every (dim, val) port; ``valid`` marks ports that are legal under
+    the routing mode:
+
+      * a port is considered only in *unaligned* dimensions (Omni-WAR rule);
+      * the minimal port of an unaligned dimension is val == dst[dim];
+      * deroute ports (val != cur[dim], dst[dim]) are legal while the packet
+        has non-minimal budget left; under ``mode == 'min'`` never.
+    """
+    n, q = ls.n, ls.q
+    cur = np.asarray(cur)
+    dst = np.asarray(dst)
+    N = cur.shape[0]
+    cur_c = ls.switch_coords[cur]  # (N, q)
+    dst_c = ls.switch_coords[dst]
+    dims = np.arange(q)[None, :, None]  # (1, q, 1)
+    vals = np.arange(n)[None, None, :]  # (1, 1, n)
+    unaligned = (cur_c != dst_c)[:, :, None]  # (N, q, 1)
+    is_min = (vals == dst_c[:, :, None]) & unaligned
+    not_self = vals != cur_c[:, :, None]
+    if mode == "min":
+        valid = is_min
+    else:
+        can_deroute = (deroutes_left > 0)[:, None, None]
+        valid = unaligned & not_self & (is_min | can_deroute)
+    lid = (cur[:, None, None] * q + dims) * n + vals
+    return (
+        lid.reshape(N, q * n),
+        is_min.reshape(N, q * n),
+        valid.reshape(N, q * n),
+    )

@@ -1,0 +1,91 @@
+"""Topology scalability math (paper Section 2.3 / Figure 4).
+
+Endpoint counts supported by each topology family as a function of switch
+radix, for the well-balanced / canonical configurations the paper compares:
+
+  * 2D / 3D HyperX (concentration n, q(n-1) network ports)
+  * 2- / 3-level Fat-trees
+  * canonical balanced Dragonfly (a = 2h, p = h), with optional trunking t
+"""
+
+from __future__ import annotations
+
+import math
+
+
+def hyperx_side_for_radix(radix: int, q: int) -> int:
+    """Largest well-balanced side n with n + q(n-1) <= radix."""
+    # n + q(n-1) <= r  ->  n <= (r + q) / (q + 1)
+    return max(2, (radix + q) // (q + 1))
+
+
+def hyperx_endpoints(radix: int, q: int) -> int:
+    n = hyperx_side_for_radix(radix, q)
+    return n ** (q + 1)
+
+
+def hyperx_cables_per_endpoint(radix: int, q: int) -> float:
+    n = hyperx_side_for_radix(radix, q)
+    return q * (n - 1) / (2 * n)
+
+
+def fat_tree_endpoints(radix: int, levels: int) -> int:
+    """Full bisection k-ary fat-tree: r^levels / 2^(levels-1)."""
+    return radix**levels // (2 ** (levels - 1))
+
+
+def dragonfly_h_for_radix(radix: int) -> int:
+    """Balanced Dragonfly (p = h, a = 2h): radix = p + (a-1) + h = 4h - 1."""
+    return max(1, (radix + 1) // 4)
+
+
+def dragonfly_endpoints(radix: int, trunking: int = 1) -> int:
+    """Endpoints of a balanced Dragonfly; trunking t divides global links."""
+    h = dragonfly_h_for_radix(radix)
+    a, p = 2 * h, h
+    groups = (a * h) // trunking + 1
+    return groups * a * p
+
+
+def dragonfly_cables_per_endpoint(radix: int, trunking: int = 1) -> float:
+    h = dragonfly_h_for_radix(radix)
+    a, p = 2 * h, h
+    groups = (a * h) // trunking + 1
+    local = groups * a * (a - 1) / 2
+    global_ = groups * a * h / 2
+    return (local + global_) / (groups * a * p)
+
+
+def scalability_table(radices=(16, 24, 32, 48, 64, 96, 128)) -> list[dict]:
+    """One row per radix with endpoint counts per topology (Figure 4)."""
+    rows = []
+    for r in radices:
+        rows.append(
+            {
+                "radix": r,
+                "hyperx_2d": hyperx_endpoints(r, 2),
+                "hyperx_3d": hyperx_endpoints(r, 3),
+                "fat_tree_2l": fat_tree_endpoints(r, 2),
+                "fat_tree_3l": fat_tree_endpoints(r, 3),
+                "dragonfly": dragonfly_endpoints(r),
+                "dragonfly_t4": dragonfly_endpoints(r, trunking=4),
+            }
+        )
+    return rows
+
+
+def paper_examples() -> dict:
+    """The concrete scalability claims from Section 2.3, for validation."""
+    return {
+        # radix 64: 2-level fat tree 2048 endpoints vs 22x22 HyperX 10648
+        "ft2_r64": fat_tree_endpoints(64, 2),
+        "hx2_r64_side": hyperx_side_for_radix(64, 2),
+        "hx2_r64": hyperx_endpoints(64, 2),
+        # radix 128: ft 8192 vs 43x43 HyperX 79507
+        "ft2_r128": fat_tree_endpoints(128, 2),
+        "hx2_r128_side": hyperx_side_for_radix(128, 2),
+        "hx2_r128": hyperx_endpoints(128, 2),
+        # 3D HyperX 16x16x16 with radix-64 switches: 4096 switches, 65536 endpoints
+        "hx3_r64_side": hyperx_side_for_radix(64, 3),
+        "hx3_r64": hyperx_endpoints(64, 3),
+    }

@@ -1,0 +1,3 @@
+from repro.fabric.placement import HyperXPlacement, make_placed_mesh  # noqa: F401
+from repro.fabric.collective_model import CollectiveModel  # noqa: F401
+from repro.fabric.collective_sim import compare_strategies_simulated  # noqa: F401

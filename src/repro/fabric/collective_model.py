@@ -1,0 +1,178 @@
+"""Collective cost model on HyperX under an allocation-aware placement.
+
+Prices the collectives a JAX program issues (all-reduce, all-gather,
+reduce-scatter, all-to-all, collective-permute) over the mesh axes of a
+:class:`~repro.fabric.placement.HyperXPlacement`, using the paper's
+machinery:
+
+  * **bandwidth term** — a collective over a mesh-axis group moves
+    ``wire_bytes(kind, size, k)`` per chip.  The group's sustainable
+    per-chip injection bandwidth on the fabric is ``min(1, PB(group))``
+    of the chip link bandwidth, where PB is the paper's partition
+    bandwidth (Sec. 5.3) computed for that group's endpoint set.  Groups
+    placed by high-PB strategies (Diagonal, Full Spread) price cheaper
+    than Row/Rectangular groups — this is Lesson 2 as a cost model.
+  * **latency term** — ``steps(kind, k) x (avg_group_distance x hop_ns +
+    fixed_ns)``, the dilation bound of Sec. 5.1.
+
+The model serves three framework roles: (1) the roofline's
+allocation-aware collective term; (2) the launcher's placement search
+(pick the strategy that minimizes the priced collective schedule of a
+step); (3) regression tests that the paper's Table-1 ordering carries
+through to end-to-end collective pricing.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import numpy as np
+
+from repro.fabric.placement import HyperXPlacement
+
+
+# TPU-v5e-class constants (per chip); see EXPERIMENTS.md §Roofline.
+DEFAULT_LINK_GBPS = 50e9      # per ICI link, one direction
+DEFAULT_HOP_NS = 500.0        # per-hop switch+wire latency
+DEFAULT_FIXED_NS = 2000.0     # collective software launch overhead
+
+
+def wire_bytes_per_chip(kind: str, bytes_per_chip: float, k: int) -> float:
+    """Bytes each chip must move over the fabric for one collective.
+
+    ``bytes_per_chip`` is the shard size living on each chip (the operand
+    size divided over participants where applicable); ``k`` the group size.
+    Ring-algorithm conventions (what XLA emits on TPU meshes):
+
+      all_reduce      : 2 * (k-1)/k * payload   (reduce-scatter + all-gather)
+      all_gather      : (k-1)/k * k * shard = (k-1) * shard
+      reduce_scatter  : (k-1)/k * payload
+      all_to_all      : (k-1)/k * payload
+      collective_permute : payload
+    """
+    if k <= 1:
+        return 0.0
+    if kind == "all_reduce":
+        return 2.0 * (k - 1) / k * bytes_per_chip
+    if kind == "all_gather":
+        return (k - 1) * bytes_per_chip
+    if kind == "reduce_scatter":
+        return (k - 1) / k * bytes_per_chip
+    if kind == "all_to_all":
+        return (k - 1) / k * bytes_per_chip
+    if kind == "collective_permute":
+        return bytes_per_chip
+    raise ValueError(f"unknown collective kind {kind!r}")
+
+
+def steps(kind: str, k: int) -> int:
+    if k <= 1:
+        return 0
+    if kind in ("all_reduce",):
+        return 2 * (k - 1)
+    if kind in ("all_gather", "reduce_scatter", "all_to_all"):
+        return k - 1
+    return 1  # collective_permute
+
+
+@dataclasses.dataclass(frozen=True)
+class CollectiveCost:
+    kind: str
+    axis: str
+    group_size: int
+    wire_bytes: float
+    pb: float                 # group partition bandwidth (paper metric)
+    bandwidth_s: float        # bandwidth term, seconds
+    latency_s: float          # latency (dilation) term, seconds
+
+    @property
+    def total_s(self) -> float:
+        return max(self.bandwidth_s, 0.0) + self.latency_s
+
+
+class CollectiveModel:
+    """Price collectives over the axes of one placement."""
+
+    def __init__(
+        self,
+        placement: HyperXPlacement,
+        link_bw: float = DEFAULT_LINK_GBPS,
+        hop_ns: float = DEFAULT_HOP_NS,
+        fixed_ns: float = DEFAULT_FIXED_NS,
+    ):
+        self.placement = placement
+        self.link_bw = link_bw
+        self.hop_ns = hop_ns
+        self.fixed_ns = fixed_ns
+        self._axis_props = {
+            a: placement.axis_properties(a) for a in placement.axis_names
+        }
+
+    def axis_pb(self, axis: str) -> float:
+        return self._axis_props[axis]["pb_min"]
+
+    def axis_distance(self, axis: str) -> float:
+        return self._axis_props[axis]["avg_distance"]
+
+    def cost(self, kind: str, axis: str, bytes_per_chip: float) -> CollectiveCost:
+        props = self._axis_props[axis]
+        k = props["group_size"]
+        wb = wire_bytes_per_chip(kind, bytes_per_chip, k)
+        pb = props["pb_min"]
+        eff_bw = min(1.0, pb) * self.link_bw
+        bw_s = wb / eff_bw if wb else 0.0
+        lat_s = steps(kind, k) * (
+            props["avg_distance"] * self.hop_ns + self.fixed_ns
+        ) * 1e-9
+        return CollectiveCost(
+            kind=kind, axis=axis, group_size=k, wire_bytes=wb, pb=pb,
+            bandwidth_s=bw_s, latency_s=lat_s,
+        )
+
+    def price_schedule(
+        self, schedule: Sequence[tuple[str, str, float]]
+    ) -> dict:
+        """Total priced time of a list of (kind, axis, bytes_per_chip).
+
+        Returns the per-collective breakdown plus serial total — the
+        allocation-aware collective roofline term.
+        """
+        items = [self.cost(*entry) for entry in schedule]
+        return {
+            "strategy": self.placement.strategy,
+            "items": items,
+            "total_s": float(sum(c.total_s for c in items)),
+            "bandwidth_s": float(sum(c.bandwidth_s for c in items)),
+            "latency_s": float(sum(c.latency_s for c in items)),
+        }
+
+
+def rank_strategies_for_schedule(
+    mesh_shape: Sequence[int],
+    axis_names: Sequence[str],
+    schedule: Sequence[tuple[str, str, float]],
+    strategies: Sequence[str] = (
+        "row", "diagonal", "full_spread", "rectangular", "l_shape",
+        "random_endpoint", "random_switch",
+    ),
+    seed: int = 0,
+) -> list[dict]:
+    """Price one collective schedule under every allocation strategy.
+
+    The launcher uses this to pick the placement for a job's communication
+    profile; ties broken toward locality-aware strategies (Lesson 3).
+    """
+    from repro.fabric.placement import place_job
+
+    out = []
+    for strat in strategies:
+        placement = place_job(strat, mesh_shape, axis_names, seed=seed)
+        model = CollectiveModel(placement)
+        priced = model.price_schedule(schedule)
+        priced["locality_aware"] = all(
+            placement.axis_properties(a)["group_size"] > 0 for a in axis_names
+        )
+        out.append(priced)
+    out.sort(key=lambda d: d["total_s"])
+    return out

@@ -1,0 +1,100 @@
+"""Simulate mesh collectives on the HyperX fabric — cost-model validation.
+
+The CollectiveModel (collective_model.py) *prices* collectives analytically
+from partition bandwidth.  This module grounds that price: it expresses a
+mesh-axis collective as a step-table workload (ring all-reduce = the
+paper's neighbour-exchange; all-to-all = the paper's All-to-All kernel)
+over the placement's actual endpoints, runs it through the cycle-level
+simulator, and returns measured makespans.  Benchmarks compare analytic
+vs simulated ordering across allocation strategies — closing the loop
+between the paper's simulator evidence and the framework's launcher
+policy.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import traffic as tr
+from repro.core.allocation import Partition
+from repro.core.hyperx import HyperX
+from repro.core.simulator import build_simulator
+from repro.fabric.placement import HyperXPlacement
+
+
+def _ring_allreduce_app(k: int, packets_per_step: int = 4) -> tr.AppTraffic:
+    """Ring reduce-scatter + all-gather: 2(k-1) steps of neighbour sends."""
+    T = 2 * (k - 1)
+    dst, npk, deg, recv = tr._empty(k, T, 1)
+    r = np.arange(k)
+    for t in range(T):
+        dst[:, t, 0] = (r + 1) % k
+        npk[:, t, 0] = packets_per_step
+        deg[:, t] = 1
+        recv[:, t] = packets_per_step
+    return tr.AppTraffic("ring_allreduce", k, dst, npk, deg, recv, window=1)
+
+
+def _alltoall_app(k: int) -> tr.AppTraffic:
+    return tr.all_to_all(k)
+
+
+def simulate_axis_collective(
+    placement: HyperXPlacement,
+    axis: str,
+    kind: str = "all_reduce",
+    num_groups: int | None = None,
+    seed: int = 0,
+    horizon: int = 120_000,
+) -> dict:
+    """Run ``kind`` concurrently over (a subset of) the axis groups.
+
+    All groups run simultaneously — exactly how a mesh collective executes —
+    so inter-group link contention is captured, which is what
+    distinguishes allocation strategies (the paper's Lesson 2/3).
+    """
+    topo: HyperX = placement.topo
+    groups = placement.axis_groups(axis)
+    if num_groups is not None:
+        groups = groups[:num_groups]
+    k = groups.shape[1]
+    app_fn = {"all_reduce": _ring_allreduce_app, "all_to_all": _alltoall_app}[kind]
+    apps = []
+    for g in groups:
+        part = Partition(
+            strategy=placement.strategy, topo=topo, job_id=-1, size=k,
+            endpoints=np.asarray(g, dtype=np.int64),
+            switches=np.unique(np.asarray(g) // topo.concentration),
+        )
+        apps.append((app_fn(k), part))
+    wl = tr.compose_workload(topo, apps)
+    res = build_simulator(topo, wl, mode="omniwar", horizon=horizon)(seed)
+    return {
+        "strategy": placement.strategy, "axis": axis, "kind": kind,
+        "groups": len(groups), "group_size": k,
+        "makespan": res.makespan if res.completed else -1,
+        "completed": res.completed,
+        "avg_hops": round(res.avg_hops, 3),
+    }
+
+
+def compare_strategies_simulated(
+    mesh_shape=(16, 16),
+    axis_names=("data", "model"),
+    axis: str = "model",
+    kind: str = "all_to_all",
+    strategies=("row", "diagonal", "full_spread", "rectangular",
+                "l_shape", "random_endpoint", "random_switch"),
+    num_groups: int | None = 8,
+    seed: int = 0,
+) -> list[dict]:
+    """Measured makespan of one mesh collective per allocation strategy."""
+    from repro.fabric.placement import place_job
+
+    out = []
+    for strat in strategies:
+        placement = place_job(strat, mesh_shape, axis_names, seed=seed)
+        out.append(simulate_axis_collective(placement, axis, kind,
+                                            num_groups=num_groups, seed=seed))
+    out.sort(key=lambda d: d["makespan"] if d["makespan"] > 0 else 10**9)
+    return out

@@ -1,0 +1,174 @@
+"""Allocation-aware device placement: the paper's functions as mesh policy.
+
+This is the bridge between the paper (resource allocation on a HyperX
+machine) and the JAX runtime.  The fleet model: TPU-class chips are the
+*endpoints* of a 2D HyperX fabric — the paper's canonical 8x8 HyperX with
+concentration 8 hosts 512 chips, i.e. exactly the 2-pod production machine
+(2 x 256).  A training job asks the resource allocator for a partition; the
+allocation strategy decides *which* physical endpoints host the job, and
+therefore how much fabric bandwidth (the paper's PB metric) every mesh-axis
+collective can draw on.
+
+``HyperXPlacement`` materializes one job placement:
+
+  * ``mesh_position -> endpoint``: logical device (i_pod, i_data, i_model)
+    to a physical HyperX endpoint, through an allocation function.  The
+    fastest-varying mesh axis (``model``) walks consecutive ranks of the
+    partition, so TP groups land where the allocation function puts
+    consecutive ranks (e.g. for Diagonal: one switch per TP group).
+  * ``device_order``: a permutation of ``jax.devices()`` realizing that
+    mapping, handed to ``jax.sharding.Mesh``.  On real hardware the device
+    list order is the physical order; in the CPU dry-run the permutation is
+    structural but exercises identical sharding machinery.
+
+The elastic runtime re-runs the allocation on the surviving endpoint set
+after failures (see repro.runtime), making the paper's functions the repair
+policy as well as the launch policy.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Sequence
+
+import numpy as np
+
+from repro.core.allocation import allocate_partition, get_strategy
+from repro.core.hyperx import HyperX
+from repro.core.properties import endpoint_distance_stats, partition_bandwidth
+
+
+def default_fleet(num_chips: int) -> HyperX:
+    """Smallest well-balanced even-side 2D HyperX that can host the job.
+
+    A 512-chip job (the 2-pod production mesh) fills the paper's canonical
+    8x8 machine exactly; a 256-chip single pod occupies half of it (4 of
+    its 8 base partitions).  Even side keeps every allocation strategy
+    (incl. the rectangular tessellation) applicable.
+    """
+    if num_chips < 1:
+        raise ValueError(f"bad fleet size {num_chips}")
+    n = 4
+    while n**3 < num_chips:
+        n += 2
+    return HyperX(n=n, q=2)
+
+
+@dataclasses.dataclass(frozen=True)
+class HyperXPlacement:
+    """A job's physical placement on the HyperX fleet."""
+
+    topo: HyperX
+    strategy: str
+    mesh_shape: tuple[int, ...]
+    axis_names: tuple[str, ...]
+    endpoints: np.ndarray  # mesh_shape-shaped array of endpoint ids
+
+    @property
+    def num_devices(self) -> int:
+        return int(np.prod(self.mesh_shape))
+
+    def axis_groups(self, axis: str) -> np.ndarray:
+        """(num_groups, group_size) endpoint ids of each group of ``axis``.
+
+        A collective over mesh axis ``axis`` runs independently inside each
+        group: all mesh positions that differ only along ``axis``.
+        """
+        i = self.axis_names.index(axis)
+        e = np.moveaxis(self.endpoints, i, -1)
+        return e.reshape(-1, self.mesh_shape[i])
+
+    def axis_properties(self, axis: str) -> dict:
+        """Distance / PB statistics of the groups of one mesh axis."""
+        groups = self.axis_groups(axis)
+        pbs, avgs, maxs = [], [], []
+        for g in groups:
+            avg, mx = endpoint_distance_stats(self.topo, g)
+            pb, _ = partition_bandwidth(self.topo, g)
+            pbs.append(pb)
+            avgs.append(avg)
+            maxs.append(mx)
+        return {
+            "axis": axis,
+            "groups": len(groups),
+            "group_size": groups.shape[1],
+            "pb_min": float(np.min(pbs)),
+            "pb_mean": float(np.mean(pbs)),
+            "avg_distance": float(np.mean(avgs)),
+            "max_distance": int(np.max(maxs)),
+        }
+
+    def device_order(self) -> np.ndarray:
+        """Permutation p with p[flat_mesh_position] = device index.
+
+        Device index == endpoint id rank order: we adopt the convention that
+        ``jax.devices()[i]`` is cabled to endpoint ``sorted(endpoints)[i]``
+        of the job's partition.  On a real fleet this permutation is what the
+        launcher feeds to ``jax.sharding.Mesh``.
+        """
+        flat = self.endpoints.reshape(-1)
+        order = np.argsort(np.argsort(flat))
+        return order
+
+
+def place_job(
+    strategy: str,
+    mesh_shape: Sequence[int],
+    axis_names: Sequence[str],
+    topo: HyperX | None = None,
+    job_id: int = 0,
+    seed: int = 0,
+) -> HyperXPlacement:
+    """Allocate a partition for a mesh-shaped job and lay mesh axes on it.
+
+    The linear rank order of the partition is assigned to mesh positions in
+    row-major order, so the LAST mesh axis (by convention ``model``, the
+    most communication-intensive) maps to consecutive ranks — i.e. to
+    whatever locality structure the allocation strategy gives consecutive
+    ranks (same switch for locality-aware strategies with n | group size).
+    """
+    mesh_shape = tuple(int(s) for s in mesh_shape)
+    axis_names = tuple(axis_names)
+    size = int(np.prod(mesh_shape))
+    if topo is None:
+        topo = default_fleet(size)
+    part = allocate_partition(strategy, topo, job_id, size=size, seed=seed)
+    endpoints = part.endpoints.reshape(mesh_shape)
+    return HyperXPlacement(
+        topo=topo,
+        strategy=get_strategy(strategy).name,
+        mesh_shape=mesh_shape,
+        axis_names=axis_names,
+        endpoints=endpoints,
+    )
+
+
+def make_placed_mesh(
+    strategy: str,
+    mesh_shape: Sequence[int],
+    axis_names: Sequence[str],
+    topo: HyperX | None = None,
+    job_id: int = 0,
+    seed: int = 0,
+):
+    """(jax Mesh with allocation-ordered devices, HyperXPlacement).
+
+    Imported lazily so that pure-analysis users never touch jax device
+    state.  Requires ``len(jax.devices()) >= prod(mesh_shape)``.
+    """
+    import jax
+
+    placement = place_job(strategy, mesh_shape, axis_names, topo, job_id, seed)
+    devs = jax.devices()
+    size = placement.num_devices
+    if len(devs) < size:
+        raise RuntimeError(
+            f"need {size} devices for mesh {mesh_shape}, have {len(devs)} "
+            "(dry-run launchers set XLA_FLAGS=--xla_force_host_platform_"
+            "device_count before importing jax)"
+        )
+    order = placement.device_order()
+    arr = np.array(devs[:size], dtype=object)[order].reshape(placement.mesh_shape)
+    mesh = jax.sharding.Mesh(arr, placement.axis_names)
+    return mesh, placement

@@ -1,0 +1,15 @@
+"""Pallas TPU kernels for the framework's compute hot spots.
+
+  flash_attention — blocked online-softmax attention (train/prefill path)
+  ssd_scan        — Mamba-2 SSD chunked scan (state-space duality)
+
+Each kernel ships as <name>.py (pl.pallas_call + BlockSpec VMEM tiling),
+ops.py-style jit wrappers (flash_ops / ssd_ops), and ref.py pure-jnp
+oracles.  On non-TPU backends the kernels execute in interpret mode
+(Python evaluation of the kernel body), which the test suite uses for
+shape/dtype sweeps against the oracles.
+
+The HyperX paper itself has no kernel-level contribution (its layer is
+resource allocation); these kernels serve the framework's model stack per
+the scope note in DESIGN.md.
+"""

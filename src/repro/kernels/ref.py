@@ -1,0 +1,56 @@
+"""Pure-jnp oracles for the Pallas kernels (the correctness contract)."""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, causal=True, window=0):
+    """Direct softmax attention.  q: (B,H,S,D); k/v: (B,KV,T,D)."""
+    B, H, S, D = q.shape
+    KV, T = k.shape[1], k.shape[2]
+    rep = H // KV
+    kf = jnp.repeat(k, rep, axis=1).astype(jnp.float32)
+    vf = jnp.repeat(v, rep, axis=1).astype(jnp.float32)
+    logits = jnp.einsum("bhsd,bhtd->bhst", q.astype(jnp.float32), kf)
+    logits = logits / math.sqrt(D)
+    qpos = jnp.arange(S)[:, None]
+    kpos = jnp.arange(T)[None, :]
+    mask = jnp.ones((S, T), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window:
+        mask &= kpos > qpos - window
+    logits = jnp.where(mask[None, None], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhst,bhtd->bhsd", p, vf).astype(q.dtype)
+
+
+def ssd_ref(x, dt, A, Bm, Cm):
+    """Sequential SSM recurrence — the exact semantics SSD must reproduce.
+
+    x: (B,S,H,P); dt: (B,S,H); A: (H,); Bm/Cm: (B,S,N).
+    h_t = exp(dt_t A) h_{t-1} + dt_t B_t x_t ;  y_t = C_t . h_t
+    Returns (y: (B,S,H,P), state: (B,H,P,N)).
+    """
+    B, S, H, P = x.shape
+    N = Bm.shape[-1]
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    Af = A.astype(jnp.float32)
+
+    def step(h, t):
+        dA = jnp.exp(dtf[:, t] * Af[None, :])             # (B,H)
+        dBx = jnp.einsum("bn,bhp,bh->bhpn", Bm[:, t].astype(jnp.float32),
+                         xf[:, t], dtf[:, t])
+        h = h * dA[..., None, None] + dBx
+        y = jnp.einsum("bn,bhpn->bhp", Cm[:, t].astype(jnp.float32), h)
+        return h, y
+
+    h0 = jnp.zeros((B, H, P, N), jnp.float32)
+    h, ys = jax.lax.scan(step, h0, jnp.arange(S))
+    y = jnp.moveaxis(ys, 0, 1).astype(x.dtype)            # (B,S,H,P)
+    return y, h

@@ -1,0 +1,28 @@
+"""jit wrapper adapting the model's SSM layout to the SSD kernel."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.ssd_scan import ssd_scan
+
+
+def ssd(x, dt, A, Bm, Cm, chunk=128):
+    """models/ssm layout entry point.
+
+    x: (B,S,H,P); dt: (B,S,H); A: (H,); Bm/Cm: (B,S,N).
+    Returns (y: (B,S,H,P), state: (B,H,P,N)) matching ssm.ssd_chunked.
+    """
+    S = x.shape[1]
+    L = min(chunk, S)
+    pad = (-S) % L
+    if pad:
+        # zero dt on padded steps => decay 1, zero input: state unchanged
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+    y, st = ssd_scan(x, dt, A, Bm, Cm, chunk=L)
+    if pad:
+        y = y[:, :S]
+    return y, st.transpose(0, 1, 3, 2)  # (B,H,N,P) -> (B,H,P,N)

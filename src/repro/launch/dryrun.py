@@ -1,0 +1,315 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+The two lines above run before ANY other import (jax locks the device
+count on first init).  For each cell this launcher:
+
+  1. builds the production mesh (16x16 single-pod or 2x16x16 multi-pod),
+  2. constructs abstract (ShapeDtypeStruct) parameters, optimizer state,
+     batches and decode caches — no allocation anywhere,
+  3. assigns shardings from the logical-axis rules (FSDP for training,
+     TP+weight-sharding for serving),
+  4. ``jit(step).lower(...).compile()`` and prints memory_analysis() /
+     cost_analysis(),
+  5. extracts the roofline terms (launch/roofline.py) and appends a JSON
+     row to the output file.
+
+Usage:
+    python -m repro.launch.dryrun --arch deepseek-67b --shape train_4k
+    python -m repro.launch.dryrun --all --mesh both --out results/dryrun.jsonl
+"""
+
+import argparse
+import dataclasses
+import json
+import sys
+import time
+import traceback
+
+
+def _shard_if(size, mesh_axes, want):
+    """mesh axis tuple for a dim of ``size``: use ``want`` axes if divisible."""
+    sel = []
+    prod = 1
+    for ax in want:
+        if ax in mesh_axes:
+            p = prod * mesh_axes[ax]
+            if size % p == 0:
+                sel.append(ax)
+                prod = p
+    return tuple(sel) if sel else None
+
+
+def batch_shardings(cfg, mesh, specs):
+    import jax
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    axes = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    def one(k, s):
+        b = s.shape[0]
+        data_axes = _shard_if(b, axes, ("pod", "data"))
+        parts = [data_axes] + [None] * (len(s.shape) - 1)
+        return NamedSharding(mesh, P(*parts))
+
+    return {k: one(k, s) for k, s in specs.items()}
+
+
+def cache_shardings(cfg, mesh, cache_tree):
+    """Decode-cache shardings by leaf role (see DESIGN.md §Distribution)."""
+    import jax
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    axes = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    def one(path, leaf):
+        keys = [p.key for p in path if hasattr(p, "key")]
+        name = keys[-1]
+        nd = len(leaf.shape)
+        parts = [None] * nd
+        if name == "index":
+            return NamedSharding(mesh, P())
+        if name in ("k", "v"):            # (..., B, T, kv, dh)
+            b, t, kv = nd - 4, nd - 3, nd - 2
+            parts[b] = _shard_if(leaf.shape[b], axes, ("pod", "data"))
+            if axes.get("model") and leaf.shape[kv] % axes["model"] == 0:
+                parts[kv] = "model"
+            elif axes.get("model") and leaf.shape[t] % axes["model"] == 0:
+                parts[t] = "model"
+        elif name in ("ckv", "krope"):    # (..., B, T, E)
+            b, t = nd - 3, nd - 2
+            parts[b] = _shard_if(leaf.shape[b], axes, ("pod", "data"))
+            if axes.get("model") and leaf.shape[t] % axes["model"] == 0:
+                parts[t] = "model"
+        elif name == "conv":              # (..., B, W, C)
+            b, c = nd - 3, nd - 1
+            parts[b] = _shard_if(leaf.shape[b], axes, ("pod", "data"))
+            if axes.get("model") and leaf.shape[c] % axes["model"] == 0:
+                parts[c] = "model"
+        elif name == "state":
+            b = 1 if nd > 2 else 0
+            parts[b] = _shard_if(leaf.shape[b], axes, ("pod", "data"))
+            tp = nd - 3 if nd >= 4 else nd - 1   # ssm heads / lru width
+            if axes.get("model") and leaf.shape[tp] % axes["model"] == 0:
+                parts[tp] = "model"
+        return NamedSharding(mesh, P(*parts))
+
+    import jax.tree_util as jtu
+
+    return jtu.tree_map_with_path(one, cache_tree)
+
+
+def choose_settings(cfg, shape, grad_compression=False):
+    from repro.train.train_step import TrainSettings
+
+    if cfg.family == "moe":
+        mb = 16  # §Perf iteration 4: halves activation peak, terms flat
+    elif cfg.d_model >= 4096:
+        mb = 8
+    else:
+        mb = 4
+    return TrainSettings(microbatches=mb, remat=True,
+                         grad_compression=grad_compression)
+
+
+def serve_rule_set(cfg, n_model_shards=16) -> str:
+    bf16_bytes = 2 * cfg.param_count()
+    return "fsdp" if bf16_bytes / n_model_shards > 6e9 else "base"
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool,
+               settings_override=None, rule_set_override=None,
+               verbose=True):
+    """Lower + compile one cell; returns the roofline row dict."""
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.configs import get_config
+    from repro.data.pipeline import make_batch_specs
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch import roofline as RL
+    from repro.models import transformer as M
+    from repro.models.module import abstract, is_spec
+    from repro.sharding.partitioning import activation_mesh, tree_shardings
+    from repro.train.optimizer import AdamWState
+    from repro.train.train_step import build_train_step
+
+    cfg = get_config(arch)
+    if cfg.family == "moe":
+        # hierarchical dispatch groups = data-parallel shards (§Perf it. 1)
+        cfg = dataclasses.replace(cfg, moe_groups=32 if multi_pod else 16)
+    shape = cfg.shape(shape_name)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    t0 = time.time()
+    if shape.skip:
+        return {"arch": cfg.name, "shape": shape_name, "mesh": mesh_name,
+                "status": "skip", "reason": shape.skip}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.devices.size
+    specs = M.model_specs(cfg)
+    repl = NamedSharding(mesh, P())
+
+    if shape.kind == "train":
+        rule_set = rule_set_override or "fsdp"
+        settings = settings_override or choose_settings(cfg, shape)
+        params_ab = abstract(specs)
+        params_sh = tree_shardings(specs, mesh, rule_set)
+        opt_ab = AdamWState(
+            step=jax.ShapeDtypeStruct((), jnp.int32),
+            m=params_ab, v=params_ab,
+        )
+        opt_sh = AdamWState(step=repl, m=params_sh, v=params_sh)
+        bspecs = make_batch_specs(cfg, shape.global_batch, shape.seq_len, "train")
+        bsh = batch_shardings(cfg, mesh, bspecs)
+        step_fn = build_train_step(cfg, settings)
+
+        def wrapped(params, opt, batch):
+            with activation_mesh(mesh, rule_set):
+                return step_fn(params, opt, batch)
+
+        jitted = jax.jit(
+            wrapped,
+            in_shardings=(params_sh, opt_sh, bsh),
+            out_shardings=(params_sh, opt_sh, None),
+            donate_argnums=(0, 1),
+        )
+        with mesh:
+            lowered = jitted.lower(params_ab, opt_ab, bspecs)
+            compiled = lowered.compile()
+    else:
+        rule_set = rule_set_override or serve_rule_set(cfg)
+        # serving weights in bf16
+        bf_specs = jax.tree_util.tree_map(
+            lambda s: dataclasses.replace(s, dtype="bfloat16")
+            if s.dtype == "float32" else s,
+            specs, is_leaf=is_spec,
+        )
+        params_ab = abstract(bf_specs)
+        params_sh = tree_shardings(specs, mesh, rule_set)
+        if shape.kind == "prefill":
+            bspecs = make_batch_specs(cfg, shape.global_batch, shape.seq_len,
+                                      "prefill")
+            bsh = batch_shardings(cfg, mesh, bspecs)
+
+            if cfg.encoder_only:
+                def serve_fn(params, batch):
+                    with activation_mesh(mesh, rule_set):
+                        return M.forward_train(cfg, params, batch, remat=False)[0]
+            else:
+                def serve_fn(params, batch):
+                    with activation_mesh(mesh, rule_set):
+                        return M.prefill(cfg, params, batch,
+                                         max_len=shape.seq_len)
+
+            jitted = jax.jit(serve_fn, in_shardings=(params_sh, bsh))
+            with mesh:
+                lowered = jitted.lower(params_ab, bspecs)
+                compiled = lowered.compile()
+        else:  # decode: one new token against a seq_len-deep cache
+            caches_ab = jax.eval_shape(
+                lambda: M.init_caches(cfg, shape.global_batch, shape.seq_len)
+            )
+            csh = cache_shardings(cfg, mesh, caches_ab)
+            bspecs = make_batch_specs(cfg, shape.global_batch, shape.seq_len,
+                                      "decode")
+            bsh = batch_shardings(cfg, mesh, bspecs)
+            idx_ab = jax.ShapeDtypeStruct((), jnp.int32)
+
+            def serve_fn(params, tokens, caches, index):
+                with activation_mesh(mesh, rule_set):
+                    return M.decode_step(cfg, params, tokens, caches, index)
+
+            jitted = jax.jit(
+                serve_fn,
+                in_shardings=(params_sh, bsh["tokens"], csh, repl),
+                donate_argnums=(2,),
+            )
+            with mesh:
+                lowered = jitted.lower(params_ab, bspecs["tokens"], caches_ab,
+                                       idx_ab)
+                compiled = lowered.compile()
+
+    text = compiled.as_text()
+    mf = RL.model_flops_for(cfg, shape)
+    rl = RL.from_compiled(cfg.name, shape_name, mesh_name, chips, compiled,
+                          mf, hlo_text=text)
+    row = rl.row()
+    row.update(status="ok", rule_set=rule_set,
+               compile_s=round(time.time() - t0, 1))
+    if shape.kind == "train":
+        row["microbatches"] = settings.microbatches
+    if verbose:
+        print(f"== {cfg.name} {shape_name} {mesh_name} ==")
+        print(compiled.memory_analysis())      # proves it fits
+        ca = compiled.cost_analysis()
+        ca = ca[0] if isinstance(ca, list) else ca
+        print({k: ca[k] for k in ("flops", "bytes accessed") if k in ca})
+        print(json.dumps({k: row[k] for k in (
+            "compute_s", "memory_s", "collective_s", "bottleneck",
+            "useful_ratio", "roofline_fraction", "peak_bytes_per_chip",
+        )}, default=str))
+    return row
+
+
+def main(argv=None):
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", default=None)
+    p.add_argument("--shape", default=None)
+    p.add_argument("--mesh", choices=("single", "multi", "both"),
+                   default="single")
+    p.add_argument("--all", action="store_true")
+    p.add_argument("--out", default=None, help="append JSONL rows here")
+    args = p.parse_args(argv)
+
+    from repro.configs import ARCHS, get_config
+
+    archs = ARCHS if args.all or args.arch is None else [args.arch]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    done = set()
+    if args.out and os.path.exists(args.out):
+        with open(args.out) as f:
+            for line in f:
+                try:
+                    r = json.loads(line)
+                    if r.get("status") in ("ok", "skip"):
+                        done.add((r["arch"], r["shape"], r["mesh"]))
+                except json.JSONDecodeError:
+                    pass
+    rows = []
+    for arch in archs:
+        cfg = get_config(arch)
+        shapes = ([args.shape] if args.shape
+                  else [c.name for c in cfg.shapes()])
+        for shape in shapes:
+            for mp in meshes:
+                key = (cfg.name, shape, "2x16x16" if mp else "16x16")
+                if key in done:
+                    continue
+                try:
+                    row = lower_cell(arch, shape, mp)
+                except Exception as e:
+                    traceback.print_exc()
+                    row = {
+                        "arch": cfg.name, "shape": shape,
+                        "mesh": "2x16x16" if mp else "16x16",
+                        "status": "error", "error": f"{type(e).__name__}: {e}",
+                    }
+                rows.append(row)
+                if args.out:
+                    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+                    with open(args.out, "a") as f:
+                        f.write(json.dumps(row, default=str) + "\n")
+    bad = [r for r in rows if r.get("status") == "error"]
+    print(f"\n{len(rows)} cells: {len(rows) - len(bad)} ok/skip, {len(bad)} errors")
+    return 1 if bad else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,333 @@
+"""Static analyzer for optimized HLO text — the dry-run 'profiler'.
+
+XLA:CPU's ``compiled.cost_analysis()`` counts while-loop bodies ONCE, which
+under-reports every scanned quantity (layers, microbatches, attention
+chunks) by its trip count.  This module parses the optimized HLO module,
+propagates ``known_trip_count`` multipliers through nested while loops, and
+produces trip-aware totals:
+
+  * ``flops``       — 2*M*N*K over every dot (the MXU term),
+  * ``bytes``       — HBM traffic: operand+result bytes of top-level
+                      instructions in executed computations (fusion bodies
+                      are on-chip and excluded; dynamic-update-slice counts
+                      the update, not the aliased buffer),
+  * ``coll_bytes``  — operand bytes of all-reduce / all-gather /
+                      reduce-scatter / all-to-all / collective-permute,
+                      by kind and in total.
+
+It is also the §Perf profiling tool: ``per_computation`` breaks each term
+down by (computation x op kind) so hillclimbs can see exactly which scanned
+region owns the dominant roofline term.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "token": 0,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z][a-z0-9]*)\[([0-9,]*)\]")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.*?)\s*([a-z][a-zA-Z0-9\-]*)\("
+)
+_COMP_RE = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*(?:\(.*\))?\s*->.*{\s*$")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CALLS_RE = re.compile(r"\b(?:calls|to_apply|body|condition)=%?([\w.\-]+)")
+
+COLLECTIVES = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+_SKIP_BYTES = {
+    "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+    "after-all", "while", "conditional", "call", "partition-id",
+    "replica-id", "get-dimension-size",
+}
+
+
+def _type_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES.get(dt, 4)
+    return total
+
+
+def _type_dims(type_str: str) -> list[int]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    type_str: str
+    opcode: str
+    operands: list
+    line: str
+
+    @property
+    def bytes(self) -> int:
+        return _type_bytes(self.type_str)
+
+
+@dataclasses.dataclass
+class Comp:
+    name: str
+    instrs: dict
+    order: list
+
+
+def parse_hlo(text: str):
+    comps: dict[str, Comp] = {}
+    entry = None
+    cur = None
+    for line in text.splitlines():
+        if cur is None:
+            m = _COMP_RE.match(line)
+            # headers never contain a spaced assignment (instruction lines
+            # do); '=' alone also appears in /*index=5*/ type comments.
+            if m and " = " not in line.split(" {")[0]:
+                cur = Comp(m.group(2), {}, [])
+                if m.group(1):
+                    entry = m.group(2)
+            continue
+        if line.startswith("}"):
+            comps[cur.name] = cur
+            cur = None
+            continue
+        m = _INSTR_RE.match(line)
+        if m:
+            name, type_str, opcode = m.groups()
+            # operands: inside the balanced parens right after the opcode
+            start = m.end() - 1
+            depth, end = 0, len(line)
+            for i in range(start, len(line)):
+                if line[i] == "(":
+                    depth += 1
+                elif line[i] == ")":
+                    depth -= 1
+                    if depth == 0:
+                        end = i
+                        break
+            operands = _OPERAND_RE.findall(line[start:end + 1])
+            ins = Instr(name, type_str, opcode, operands, line)
+            cur.instrs[name] = ins
+            cur.order.append(name)
+    return comps, entry
+
+
+def _operand_bytes(ins: Instr, comp: Comp, global_idx) -> int:
+    total = 0
+    for op in ins.operands:
+        src = comp.instrs.get(op) or global_idx.get(op)
+        if src is not None:
+            total += src.bytes
+    return total
+
+
+def _dot_flops(ins: Instr, comp: Comp, global_idx) -> float:
+    out_elems = 1
+    for d in _type_dims(ins.type_str):
+        out_elems *= d
+    m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", ins.line)
+    contract = 1
+    if m and ins.operands:
+        lhs = comp.instrs.get(ins.operands[0]) or global_idx.get(ins.operands[0])
+        if lhs is not None:
+            dims = _type_dims(lhs.type_str)
+            for i in m.group(1).split(","):
+                if i and int(i) < len(dims):
+                    contract *= dims[int(i)]
+    return 2.0 * out_elems * contract
+
+
+def _fusion_bytes(ins: Instr, comp: Comp, comps, global_idx) -> int:
+    """HBM traffic of one fusion: effective operand bytes + result bytes.
+
+    Refinements over naive operand+result:
+      * a fused parameter consumed ONLY by dynamic-slice ops contributes
+        the slice size (e.g. one layer's weights gathered from the stacked
+        scan buffer), not the whole buffer;
+      * a fusion whose root is dynamic-update-slice writes the update (the
+        buffer is aliased in place).
+    """
+    called = _CALLS_RE.findall(ins.line)
+    fc = comps.get(called[0]) if called else None
+    if fc is None:
+        return _operand_bytes(ins, comp, global_idx) + ins.bytes
+    # map fused parameter index -> effective bytes
+    users = defaultdict(list)
+    for iname in fc.order:
+        fi = fc.instrs[iname]
+        for op in fi.operands:
+            users[op].append(fi)
+    # fused dynamic-update-slices whose buffer operand flows straight from
+    # a parameter of the fusion's own output shape are in-place on the
+    # aliased buffer (XLA buffer assignment): traffic = 2 x update slice.
+    dus_params = {}
+    dus_updates = 0
+    for iname in fc.order:
+        fi = fc.instrs[iname]
+        if fi.opcode != "dynamic-update-slice" or not fi.operands:
+            continue
+        buf = fc.instrs.get(fi.operands[0])
+        # the buffer may pass through convert/bitcast wrappers
+        hops = 0
+        while buf is not None and buf.opcode in ("convert", "bitcast", "copy") \
+                and buf.operands and hops < 3:
+            buf = fc.instrs.get(buf.operands[0])
+            hops += 1
+        upd = fc.instrs.get(fi.operands[1]) if len(fi.operands) > 1 else None
+        if buf is not None and buf.opcode == "parameter" and \
+                _type_dims(buf.type_str) == _type_dims(ins.type_str):
+            dus_params[buf.name] = True
+            dus_updates += upd.bytes if upd is not None else 0
+
+    eff = []
+    for iname in fc.order:
+        fi = fc.instrs[iname]
+        if fi.opcode != "parameter":
+            continue
+        if fi.name in dus_params:
+            eff.append(0)  # aliased in place; counted via dus_updates
+            continue
+        us = users.get(fi.name, [])
+        if us and all(u.opcode == "dynamic-slice" for u in us):
+            eff.append(sum(u.bytes for u in us))
+        else:
+            eff.append(fi.bytes)
+    total_in = sum(eff)
+    out_b = 2 * dus_updates if dus_params else ins.bytes
+    return total_in + out_b
+
+
+def analyze(text: str) -> dict:
+    comps, entry = parse_hlo(text)
+    global_idx = {}
+    for c in comps.values():
+        for ins in c.instrs.values():
+            global_idx.setdefault(ins.name, ins)
+
+    # computations reachable as fusion bodies are on-chip: excluded from the
+    # top-level walk (we walk entry + while/call/cond bodies explicitly)
+    flops = 0.0
+    byts = 0.0
+    coll = defaultdict(float)
+    coll_n = defaultdict(int)
+    per_comp = defaultdict(lambda: {"flops": 0.0, "bytes": 0.0, "coll": 0.0,
+                                    "mult": 0})
+
+    def visit(comp_name: str, mult: float, seen):
+        comp = comps.get(comp_name)
+        if comp is None:
+            return
+        nonlocal flops, byts
+        pc = per_comp[comp_name]
+        pc["mult"] += mult
+        for name in comp.order:
+            ins = comp.instrs[name]
+            op = ins.opcode
+            if op == "while":
+                trips = 1
+                mt = _TRIP_RE.search(ins.line)
+                if mt:
+                    trips = int(mt.group(1))
+                refs = _CALLS_RE.findall(ins.line)
+                for r in refs:
+                    visit(r, mult * trips, seen)
+                continue
+            if op in ("call", "conditional"):
+                for r in _CALLS_RE.findall(ins.line):
+                    visit(r, mult, seen)
+                continue
+            if op == "fusion":
+                fb = _fusion_bytes(ins, comp, comps, global_idx)
+                called = _CALLS_RE.findall(ins.line)
+                for cn in called:
+                    fc = comps.get(cn)
+                    if fc is None:
+                        continue
+                    # dots inside fusions still execute on the MXU
+                    for iname in fc.order:
+                        fi = fc.instrs[iname]
+                        if fi.opcode == "dot":
+                            df = _dot_flops(fi, fc, global_idx) * mult
+                            flops += df
+                            pc["flops"] += df
+                byts += fb * mult
+                pc["bytes"] += fb * mult
+                continue
+            is_coll = next((c for c in COLLECTIVES
+                            if op == c or op == c + "-start"), None)
+            if is_coll:
+                cb = _operand_bytes(ins, comp, global_idx)
+                coll[is_coll] += cb * mult
+                coll_n[is_coll] += int(mult)
+                pc["coll"] += cb * mult
+                byts += (cb + ins.bytes) * mult
+                pc["bytes"] += (cb + ins.bytes) * mult
+                continue
+            if op == "dot":
+                df = _dot_flops(ins, comp, global_idx) * mult
+                flops += df
+                pc["flops"] += df
+                b = (_operand_bytes(ins, comp, global_idx) + ins.bytes) * mult
+                byts += b
+                pc["bytes"] += b
+                continue
+            if op in _SKIP_BYTES or op.endswith("-done"):
+                continue
+            if op in ("dynamic-update-slice",):
+                upd = (comp.instrs.get(ins.operands[1]) or
+                       global_idx.get(ins.operands[1])) if len(ins.operands) > 1 else None
+                b = 2 * (upd.bytes if upd else 0) * mult
+            elif op == "dynamic-slice":
+                b = 2 * ins.bytes * mult
+            else:
+                b = (_operand_bytes(ins, comp, global_idx) + ins.bytes) * mult
+            byts += b
+            pc["bytes"] += b
+
+    visit(entry, 1.0, set())
+    return {
+        "flops": flops,
+        "bytes": byts,
+        "coll_bytes": float(sum(coll.values())),
+        "coll_breakdown": dict(coll),
+        "coll_counts": dict(coll_n),
+        "per_computation": {
+            k: v for k, v in sorted(
+                per_comp.items(), key=lambda kv: -max(
+                    kv[1]["flops"] / 197e12, kv[1]["bytes"] / 819e9)
+            )[:12]
+        },
+        "entry": entry,
+    }
+
+
+def main():
+    import sys
+
+    with open(sys.argv[1]) as f:
+        out = analyze(f.read())
+    out.pop("per_computation")
+    print(json.dumps(out, indent=2))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,141 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+Three terms per (arch x shape x mesh), in seconds (TPU v5e-class):
+
+    compute    = HLO_FLOPs / (chips * 197e12)          [bf16 MXU peak]
+    memory     = HLO_bytes / (chips * 819e9)           [HBM]
+    collective = collective_operand_bytes / (chips * 50e9)  [per-link ICI]
+
+FLOPs/bytes come from ``compiled.cost_analysis()``; collective bytes are
+NOT in cost_analysis, so we parse the optimized HLO text and sum operand
+sizes of all-reduce / all-gather / reduce-scatter / all-to-all /
+collective-permute ops.  ``MODEL_FLOPS = 6*N*D`` (6*N_active*D for MoE)
+gives the useful-compute ratio that catches remat/redundancy waste.
+
+The allocation-aware variant scales the collective term by the placement's
+partition bandwidth (min(1, PB) of injection bandwidth) — the paper's
+Lesson 2 applied to the roofline.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+PEAK_FLOPS = 197e12      # bf16 per chip
+HBM_BW = 819e9           # bytes/s per chip
+LINK_BW = 50e9           # bytes/s per ICI link
+
+@dataclasses.dataclass
+class Roofline:
+    """All HLO-derived quantities are PER DEVICE (the SPMD module is the
+    per-device program); model_flops is the global step's useful FLOPs."""
+
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops: float          # per-device dot FLOPs (trip-count aware)
+    hlo_bytes: float          # per-device HBM traffic
+    coll_bytes: float         # per-device collective operand bytes
+    coll_breakdown: dict
+    coll_counts: dict
+    model_flops: float        # global 6*N*D (or 2*N*D serve) useful FLOPs
+    peak_bytes_per_chip: float | None = None
+    cost_analysis_raw: dict | None = None
+
+    @property
+    def compute_s(self) -> float:
+        return self.hlo_flops / PEAK_FLOPS
+
+    @property
+    def memory_s(self) -> float:
+        return self.hlo_bytes / HBM_BW
+
+    @property
+    def collective_s(self) -> float:
+        return self.coll_bytes / LINK_BW
+
+    @property
+    def bottleneck(self) -> str:
+        t = {
+            "compute": self.compute_s,
+            "memory": self.memory_s,
+            "collective": self.collective_s,
+        }
+        return max(t, key=t.get)
+
+    @property
+    def useful_ratio(self) -> float:
+        per_dev = self.model_flops / self.chips
+        return per_dev / self.hlo_flops if self.hlo_flops else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """useful-FLOPs-at-peak time / dominating term — the perf score."""
+        ideal = self.model_flops / self.chips / PEAK_FLOPS
+        dom = max(self.compute_s, self.memory_s, self.collective_s)
+        return ideal / dom if dom else 0.0
+
+    def collective_s_allocated(self, pb: float) -> float:
+        return self.coll_bytes / (min(1.0, pb) * LINK_BW)
+
+    def row(self) -> dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "chips": self.chips,
+            "hlo_flops": self.hlo_flops, "hlo_bytes": self.hlo_bytes,
+            "coll_bytes": self.coll_bytes,
+            "coll_breakdown": self.coll_breakdown,
+            "coll_counts": self.coll_counts,
+            "compute_s": self.compute_s, "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "bottleneck": self.bottleneck,
+            "model_flops": self.model_flops,
+            "useful_ratio": self.useful_ratio,
+            "roofline_fraction": self.roofline_fraction,
+            "peak_bytes_per_chip": self.peak_bytes_per_chip,
+            "cost_analysis_raw": self.cost_analysis_raw,
+        }
+
+
+def model_flops_for(cfg, shape) -> float:
+    """6*N*D per processed token (N_active for MoE); decode counts the one
+    new token per sequence."""
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    return 2.0 * n * shape.global_batch  # decode: one token per sequence
+
+
+def from_compiled(arch, shape_name, mesh_name, chips, compiled, model_flops,
+                  hlo_text=None) -> Roofline:
+    from repro.launch.hlo_analysis import analyze
+
+    text = hlo_text if hlo_text is not None else compiled.as_text()
+    a = analyze(text)
+    try:
+        ca = compiled.cost_analysis()
+        ca = ca[0] if isinstance(ca, list) else ca
+        raw = {k: float(ca[k]) for k in ("flops", "bytes accessed") if k in ca}
+    except Exception:
+        raw = None
+    peak = None
+    try:
+        ma = compiled.memory_analysis()
+        peak = float(
+            ma.temp_size_in_bytes + ma.argument_size_in_bytes
+            + ma.output_size_in_bytes - ma.alias_size_in_bytes
+        )
+    except Exception:
+        pass
+    return Roofline(
+        arch=arch, shape=shape_name, mesh=mesh_name, chips=chips,
+        hlo_flops=a["flops"], hlo_bytes=a["bytes"],
+        coll_bytes=a["coll_bytes"], coll_breakdown=a["coll_breakdown"],
+        coll_counts=a["coll_counts"], model_flops=model_flops,
+        peak_bytes_per_chip=peak, cost_analysis_raw=raw,
+    )

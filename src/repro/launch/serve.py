@@ -1,0 +1,59 @@
+"""Serving driver: batched prefill+decode with the ServeEngine.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen3_0_6b --reduced \
+        --batch 4 --prompt-len 32 --gen 16
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def main(argv=None):
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", required=True)
+    p.add_argument("--reduced", action="store_true")
+    p.add_argument("--batch", type=int, default=4)
+    p.add_argument("--prompt-len", type=int, default=32)
+    p.add_argument("--gen", type=int, default=16)
+    p.add_argument("--max-len", type=int, default=None)
+    p.add_argument("--greedy", action="store_true", default=True)
+    args = p.parse_args(argv)
+
+    import jax.numpy as jnp
+
+    from repro.configs import get_config
+    from repro.data.pipeline import SyntheticLM
+    from repro.models import transformer as M
+    from repro.models.module import init as init_params
+    from repro.serve import ServeEngine
+
+    import jax
+
+    cfg = get_config(args.arch, reduced=args.reduced)
+    params = init_params(jax.random.PRNGKey(0), M.model_specs(cfg))
+    max_len = args.max_len or (args.prompt_len + args.gen + 8)
+    eng = ServeEngine(cfg, params, max_len=max_len)
+    data = SyntheticLM(cfg, seed=3)
+    batch = {"tokens": jnp.asarray(
+        data.next_batch(args.batch, args.prompt_len)["tokens"]
+    )}
+    if cfg.family == "vlm":
+        import numpy as np
+
+        batch["image_embeds"] = jnp.asarray(
+            data.batch_at(0, args.batch, args.prompt_len)["image_embeds"]
+        )
+    t0 = time.time()
+    out = eng.generate(batch, steps=args.gen, greedy=args.greedy)
+    dt = time.time() - t0
+    tok_s = args.batch * args.gen / dt
+    print(f"[serve] {cfg.name}: {args.batch}x{args.gen} tokens in "
+          f"{dt:.2f}s ({tok_s:.1f} tok/s)")
+    print("sample:", out[0][:12].tolist())
+    return out
+
+
+if __name__ == "__main__":
+    main()

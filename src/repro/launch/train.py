@@ -1,0 +1,144 @@
+"""Training driver: allocation-aware mesh + fault-tolerant train loop.
+
+Single-process reference driver (the CPU container); the same loop runs
+under multi-host jax.distributed with per-host data slices.  Integrates:
+
+  * FleetRuntime — HyperX allocation as placement + repair policy,
+  * Checkpointer — periodic async checkpoint, resume on restart/failure,
+  * StragglerMonitor — per-step timing, eviction proposals,
+  * failure injection (--fail-at N) to exercise the repair path for real.
+
+Example (CPU smoke scale):
+    PYTHONPATH=src python -m repro.launch.train --arch qwen3_0_6b --reduced \
+        --steps 30 --batch 8 --seq 64 --mesh-shape 1,2 --ckpt /tmp/ck
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def main(argv=None):
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", required=True)
+    p.add_argument("--reduced", action="store_true")
+    p.add_argument("--steps", type=int, default=50)
+    p.add_argument("--batch", type=int, default=8)
+    p.add_argument("--seq", type=int, default=64)
+    p.add_argument("--microbatches", type=int, default=1)
+    p.add_argument("--mesh-shape", default="1,1",
+                   help="data,model (must divide available devices)")
+    p.add_argument("--strategy", default="diagonal",
+                   help="HyperX allocation strategy for placement")
+    p.add_argument("--ckpt", default=None)
+    p.add_argument("--ckpt-every", type=int, default=20)
+    p.add_argument("--fail-at", type=int, default=None,
+                   help="inject an endpoint failure at this step")
+    p.add_argument("--grad-compression", action="store_true")
+    p.add_argument("--lr", type=float, default=3e-3)
+    p.add_argument("--log-every", type=int, default=5)
+    args = p.parse_args(argv)
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.checkpoint import Checkpointer
+    from repro.configs import get_config
+    from repro.data.pipeline import SyntheticLM
+    from repro.models import transformer as M
+    from repro.models.module import init as init_params
+    from repro.runtime import FleetRuntime, StragglerMonitor
+    from repro.sharding.partitioning import activation_mesh, tree_shardings
+    from repro.train.optimizer import AdamWConfig, adamw_init
+    from repro.train.train_step import TrainSettings, build_train_step
+
+    cfg = get_config(args.arch, reduced=args.reduced)
+    mesh_shape = tuple(int(x) for x in args.mesh_shape.split(","))
+    ndev = len(jax.devices())
+    use_mesh = int(np.prod(mesh_shape)) > 1 and int(np.prod(mesh_shape)) <= ndev
+
+    runtime = FleetRuntime(mesh_shape, ("data", "model"),
+                           strategy=args.strategy)
+    print(f"[launch] {cfg.name} placement={args.strategy} "
+          f"mesh={mesh_shape} endpoints="
+          f"{runtime.placement.endpoints.reshape(-1)[:8].tolist()}...")
+
+    settings = TrainSettings(
+        microbatches=args.microbatches, remat=False,
+        grad_compression=args.grad_compression,
+        opt=AdamWConfig(lr_peak=args.lr, warmup_steps=5,
+                        total_steps=args.steps),
+    )
+    specs = M.model_specs(cfg)
+    step_fn = build_train_step(cfg, settings)
+    data = SyntheticLM(cfg, seed=0)
+    ck = Checkpointer(args.ckpt, async_save=True) if args.ckpt else None
+    mon = StragglerMonitor()
+
+    def make_mesh_and_jit():
+        if use_mesh:
+            devs = np.array(jax.devices()[: int(np.prod(mesh_shape))])
+            order = runtime.placement.device_order() % len(devs)
+            mesh = jax.sharding.Mesh(
+                devs[order].reshape(mesh_shape), ("data", "model")
+            )
+            p_sh = tree_shardings(specs, mesh, "base")
+
+            def wrapped(params, opt, batch):
+                with activation_mesh(mesh, "base"):
+                    return step_fn(params, opt, batch)
+
+            return mesh, jax.jit(wrapped, donate_argnums=(0, 1))
+        return None, jax.jit(step_fn, donate_argnums=(0, 1))
+
+    mesh, jitted = make_mesh_and_jit()
+    params = init_params(jax.random.PRNGKey(0), specs)
+    opt = adamw_init(params)
+    start_step = 0
+    if ck and ck.latest_step() is not None:
+        (restored, extra) = ck.restore({"params": params, "opt": opt})
+        params, opt = restored["params"], restored["opt"]
+        data.load_state_dict(extra["data"])
+        start_step = extra["step"] + 1
+        print(f"[resume] from checkpoint step {extra['step']}")
+
+    losses = []
+    for step in range(start_step, args.steps):
+        if args.fail_at is not None and step == args.fail_at:
+            victim = int(runtime.placement.endpoints.reshape(-1)[0])
+            ev = runtime.fail([victim])
+            print(f"[fault] endpoint {victim} died -> {ev['action']}; "
+                  f"restoring from checkpoint")
+            if ck and ck.latest_step() is not None:
+                (restored, extra) = ck.restore({"params": params, "opt": opt})
+                params, opt = restored["params"], restored["opt"]
+                data.load_state_dict(extra["data"])
+            mesh, jitted = make_mesh_and_jit()  # re-lower on new placement
+
+        batch = jax.tree_util.tree_map(
+            jnp.asarray, data.next_batch(args.batch, args.seq)
+        )
+        t0 = time.time()
+        params, opt, metrics = jitted(params, opt, batch)
+        loss = float(metrics["loss"])
+        dt = time.time() - t0
+        mon.record(0, dt)
+        losses.append(loss)
+        if step % args.log_every == 0:
+            print(f"step {step:5d} loss {loss:.4f} "
+                  f"lr {float(metrics['lr']):.2e} "
+                  f"gnorm {float(metrics['grad_norm']):.2f} {dt*1e3:.0f}ms")
+        if ck and step and step % args.ckpt_every == 0:
+            ck.save(step, {"params": params, "opt": opt},
+                    extra={"step": step, "data": data.state_dict(),
+                           "generation": runtime.job.generation})
+    if ck:
+        ck.wait()
+    print(f"[done] first loss {losses[0]:.4f} -> last {losses[-1]:.4f}")
+    return losses
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+from repro.models.config import ArchConfig, ShapeSpec  # noqa: F401

@@ -1,0 +1,157 @@
+"""Architecture configuration schema.
+
+One ``ArchConfig`` describes any model family in the assigned pool: dense
+GQA transformers, MoE (token-choice top-k, optionally MLA attention), SSM
+(Mamba-2 / SSD), hybrid recurrent (RG-LRU + local attention), cross-attn
+VLM decoders, and encoder-only audio stacks.  ``configs/<arch>.py`` files
+instantiate these with the exact published dimensions.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Literal
+
+Family = Literal["dense", "moe", "ssm", "hybrid", "vlm", "audio"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    """One (input-shape x step-kind) evaluation cell."""
+
+    name: str                      # train_4k / prefill_32k / decode_32k / long_500k
+    kind: Literal["train", "prefill", "decode"]
+    seq_len: int                   # sequence length (KV/cache length for decode)
+    global_batch: int
+    skip: str | None = None        # reason if this arch skips the cell
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: Family
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv: int
+    d_ff: int
+    vocab: int
+    d_head: int = 0                # default d_model // n_heads
+
+    # --- attention details ---
+    qk_norm: bool = False          # qwen3: RMSNorm on q/k per head
+    nonparam_ln: bool = False      # olmo: non-parametric LayerNorm
+    encoder_only: bool = False     # hubert: bidirectional, no decode
+    rope_theta: float = 1e4
+    window: int = 0                # local attention window (0 = global)
+
+    # --- MoE ---
+    n_experts: int = 0
+    top_k: int = 0
+    n_shared: int = 0              # shared experts (deepseek-v2)
+    d_ff_expert: int = 0
+    capacity_factor: float = 1.25
+    router_aux_coef: float = 0.001
+    # dispatch groups (= data-parallel shards): tokens are grouped, sorted
+    # and capacity-dropped PER GROUP so the scatter stays shard-local and
+    # only the dispatched expert buffer crosses the fabric (all-to-all)
+    moe_groups: int = 1
+
+    # --- MLA (deepseek-v2) ---
+    kv_lora: int = 0               # compressed KV width (0 = standard GQA)
+    q_lora: int = 0
+    rope_head_dim: int = 64
+
+    # --- SSM (mamba2 / SSD) ---
+    ssm_state: int = 0
+    ssm_expand: int = 2
+    ssm_head_dim: int = 64
+    ssm_chunk: int = 256
+    conv_width: int = 4
+
+    # --- hybrid (recurrentgemma: pattern = 2 recurrent + 1 local attn) ---
+    rglru_pattern: int = 0         # recurrent layers per attention layer (2)
+    lru_width: int = 0             # 0 = d_model
+
+    # --- VLM (llama-3.2-vision) ---
+    cross_attn_every: int = 0      # 1 cross-attn layer per this many layers
+    frontend_tokens: int = 0       # stub modality tokens (image patches / frames)
+
+    # --- stub modality frontend (audio) ---
+    frame_input: bool = False      # inputs are precomputed frame embeddings
+
+    # --- training details ---
+    tie_embeddings: bool = False
+    dtype: str = "bfloat16"
+
+    def __post_init__(self):
+        if self.d_head == 0:
+            object.__setattr__(self, "d_head", self.d_model // self.n_heads)
+
+    # ------------------------------------------------------------ derived
+    @property
+    def vocab_padded(self) -> int:
+        """Vocab rounded up to 128 (MXU lane width / TP divisibility);
+        padded logit columns are masked to -inf in unembed (Megatron-style)."""
+        return -(-self.vocab // 128) * 128
+
+    @property
+    def d_inner_ssm(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_heads(self) -> int:
+        return self.d_inner_ssm // self.ssm_head_dim
+
+    @property
+    def lru_dim(self) -> int:
+        return self.lru_width or self.d_model
+
+    @property
+    def is_subquadratic(self) -> bool:
+        """Can this arch decode at 500k context (SSM state / local window)?"""
+        return self.family in ("ssm", "hybrid")
+
+    def param_count(self) -> int:
+        """Exact parameter count from the spec tree."""
+        from repro.models.transformer import model_specs
+        from repro.models.module import count_params
+
+        return count_params(model_specs(self))
+
+    def active_param_count(self) -> int:
+        """Parameters touched per token (MoE: top_k + shared experts only)."""
+        if self.family != "moe":
+            return self.param_count()
+        total = self.param_count()
+        expert_p = 3 * self.d_model * self.d_ff_expert  # swiglu expert
+        inactive = self.n_layers * (self.n_experts - self.top_k) * expert_p
+        return total - inactive
+
+    # ------------------------------------------------------------- shapes
+    def shapes(self) -> list[ShapeSpec]:
+        """The assigned LM shape set with per-family skip annotations."""
+        cells = [
+            ShapeSpec("train_4k", "train", 4096, 256),
+            ShapeSpec("prefill_32k", "prefill", 32768, 32),
+            ShapeSpec("decode_32k", "decode", 32768, 128),
+            ShapeSpec("long_500k", "decode", 524288, 1),
+        ]
+        out = []
+        for c in cells:
+            skip = None
+            if self.encoder_only and c.kind == "decode":
+                skip = "encoder-only architecture has no decode step"
+            elif c.name == "long_500k" and not self.is_subquadratic:
+                skip = (
+                    "500k-context decode needs sub-quadratic attention; "
+                    f"{self.name} is pure full-attention"
+                )
+            out.append(dataclasses.replace(c, skip=skip))
+        return out
+
+    def shape(self, name: str) -> ShapeSpec:
+        for c in self.shapes():
+            if c.name == name:
+                return c
+        raise KeyError(f"unknown shape {name!r} for {self.name}")

@@ -1,0 +1,488 @@
+"""Core transformer building blocks, pure JAX.
+
+All forward functions take params as pytrees of arrays (master fp32) and
+compute in the config dtype (bf16 by default).  Attention supports causal,
+local-window, bidirectional (encoder) and cross-attention variants, GQA
+grouping, qk-norm and MLA (compressed-KV) attention; the MoE layer uses a
+sort-based dropping dispatch whose expert axis shards over the ``model``
+mesh axis (the expert all-to-all of the paper's All-to-All kernel).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ArchConfig
+from repro.models.module import spec
+
+
+def cdtype(cfg: ArchConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+# ---------------------------------------------------------------- norms
+def rms_norm(x, w, eps=1e-6):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (y * w.astype(jnp.float32)).astype(x.dtype)
+
+
+def nonparam_layer_norm(x, eps=1e-5):
+    """OLMo-style non-parametric LayerNorm (no scale/bias)."""
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    return ((xf - mu) * jax.lax.rsqrt(var + eps)).astype(x.dtype)
+
+
+def norm(cfg: ArchConfig, x, w):
+    if cfg.nonparam_ln:
+        return nonparam_layer_norm(x)
+    return rms_norm(x, w)
+
+
+def norm_spec(cfg: ArchConfig):
+    # kept (and simply unused) for non-parametric LN so the layer pytree
+    # structure is family-uniform
+    return spec((cfg.d_model,), ("embed",), init="ones")
+
+
+# ---------------------------------------------------------------- rotary
+def rope_freqs(dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., S, H, D) with D even; positions: (..., S)."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                       # (D/2,)
+    ang = positions[..., :, None].astype(jnp.float32) * freqs  # (..., S, D/2)
+    cos = jnp.cos(ang)[..., :, None, :]
+    sin = jnp.sin(ang)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------- MLP
+def mlp_specs(cfg: ArchConfig, d_ff: int | None = None):
+    d_ff = d_ff or cfg.d_ff
+    d = cfg.d_model
+    return {
+        "wi": spec((d, d_ff), ("embed", "ff")),
+        "wg": spec((d, d_ff), ("embed", "ff")),
+        "wo": spec((d_ff, d), ("ff", "embed")),
+    }
+
+
+def mlp(params, x):
+    dt = x.dtype
+    h = jnp.einsum("...d,df->...f", x, params["wi"].astype(dt))
+    g = jnp.einsum("...d,df->...f", x, params["wg"].astype(dt))
+    h = jax.nn.silu(g) * h
+    return jnp.einsum("...f,fd->...d", h, params["wo"].astype(dt))
+
+
+# ---------------------------------------------------------------- attention
+def attention_specs(cfg: ArchConfig, cross: bool = False):
+    d, h, kv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv, cfg.d_head
+    s = {
+        "wq": spec((d, h, dh), ("embed", "heads", "head_dim")),
+        "wk": spec((d, kv, dh), ("embed", "kv_heads", "head_dim")),
+        "wv": spec((d, kv, dh), ("embed", "kv_heads", "head_dim")),
+        "wo": spec((h, dh, d), ("heads", "head_dim", "embed")),
+    }
+    if cfg.qk_norm:
+        s["q_norm"] = spec((dh,), ("head_dim",), init="ones")
+        s["k_norm"] = spec((dh,), ("head_dim",), init="ones")
+    if cross:
+        s["gate"] = spec((1,), (None,), init="zeros")  # tanh-gated cross-attn
+    return s
+
+
+def chunked_sdpa(q, k, v, q_pos, k_pos, causal, window, chunk=4096,
+                 use_kernel=False):
+    """Exact softmax attention, blocked over QUERIES with static triangular
+    key prefixes.
+
+    Each query block attends over a statically-sliced key prefix
+    [lo, hi) — for causal self-attention block i needs only keys
+    < (i+1)*chunk, and a local window additionally bounds lo.  This (a)
+    skips the upper-triangle work entirely (~2x causal FLOPs/traffic),
+    (b) keeps peak memory at O(chunk * T') per block, and (c) avoids the
+    per-key-chunk accumulator churn a k-scan formulation pays in HBM
+    (see EXPERIMENTS.md §Perf iteration 2).
+
+    q: (B,S,G,rep,dh); k/v: (B,T,G,dh); *_pos absolute positions with
+    negative k_pos marking invalid (unwritten cache) slots.  The static
+    triangular slicing applies when positions are the canonical aranges
+    (train/prefill); decode (S=1) and cache/cross paths use the full range.
+
+    On TPU the same contraction runs as the Pallas flash-attention kernel
+    (repro.kernels.flash_attention); this is its jnp oracle and the CPU /
+    dry-run path.
+    """
+    if use_kernel:
+        from repro.kernels import flash_ops
+
+        return flash_ops.flash_attention(q, k, v, q_pos, k_pos, causal, window)
+
+    B, Sq, G, rep, dh = q.shape
+    T = k.shape[1]
+    dt = q.dtype
+    scale = 1.0 / math.sqrt(dh)
+    # static triangular slicing is valid only for aligned self-attention
+    aligned = causal and Sq == T
+    qb = min(chunk, Sq)
+    nq = -(-Sq // qb)
+
+    def block(qs, qp, lo, hi):
+        ks, vs, kp = k[:, lo:hi], v[:, lo:hi], k_pos[:, lo:hi]
+        logits = jnp.einsum("bsgrd,btgd->bsgrt", qs, ks).astype(jnp.float32)
+        logits = logits * scale
+        valid = kp[:, None, :] >= 0
+        if causal:
+            valid = valid & (kp[:, None, :] <= qp[:, :, None])
+        if window:
+            valid = valid & (kp[:, None, :] > qp[:, :, None] - window)
+        logits = jnp.where(valid[:, :, None, None, :], logits, -1e30)
+        m = logits.max(axis=-1, keepdims=True)
+        p = jnp.exp(logits - m)
+        l = p.sum(axis=-1, keepdims=True)
+        out = jnp.einsum("bsgrt,btgd->bsgrd", (p / jnp.maximum(l, 1e-30)
+                                               ).astype(dt), vs)
+        return out
+
+    if nq == 1:
+        return block(q, q_pos, 0, T).astype(dt)
+    outs = []
+    for i in range(nq):
+        s0, s1 = i * qb, min((i + 1) * qb, Sq)
+        if aligned:
+            hi = s1
+            lo = max(0, s0 - window) if window else 0
+        else:
+            lo, hi = 0, T
+        outs.append(block(q[:, s0:s1], q_pos[:, s0:s1], lo, hi))
+    return jnp.concatenate(outs, axis=1).astype(dt)
+
+
+def _ring_positions(T: int, idx, B: int):
+    """Absolute position stored in each ring-cache slot after writes < idx.
+
+    Slot j holds the largest p < idx with p % T == j (or -1 if unwritten).
+    """
+    j = jnp.arange(T)
+    last = idx - 1 - ((idx - 1 - j) % T)
+    pos = jnp.where(last >= 0, last, -1)
+    return jnp.broadcast_to(pos[None], (B, T))
+
+
+def _project_qkv(cfg, params, x, src, dt):
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(dt))
+    k = jnp.einsum("btd,dgk->btgk", src, params["wk"].astype(dt))
+    v = jnp.einsum("btd,dgk->btgk", src, params["wv"].astype(dt))
+    if cfg.qk_norm:
+        q = rms_norm(q, params["q_norm"])
+        k = rms_norm(k, params["k_norm"])
+    return q, k, v
+
+
+def _finish(cfg, params, out, dt):
+    B, S = out.shape[:2]
+    out = out.reshape(B, S, cfg.n_heads, cfg.d_head)
+    y = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(dt))
+    if "gate" in params:  # gated cross-attention (vision layers)
+        y = jnp.tanh(params["gate"].astype(dt)) * y
+    return y
+
+
+def attention(
+    cfg: ArchConfig,
+    params,
+    x,                    # (B, S, D)
+    q_pos,                # (B, S) absolute positions
+    cache=None,           # ring cache {'k','v','index'}; None = no cache
+    mask_kind="causal",
+    use_kernel=False,
+):
+    """Self-attention: train/prefill (S tokens) or decode (S==1, cache).
+
+    Caches are RING buffers of length kvlen (= window for local attention,
+    max_len otherwise): slot = position % kvlen.  Prefill fills the ring
+    from the computed k/v tail; decode writes one slot and attends over the
+    ring with positions reconstructed per slot.
+    """
+    dt = x.dtype
+    B, S, _ = x.shape
+    kvh, dh = cfg.n_kv, cfg.d_head
+    rep = cfg.n_heads // kvh
+    q, k, v = _project_qkv(cfg, params, x, x, dt)
+    q = apply_rope(q, q_pos, cfg.rope_theta)
+    k = apply_rope(k, q_pos, cfg.rope_theta)
+    win = cfg.window if mask_kind == "causal" else 0
+    causal = mask_kind == "causal"
+    qg = q.reshape(B, S, kvh, rep, dh)
+
+    if cache is None:
+        out = chunked_sdpa(qg, k, v, q_pos, q_pos, causal, win,
+                           use_kernel=use_kernel)
+        return _finish(cfg, params, out, dt), None
+
+    T = cache["k"].shape[1]
+    idx = cache["index"]
+    if S > 1:
+        # prefill: attend in-context, then write the k/v tail into the ring
+        out = chunked_sdpa(qg, k, v, q_pos, q_pos, causal, win,
+                           use_kernel=use_kernel)
+        tail = min(T, S)
+        kt, vt = k[:, -tail:], v[:, -tail:]
+        pt = q_pos[:, -tail:]                          # absolute positions
+        slot = pt[0] % T                               # (tail,) same per batch
+        ck = cache["k"].at[:, slot].set(kt)
+        cv = cache["v"].at[:, slot].set(vt)
+        new_cache = {"k": ck, "v": cv, "index": idx + S}
+        return _finish(cfg, params, out, dt), new_cache
+
+    # decode: write one slot, attend over the ring
+    slot = idx % T
+    ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, slot, axis=1)
+    cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, slot, axis=1)
+    k_pos = _ring_positions(T, idx + 1, B)
+    out = chunked_sdpa(qg, ck, cv, q_pos, k_pos, causal, win,
+                       use_kernel=use_kernel)
+    new_cache = {"k": ck, "v": cv, "index": idx + 1}
+    return _finish(cfg, params, out, dt), new_cache
+
+
+def cross_attention(
+    cfg: ArchConfig,
+    params,
+    x,                    # (B, S, D) text stream
+    img,                  # (B, Timg, D) modality tokens, or None if cached
+    kv_cache=None,        # {'k','v'} static cross cache
+):
+    """Gated cross-attention onto (stub) modality tokens.
+
+    Returns (y, {'k','v'}) so serving computes the image k/v once at prefill
+    and reuses it for every decode step.
+    """
+    dt = x.dtype
+    B, S, _ = x.shape
+    kvh, dh = cfg.n_kv, cfg.d_head
+    rep = cfg.n_heads // kvh
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(dt))
+    if cfg.qk_norm:
+        q = rms_norm(q, params["q_norm"])
+    if kv_cache is not None and img is None:
+        k, v = kv_cache["k"], kv_cache["v"]
+    else:
+        k = jnp.einsum("btd,dgk->btgk", img, params["wk"].astype(dt))
+        v = jnp.einsum("btd,dgk->btgk", img, params["wv"].astype(dt))
+        if cfg.qk_norm:
+            k = rms_norm(k, params["k_norm"])
+    T = k.shape[1]
+    qg = q.reshape(B, S, kvh, rep, dh)
+    q_pos = jnp.zeros((B, S), jnp.int32)
+    k_pos = jnp.zeros((B, T), jnp.int32)
+    out = chunked_sdpa(qg, k, v, q_pos, k_pos, causal=False, window=0)
+    return _finish(cfg, params, out, dt), {"k": k, "v": v}
+
+
+# ---------------------------------------------------------------- MLA
+def mla_specs(cfg: ArchConfig):
+    d, h = cfg.d_model, cfg.n_heads
+    dh, dr, dkv, dq = cfg.d_head, cfg.rope_head_dim, cfg.kv_lora, cfg.q_lora
+    return {
+        "wdq": spec((d, dq), ("embed", "q_lora")),
+        "q_norm": spec((dq,), ("q_lora",), init="ones"),
+        "wuq": spec((dq, h, dh + dr), ("q_lora", "heads", "head_dim")),
+        "wdkv": spec((d, dkv), ("embed", "kv_lora")),
+        "kv_norm": spec((dkv,), ("kv_lora",), init="ones"),
+        "wuk": spec((dkv, h, dh), ("kv_lora", "heads", "head_dim")),
+        "wuv": spec((dkv, h, dh), ("kv_lora", "heads", "head_dim")),
+        "wkr": spec((d, dr), ("embed", "rope_dim")),
+        "wo": spec((h, dh, d), ("heads", "head_dim", "embed")),
+    }
+
+
+def mla_attention(cfg: ArchConfig, params, x, q_pos, cache=None):
+    """DeepSeek-V2 multi-head latent attention.
+
+    The KV cache stores only the compressed latent c_kv (``kv_lora`` wide)
+    plus the shared rope key — the architecture's whole point.  Decode uses
+    the *absorbed-matrix* form (q contracted with W_uk, context expanded
+    with W_uv after the softmax) so the latent is never re-expanded to
+    per-head keys; train/prefill expand once and run the chunked
+    online-softmax path.
+    """
+    dt = x.dtype
+    B, S, _ = x.shape
+    h, dh, dr = cfg.n_heads, cfg.d_head, cfg.rope_head_dim
+    cq = rms_norm(jnp.einsum("bsd,de->bse", x, params["wdq"].astype(dt)),
+                  params["q_norm"])
+    q = jnp.einsum("bse,ehk->bshk", cq, params["wuq"].astype(dt))
+    q_nope, q_rope = q[..., :dh], q[..., dh:]
+    q_rope = apply_rope(q_rope, q_pos, cfg.rope_theta)
+
+    ckv = rms_norm(jnp.einsum("bsd,de->bse", x, params["wdkv"].astype(dt)),
+                   params["kv_norm"])
+    k_rope_new = apply_rope(
+        jnp.einsum("bsd,dr->bsr", x, params["wkr"].astype(dt))[:, :, None, :],
+        q_pos, cfg.rope_theta,
+    )[:, :, 0, :]                                          # (B,S,dr)
+
+    if cache is not None and S == 1:
+        # ---- absorbed-matrix decode ----
+        idx = cache["index"]
+        ckv_all = jax.lax.dynamic_update_slice_in_dim(cache["ckv"], ckv, idx, 1)
+        kr_all = jax.lax.dynamic_update_slice_in_dim(
+            cache["krope"], k_rope_new, idx, 1
+        )
+        new_cache = {"ckv": ckv_all, "krope": kr_all, "index": idx + 1}
+        T = ckv_all.shape[1]
+        q_lat = jnp.einsum("bshk,ehk->bshe", q_nope, params["wuk"].astype(dt))
+        scale = 1.0 / math.sqrt(dh + dr)
+        logits = (
+            jnp.einsum("bshe,bte->bhst", q_lat, ckv_all)
+            + jnp.einsum("bshr,btr->bhst", q_rope, kr_all)
+        ).astype(jnp.float32) * scale
+        k_pos = jnp.arange(T)[None, :]
+        mask = k_pos <= q_pos[:, :1]                       # (B, T)
+        logits = jnp.where(mask[:, None, None, :], logits, -1e30)
+        probs = jax.nn.softmax(logits, axis=-1).astype(dt)
+        ctx = jnp.einsum("bhst,bte->bshe", probs, ckv_all)
+        out = jnp.einsum("bshe,ehk->bshk", ctx, params["wuv"].astype(dt))
+        y = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(dt))
+        return y, new_cache
+
+    # ---- train / prefill: expand once, chunked online softmax ----
+    if cache is not None:
+        idx = cache["index"]
+        ckv_all = jax.lax.dynamic_update_slice_in_dim(cache["ckv"], ckv, idx, 1)
+        kr_all = jax.lax.dynamic_update_slice_in_dim(
+            cache["krope"], k_rope_new, idx, 1
+        )
+        new_cache = {"ckv": ckv_all, "krope": kr_all, "index": idx + S}
+    else:
+        new_cache = None
+    k_nope = jnp.einsum("bse,ehk->bshk", ckv, params["wuk"].astype(dt))
+    v = jnp.einsum("bse,ehk->bshk", ckv, params["wuv"].astype(dt))
+    v = jnp.pad(v, ((0, 0), (0, 0), (0, 0), (0, dr)))      # pad v to dh+dr
+    k_full = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope_new[:, :, None, :], (B, S, h, dr))],
+        axis=-1,
+    )
+    q_full = jnp.concatenate([q_nope, q_rope], axis=-1)[:, :, :, None, :]
+    out = chunked_sdpa(q_full, k_full, v, q_pos, q_pos, causal=True, window=0)
+    out = out.reshape(B, S, h, dh + dr)[..., :dh]
+    y = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(dt))
+    return y, new_cache
+
+
+# ---------------------------------------------------------------- MoE
+def moe_specs(cfg: ArchConfig):
+    d, e, f = cfg.d_model, cfg.n_experts, cfg.d_ff_expert
+    s = {
+        "router": spec((d, e), ("embed", "experts"), scale=0.1),
+        "wi": spec((e, d, f), ("experts", "embed", "ff")),
+        "wg": spec((e, d, f), ("experts", "embed", "ff")),
+        "wo": spec((e, f, d), ("experts", "ff", "embed")),
+    }
+    if cfg.n_shared:
+        s["shared"] = mlp_specs(cfg, cfg.n_shared * cfg.d_ff_expert)
+    return s
+
+
+def moe(cfg: ArchConfig, params, x):
+    """Token-choice top-k MoE, sort-based dispatch, hierarchical groups.
+
+    Tokens are split into ``cfg.moe_groups`` groups aligned with the
+    data-parallel batch sharding; routing, sorting and capacity dropping
+    happen independently per group, so the token->buffer scatter never
+    crosses shards.  The grouped buffer (G, E, C_g, D) is then resharded
+    from group-sharded to expert-sharded for the expert matmuls — exactly
+    one all-to-all each way over the fabric (the paper's All-to-All
+    kernel), instead of the full-buffer all-reduce a global scatter would
+    induce (see EXPERIMENTS.md §Perf iteration 1).
+
+    Returns (y, aux_loss).  C_g = ceil(T_g * top_k / E * capacity_factor)
+    per group; overflow dropped with weight renormalization.
+    """
+    from repro.sharding.partitioning import constraint
+
+    dt = x.dtype
+    B, S, D = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    T = B * S
+    G = cfg.moe_groups if T % max(cfg.moe_groups, 1) == 0 else 1
+    Tg = T // G
+    xf = x.reshape(G, Tg, D)
+    xf = constraint(xf, "moe_group", None, "embed")
+    logits = jnp.einsum("gtd,de->gte", xf, params["router"].astype(dt))
+    logits = logits.astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, K)                  # (G, Tg, K)
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+
+    # load-balancing aux loss (Switch-style)
+    density = jnp.mean(
+        jax.nn.one_hot(top_e[..., 0], E, dtype=jnp.float32), axis=(0, 1)
+    )
+    density_prob = jnp.mean(probs, axis=(0, 1))
+    aux = jnp.sum(density * density_prob) * E * cfg.router_aux_coef
+
+    C = int(math.ceil(Tg * K / E * cfg.capacity_factor))
+    flat_e = top_e.reshape(G, Tg * K)
+    order = jnp.argsort(flat_e, axis=-1)                    # per-group sort
+    sorted_e = jnp.take_along_axis(flat_e, order, axis=-1)
+    ar = jnp.arange(Tg * K)[None]
+    seg_start = jax.vmap(
+        lambda se: jnp.searchsorted(se, jnp.arange(E), side="left")
+    )(sorted_e)                                             # (G, E)
+    pos = ar - jnp.take_along_axis(seg_start, sorted_e, axis=-1)
+    keep = pos < C
+    tok = order // K                                        # (G, Tg*K)
+    slot = jnp.where(keep, sorted_e * C + pos, E * C)       # OOB drop row
+
+    def scatter_group(xg, slotg, tokg):
+        buf = jnp.zeros((E * C + 1, D), dtype=dt)
+        return buf.at[slotg].set(xg[tokg], mode="drop")[: E * C]
+
+    buf = jax.vmap(scatter_group)(xf, slot, tok)            # (G, E*C, D)
+    buf = buf.reshape(G, E, C, D)
+    buf = constraint(buf, "moe_group", None, None, "embed")
+    # reshard group->expert: the expert-parallel all-to-all
+    buf = constraint(buf, None, "experts", None, "embed")
+
+    h = jnp.einsum("gecd,edf->gecf", buf, params["wi"].astype(dt))
+    g = jnp.einsum("gecd,edf->gecf", buf, params["wg"].astype(dt))
+    yexp = jnp.einsum("gecf,efd->gecd", jax.nn.silu(g) * h,
+                      params["wo"].astype(dt))
+    yexp = constraint(yexp, None, "experts", None, "embed")
+    # reshard back expert->group: the return all-to-all
+    yexp = constraint(yexp, "moe_group", None, None, "embed")
+
+    yflat = yexp.reshape(G, E * C, D)
+    w = jnp.take_along_axis(top_p.reshape(G, Tg * K), order, axis=-1)
+
+    def combine_group(yg, slotg, tokg, keepg, wg):
+        gathered = jnp.where(
+            keepg[:, None], yg[jnp.minimum(slotg, E * C - 1)], 0.0
+        )
+        return jnp.zeros((Tg, D), dtype=dt).at[tokg].add(
+            gathered * wg[:, None].astype(dt)
+        )
+
+    y = jax.vmap(combine_group)(yflat, slot, tok, keep, w)
+    y = constraint(y, "moe_group", None, "embed")
+
+    if cfg.n_shared:
+        y = y + mlp(params["shared"], xf)
+    return y.reshape(B, S, D), aux

@@ -1,0 +1,93 @@
+"""Minimal pure-JAX parameter/module system (no flax/optax in this stack).
+
+A model is described by a pytree of :class:`ParamSpec` leaves.  Specs carry
+shape, dtype, an initializer, and *logical axis names*; the sharding layer
+(repro.sharding.partitioning) maps logical axes to mesh axes.  Three
+materializations of one spec tree:
+
+  * ``init(rng, specs)``            -> concrete parameter pytree
+  * ``abstract(specs)``             -> jax.ShapeDtypeStruct pytree (dry-run)
+  * ``tree_shardings(specs, rules, mesh)`` -> NamedSharding pytree
+
+Stacked (scan-over-layers) parameters simply carry a leading "layers"
+logical axis.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: tuple[int, ...]
+    axes: tuple[str | None, ...]       # logical axis name per dim
+    init: str = "normal"               # normal | zeros | ones | scaled
+    scale: float = 1.0
+    dtype: str = "float32"             # master weights fp32; compute casts
+
+    def __post_init__(self):
+        if len(self.shape) != len(self.axes):
+            raise ValueError(f"shape {self.shape} vs axes {self.axes}")
+
+
+def spec(shape, axes, init="normal", scale=1.0, dtype="float32") -> ParamSpec:
+    return ParamSpec(tuple(int(s) for s in shape), tuple(axes), init, scale, dtype)
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def _init_leaf(key, s: ParamSpec):
+    if s.init == "zeros":
+        return jnp.zeros(s.shape, s.dtype)
+    if s.init == "ones":
+        return jnp.ones(s.shape, s.dtype)
+    if s.init == "normal":
+        fan_in = s.shape[0] if len(s.shape) > 1 else max(s.shape[-1], 1)
+        std = s.scale / math.sqrt(fan_in)
+        return (jax.random.normal(key, s.shape, jnp.float32) * std).astype(s.dtype)
+    if s.init == "scaled":  # plain std = scale
+        return (jax.random.normal(key, s.shape, jnp.float32) * s.scale).astype(s.dtype)
+    raise ValueError(f"unknown init {s.init!r}")
+
+
+def init(rng, specs):
+    """Materialize a spec tree into parameters (deterministic per path)."""
+    leaves, treedef = jax.tree_util.tree_flatten(specs, is_leaf=is_spec)
+    keys = jax.random.split(rng, len(leaves))
+    vals = [_init_leaf(k, s) for k, s in zip(keys, leaves)]
+    return jax.tree_util.tree_unflatten(treedef, vals)
+
+
+def abstract(specs):
+    """ShapeDtypeStruct stand-ins — lower/compile without allocation."""
+    return jax.tree_util.tree_map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, jnp.dtype(s.dtype)),
+        specs,
+        is_leaf=is_spec,
+    )
+
+
+def count_params(specs) -> int:
+    leaves = jax.tree_util.tree_leaves(specs, is_leaf=is_spec)
+    return int(sum(np.prod(s.shape) for s in leaves))
+
+
+def tree_bytes(specs) -> int:
+    leaves = jax.tree_util.tree_leaves(specs, is_leaf=is_spec)
+    return int(
+        sum(np.prod(s.shape) * jnp.dtype(s.dtype).itemsize for s in leaves)
+    )
+
+
+def map_with_specs(fn: Callable[[ParamSpec, Any], Any], specs, tree):
+    """tree_map over (spec, value) pairs with specs as leaf guide."""
+    return jax.tree_util.tree_map(fn, specs, tree, is_leaf=lambda x: is_spec(x))

@@ -1,0 +1,110 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin) in pure JAX.
+
+The Real-Gated Linear Recurrent Unit:
+
+    r_t = sigmoid(x_t W_a + b_a)            (recurrence gate)
+    i_t = sigmoid(x_t W_x + b_x)            (input gate)
+    log a_t = -c * softplus(Lambda) * r_t   (c = 8)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Training/prefill uses ``jax.lax.associative_scan`` (log-depth on TPU);
+decode is the O(1) recurrence — with the 1:2 local-attention pattern this
+is why recurrentgemma runs the ``long_500k`` cell.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ArchConfig
+from repro.models.module import spec
+
+C_FACTOR = 8.0
+
+
+def rglru_specs(cfg: ArchConfig):
+    d, w = cfg.d_model, cfg.lru_dim
+    return {
+        "in_x": spec((d, w), ("embed", "lru")),
+        "in_gate": spec((d, w), ("embed", "lru")),
+        "conv_w": spec((cfg.conv_width, w), (None, "lru"), scale=0.5),
+        "conv_b": spec((w,), ("lru",), init="zeros"),
+        "wa": spec((w, w), ("lru", "lru2"), scale=0.5),
+        "ba": spec((w,), ("lru",), init="zeros"),
+        "wx": spec((w, w), ("lru", "lru2"), scale=0.5),
+        "bx": spec((w,), ("lru",), init="zeros"),
+        "lam": spec((w,), ("lru",), init="ones"),  # Lambda (pre-softplus)
+        "out": spec((w, d), ("lru", "embed")),
+    }
+
+
+def _rglru_gates(params, x, dt):
+    r = jax.nn.sigmoid(
+        jnp.einsum("bsw,wv->bsv", x, params["wa"].astype(dt)) + params["ba"].astype(dt)
+    )
+    i = jax.nn.sigmoid(
+        jnp.einsum("bsw,wv->bsv", x, params["wx"].astype(dt)) + params["bx"].astype(dt)
+    )
+    log_a = (
+        -C_FACTOR
+        * jax.nn.softplus(params["lam"].astype(jnp.float32))[None, None, :]
+        * r.astype(jnp.float32)
+    )
+    a = jnp.exp(log_a)
+    gated_x = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2 * log_a), 1e-12)) * (
+        i.astype(jnp.float32) * x.astype(jnp.float32)
+    )
+    return a, gated_x
+
+
+def rglru_block(cfg: ArchConfig, params, x, cache=None):
+    """x: (B,S,D).  cache = {'conv': (B,W-1,lru), 'state': (B,lru)}."""
+    from repro.models.ssm import _causal_conv
+
+    dt = x.dtype
+    B, S, _ = x.shape
+    xb = jnp.einsum("bsd,dw->bsw", x, params["in_x"].astype(dt))
+    gate = jax.nn.gelu(jnp.einsum("bsd,dw->bsw", x, params["in_gate"].astype(dt)))
+    xb, conv_cache = _causal_conv(
+        xb, params["conv_w"].astype(dt), params["conv_b"].astype(dt),
+        None if cache is None else cache["conv"],
+    )
+    a, gx = _rglru_gates(params, xb, dt)
+
+    if S == 1 and cache is not None:
+        h = cache["state"].astype(jnp.float32) * a[:, 0] + gx[:, 0]
+        y = h[:, None, :]
+        new_state = h
+    else:
+        h0 = None if cache is None else cache["state"]
+        if h0 is not None:
+            # fold the carried state in as a virtual step 0
+            a0 = jnp.ones_like(a[:, :1])
+            a = jnp.concatenate([a0, a], axis=1)
+            gx = jnp.concatenate([h0.astype(jnp.float32)[:, None], gx], axis=1)
+
+        def combine(c1, c2):
+            a1, b1 = c1
+            a2, b2 = c2
+            return a1 * a2, b1 * a2 + b2
+
+        aa, hh = jax.lax.associative_scan(combine, (a, gx), axis=1)
+        y = hh if h0 is None else hh[:, 1:]
+        new_state = y[:, -1]
+
+    y = (y.astype(dt)) * gate
+    out = jnp.einsum("bsw,wd->bsd", y, params["out"].astype(dt))
+    new_cache = (
+        {"conv": conv_cache, "state": new_state.astype(jnp.float32)}
+        if cache is not None
+        else None
+    )
+    return out, new_cache
+
+
+def init_rglru_cache(cfg: ArchConfig, batch: int, dtype):
+    return {
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, cfg.lru_dim), dtype),
+        "state": jnp.zeros((batch, cfg.lru_dim), jnp.float32),
+    }

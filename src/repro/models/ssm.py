@@ -1,0 +1,180 @@
+"""Mamba-2 (state-space duality) blocks in pure JAX.
+
+Implements the SSD chunked algorithm (Dao & Gu, 2024): intra-chunk
+quadratic attention-like term + inter-chunk linear state recurrence, as a
+``lax.scan`` over chunks carrying the (B, H, P, N) state.  Decode is the
+O(1) single-token state update — the reason mamba2 runs the ``long_500k``
+cell that full-attention architectures must skip.
+
+The per-chunk einsum chain is also provided as a Pallas TPU kernel
+(repro.kernels.ssd_scan) for the train/prefill hot path; this module is the
+reference implementation and the decode path.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ArchConfig
+from repro.models.module import spec
+
+
+def ssm_specs(cfg: ArchConfig):
+    d = cfg.d_model
+    di = cfg.d_inner_ssm
+    H = cfg.ssm_heads
+    N = cfg.ssm_state
+    conv_dim = di + 2 * N  # x, B, C go through the causal conv
+    return {
+        "in_proj": spec((d, 2 * di + 2 * N + H), ("embed", "ssm_in")),
+        "conv_w": spec((cfg.conv_width, conv_dim), (None, "ssm_conv"), scale=0.5),
+        "conv_b": spec((conv_dim,), ("ssm_conv",), init="zeros"),
+        "A_log": spec((H,), ("ssm_heads",), init="ones"),
+        "D": spec((H,), ("ssm_heads",), init="ones"),
+        "dt_bias": spec((H,), ("ssm_heads",), init="zeros"),
+        "norm_w": spec((di,), ("ssm_inner",), init="ones"),
+        "out_proj": spec((di, d), ("ssm_inner", "embed")),
+    }
+
+
+def _causal_conv(x, w, b, cache=None):
+    """Depthwise causal conv along S.  x: (B,S,C); w: (W,C); b: (C,)."""
+    W = w.shape[0]
+    if cache is None:
+        pad = jnp.zeros_like(x[:, : W - 1])
+    else:
+        pad = cache  # (B, W-1, C) previous inputs
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = jnp.zeros_like(x)
+    for i in range(W):
+        out = out + xp[:, i : i + x.shape[1]] * w[i]
+    new_cache = xp[:, -(W - 1) :] if W > 1 else xp[:, :0]
+    return out + b, new_cache
+
+
+def _segsum(log_a):
+    """(..., L) -> (..., L, L) lower-triangular cumulative sums."""
+    L = log_a.shape[-1]
+    x = jnp.cumsum(log_a, axis=-1)
+    # d[i, j] = sum_{k=j+1..i} log_a[k]  (0 on the diagonal)
+    d = x[..., :, None] - x[..., None, :]
+    mask = jnp.tril(jnp.ones((L, L), dtype=bool), k=0)
+    return jnp.where(mask, d, -jnp.inf)
+
+
+def ssd_chunked(x, dt, A, Bm, Cm, chunk: int, initial_state=None):
+    """SSD forward.
+
+    x: (B, S, H, P); dt: (B, S, H) positive; A: (H,) negative;
+    Bm, Cm: (B, S, N) single-group SSM input/output projections.
+    Returns (y, final_state) with state (B, H, P, N).
+    """
+    Bsz, S, H, P = x.shape
+    N = Bm.shape[-1]
+    L = chunk
+    assert S % L == 0, f"seq {S} not divisible by chunk {L}"
+    nc = S // L
+
+    # discretize
+    xb = (x * dt[..., None]).reshape(Bsz, nc, L, H, P)
+    dA = (dt * A[None, None, :]).reshape(Bsz, nc, L, H)     # log decay, <=0
+    Bc = Bm.reshape(Bsz, nc, L, N)
+    Cc = Cm.reshape(Bsz, nc, L, N)
+
+    # intra-chunk ("diagonal block"): attention-like with decay kernel
+    seg = _segsum(jnp.moveaxis(dA, -1, -2))                 # (B,nc,H,L,L)
+    decay_mat = jnp.exp(seg)
+    scores = jnp.einsum("bcln,bcmn->bclm", Cc, Bc)          # (B,nc,L,L)
+    y_diag = jnp.einsum(
+        "bclm,bchlm,bcmhp->bclhp", scores, decay_mat, xb
+    )
+
+    # chunk-local states to pass forward
+    cum = jnp.cumsum(dA, axis=2)                            # (B,nc,L,H)
+    decay_states = jnp.exp(cum[:, :, -1:, :] - cum)         # (B,nc,L,H)
+    states = jnp.einsum("bcln,bclh,bclhp->bchpn", Bc, decay_states, xb)
+    chunk_decay = jnp.exp(cum[:, :, -1, :])                 # (B,nc,H)
+
+    # inter-chunk recurrence
+    if initial_state is None:
+        initial_state = jnp.zeros((Bsz, H, P, N), dtype=x.dtype)
+
+    def scan_fn(h, inp):
+        st, dec = inp                                       # (B,H,P,N),(B,H)
+        h_out = h                                           # state entering chunk
+        h_next = h * dec[..., None, None] + st
+        return h_next, h_out
+
+    states_t = jnp.moveaxis(states, 1, 0)                   # (nc,B,H,P,N)
+    decay_t = jnp.moveaxis(chunk_decay, 1, 0)               # (nc,B,H)
+    final, h_in = jax.lax.scan(scan_fn, initial_state, (states_t, decay_t))
+    h_in = jnp.moveaxis(h_in, 0, 1)                         # (B,nc,H,P,N)
+
+    # contribution of the incoming state to each position
+    state_decay = jnp.exp(cum)                              # (B,nc,L,H)
+    y_off = jnp.einsum(
+        "bcln,bchpn,bclh->bclhp", Cc, h_in, state_decay
+    )
+    y = (y_diag + y_off).reshape(Bsz, S, H, P)
+    return y, final
+
+
+def ssm_block(cfg: ArchConfig, params, x, cache=None, use_kernel=False):
+    """Full mamba2 block.  cache = {'conv': (B,W-1,C), 'state': (B,H,P,N)}."""
+    dt_ = x.dtype
+    B, S, _ = x.shape
+    di, H, P, N = cfg.d_inner_ssm, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    proj = jnp.einsum("bsd,de->bse", x, params["in_proj"].astype(dt_))
+    z, xc, Bm, Cm, dt = jnp.split(
+        proj, [di, 2 * di, 2 * di + N, 2 * di + 2 * N], axis=-1
+    )
+    conv_in = jnp.concatenate([xc, Bm, Cm], axis=-1)
+    conv_out, conv_cache = _causal_conv(
+        conv_in, params["conv_w"].astype(dt_), params["conv_b"].astype(dt_),
+        None if cache is None else cache["conv"],
+    )
+    conv_out = jax.nn.silu(conv_out)
+    xc, Bm, Cm = jnp.split(conv_out, [di, di + N], axis=-1)
+    xh = xc.reshape(B, S, H, P)
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+
+    state0 = None if cache is None else cache["state"]
+    if S == 1:
+        # decode: exact single-token recurrence
+        h = state0 if state0 is not None else jnp.zeros((B, H, P, N), dt_)
+        dA = jnp.exp(dt[:, 0, :] * A[None, :])              # (B,H)
+        dBx = jnp.einsum(
+            "bn,bhp,bh->bhpn", Bm[:, 0], xh[:, 0], dt[:, 0]
+        )
+        h = h * dA[..., None, None].astype(dt_) + dBx.astype(dt_)
+        y = jnp.einsum("bn,bhpn->bhp", Cm[:, 0], h)[:, None]  # (B,1,H,P)
+        new_state = h
+    elif use_kernel:
+        from repro.kernels import ssd_ops
+
+        y, new_state = ssd_ops.ssd(xh, dt.astype(dt_), A.astype(dt_), Bm, Cm,
+                                   chunk=cfg.ssm_chunk)
+    else:
+        y, new_state = ssd_chunked(
+            xh, dt.astype(dt_), A.astype(dt_), Bm, Cm, chunk=min(cfg.ssm_chunk, S),
+            initial_state=state0,
+        )
+    y = y + params["D"].astype(dt_)[None, None, :, None] * xh
+    y = y.reshape(B, S, di)
+    from repro.models.layers import rms_norm
+
+    y = rms_norm(y * jax.nn.silu(z), params["norm_w"])
+    out = jnp.einsum("bse,ed->bsd", y, params["out_proj"].astype(dt_))
+    new_cache = {"conv": conv_cache, "state": new_state} if cache is not None else None
+    return out, new_cache
+
+
+def init_ssm_cache(cfg: ArchConfig, batch: int, dtype):
+    di, H, P, N = cfg.d_inner_ssm, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    conv_dim = di + 2 * N
+    return {
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, conv_dim), dtype),
+        "state": jnp.zeros((batch, H, P, N), dtype),
+    }

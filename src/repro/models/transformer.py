@@ -1,0 +1,404 @@
+"""Model assembly for every architecture family.
+
+A model is a list of *scan groups*: each group is a block-spec pytree with
+a leading ``layers`` axis and a body function, executed with ``lax.scan``
+(+ optional remat) so the compiled HLO stays one-block-sized regardless of
+depth.  Families map onto groups as:
+
+  dense / audio / moe : 1 group, block = (attn|mla) + (mlp|moe)
+  ssm                 : 1 group, block = mamba2 mixer (no MLP, per spec)
+  hybrid              : (rec, rec, local-attn) superblocks + recurrent tail
+  vlm                 : (4 self + 1 gated cross) superblocks
+
+Three entry points: ``train_loss`` (next-token CE + router aux),
+``prefill`` (build decode caches), ``decode_step`` (one token with cache).
+Decode caches are stacked per group along the layer axis and scanned
+together with the parameters.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ArchConfig
+from repro.models import layers as L
+from repro.models import rglru as R
+from repro.models import ssm as S
+from repro.models.module import spec, is_spec
+from repro.sharding.partitioning import constraint
+
+
+# --------------------------------------------------------------- group defs
+def _stack(specs_tree, n: int):
+    """Prepend a (n,)+'layers' axis to every ParamSpec leaf."""
+    return jax.tree_util.tree_map(
+        lambda s: dataclasses.replace(
+            s, shape=(n,) + s.shape, axes=("layers",) + s.axes
+        ),
+        specs_tree,
+        is_leaf=is_spec,
+    )
+
+
+def _dense_block_specs(cfg: ArchConfig):
+    return {
+        "ln1": L.norm_spec(cfg),
+        "attn": L.attention_specs(cfg),
+        "ln2": L.norm_spec(cfg),
+        "mlp": L.mlp_specs(cfg),
+    }
+
+
+def _moe_block_specs(cfg: ArchConfig):
+    return {
+        "ln1": L.norm_spec(cfg),
+        "attn": L.mla_specs(cfg) if cfg.kv_lora else L.attention_specs(cfg),
+        "ln2": L.norm_spec(cfg),
+        "moe": L.moe_specs(cfg),
+    }
+
+
+def _ssm_block_specs(cfg: ArchConfig):
+    return {"ln1": L.norm_spec(cfg), "ssm": S.ssm_specs(cfg)}
+
+
+def _hybrid_super_specs(cfg: ArchConfig):
+    one_mlp = lambda: L.mlp_specs(cfg)
+    return {
+        "rec1": {"ln1": L.norm_spec(cfg), "rec": R.rglru_specs(cfg),
+                 "ln2": L.norm_spec(cfg), "mlp": one_mlp()},
+        "rec2": {"ln1": L.norm_spec(cfg), "rec": R.rglru_specs(cfg),
+                 "ln2": L.norm_spec(cfg), "mlp": one_mlp()},
+        "attn": {"ln1": L.norm_spec(cfg), "attn": L.attention_specs(cfg),
+                 "ln2": L.norm_spec(cfg), "mlp": one_mlp()},
+    }
+
+
+def _vlm_super_specs(cfg: ArchConfig):
+    selfb = lambda: _dense_block_specs(cfg)
+    return {
+        "self": _stack(selfb(), cfg.cross_attn_every),
+        "cross": {
+            "ln1": L.norm_spec(cfg),
+            "attn": L.attention_specs(cfg, cross=True),
+            "ln2": L.norm_spec(cfg),
+            "mlp": L.mlp_specs(cfg),
+        },
+    }
+
+
+def groups_of(cfg: ArchConfig) -> list[tuple[str, int, Any]]:
+    """[(group_name, repeats, block_spec_tree_unstacked)]"""
+    if cfg.family in ("dense", "audio"):
+        return [("dense", cfg.n_layers, _dense_block_specs(cfg))]
+    if cfg.family == "moe":
+        return [("moe", cfg.n_layers, _moe_block_specs(cfg))]
+    if cfg.family == "ssm":
+        return [("ssm", cfg.n_layers, _ssm_block_specs(cfg))]
+    if cfg.family == "hybrid":
+        k = cfg.rglru_pattern + 1                       # 2 rec + 1 attn
+        supers, tail = divmod(cfg.n_layers, k)
+        groups = [("hybrid", supers, _hybrid_super_specs(cfg))]
+        for i in range(tail):
+            groups.append(
+                (f"hybrid_tail{i}", 1,
+                 {"ln1": L.norm_spec(cfg), "rec": R.rglru_specs(cfg),
+                  "ln2": L.norm_spec(cfg), "mlp": L.mlp_specs(cfg)})
+            )
+        return groups
+    if cfg.family == "vlm":
+        assert cfg.n_layers % (cfg.cross_attn_every + 1) == 0
+        supers = cfg.n_layers // (cfg.cross_attn_every + 1)
+        return [("vlm", supers, _vlm_super_specs(cfg))]
+    raise ValueError(cfg.family)
+
+
+def model_specs(cfg: ArchConfig):
+    d, v = cfg.d_model, cfg.vocab_padded
+    specs: dict[str, Any] = {}
+    if cfg.frame_input or cfg.family == "audio":
+        specs["frame_proj"] = spec((d, d), ("embed", "embed2"))
+    specs["embed"] = spec((v, d), ("vocab", "embed"), scale=1.0)
+    specs["groups"] = {
+        name: _stack(tree, n) for name, n, tree in groups_of(cfg)
+    }
+    specs["final_norm"] = L.norm_spec(cfg)
+    if not cfg.tie_embeddings:
+        specs["head"] = spec((d, v), ("embed", "vocab"))
+    return specs
+
+
+# ------------------------------------------------------------- block bodies
+def _residual_attn_mlp(cfg, p, x, pos, cache, mask_kind):
+    h, cache = L.attention(cfg, p["attn"], L.norm(cfg, x, p["ln1"]), pos,
+                           cache=cache, mask_kind=mask_kind)
+    x = x + h
+    x = x + L.mlp(p["mlp"], L.norm(cfg, x, p["ln2"]))
+    return constraint(x, "batch", "seq", "embed"), cache
+
+
+def _dense_body(cfg, p, x, pos, cache, mode):
+    mask = "bidirectional" if cfg.encoder_only else "causal"
+    return _residual_attn_mlp(cfg, p, x, pos, cache, mask) + (jnp.float32(0),)
+
+
+def _moe_body(cfg, p, x, pos, cache, mode):
+    xn = L.norm(cfg, x, p["ln1"])
+    if cfg.kv_lora:
+        h, cache = L.mla_attention(cfg, p["attn"], xn, pos, cache=cache)
+    else:
+        h, cache = L.attention(cfg, p["attn"], xn, pos, cache=cache)
+    x = x + h
+    y, aux = L.moe(cfg, p["moe"], L.norm(cfg, x, p["ln2"]))
+    x = x + y
+    return constraint(x, "batch", "seq", "embed"), cache, aux
+
+
+def _ssm_body(cfg, p, x, pos, cache, mode):
+    h, cache = S.ssm_block(cfg, p["ssm"], L.norm(cfg, x, p["ln1"]), cache=cache)
+    return constraint(x + h, "batch", "seq", "embed"), cache, jnp.float32(0)
+
+
+def _rec_sub(cfg, p, x, cache):
+    h, cache = R.rglru_block(cfg, p["rec"], L.norm(cfg, x, p["ln1"]), cache=cache)
+    x = x + h
+    x = x + L.mlp(p["mlp"], L.norm(cfg, x, p["ln2"]))
+    return x, cache
+
+
+def _hybrid_body(cfg, p, x, pos, cache, mode):
+    c = cache or {"rec1": None, "rec2": None, "attn": None}
+    x, c1 = _rec_sub(cfg, p["rec1"], x, c["rec1"])
+    x, c2 = _rec_sub(cfg, p["rec2"], x, c["rec2"])
+    x, ca = _residual_attn_mlp(cfg, p["attn"], x, pos, c["attn"], "causal")
+    new_c = {"rec1": c1, "rec2": c2, "attn": ca} if cache is not None else None
+    return x, new_c, jnp.float32(0)
+
+
+def _hybrid_tail_body(cfg, p, x, pos, cache, mode):
+    x, c = _rec_sub(cfg, p, x, cache)
+    return constraint(x, "batch", "seq", "embed"), c, jnp.float32(0)
+
+
+def _vlm_body(cfg, p, x, pos, cache, mode, img=None):
+    c = cache or {"self": None, "cross": None}
+
+    def self_scan(carry, xs):
+        xx = carry
+        if cache is None:
+            pp, cc = xs, None
+        else:
+            pp, cc = xs
+        xx, cc2 = _residual_attn_mlp(cfg, pp, xx, pos, cc, "causal")
+        return xx, cc2
+
+    xs = p["self"] if cache is None else (p["self"], c["self"])
+    x, new_self = jax.lax.scan(self_scan, x, xs)
+    # gated cross-attention onto the (stub) image tokens; the image k/v is
+    # computed at train/prefill and reused as a static cache during decode.
+    xn = L.norm(cfg, x, p["cross"]["ln1"])
+    h, kv = L.cross_attention(
+        cfg, p["cross"]["attn"], xn,
+        img=img, kv_cache=None if cache is None else c["cross"],
+    )
+    new_cross = kv if cache is not None else None
+    x = x + h
+    x = x + L.mlp(p["cross"]["mlp"], L.norm(cfg, x, p["cross"]["ln2"]))
+    new_c = {"self": new_self, "cross": new_cross} if cache is not None else None
+    return constraint(x, "batch", "seq", "embed"), new_c, jnp.float32(0)
+
+
+_BODIES: dict[str, Callable] = {
+    "dense": _dense_body,
+    "moe": _moe_body,
+    "ssm": _ssm_body,
+    "hybrid": _hybrid_body,
+    "vlm": _vlm_body,
+}
+
+
+def _body_for(name: str) -> Callable:
+    if name.startswith("hybrid_tail"):
+        return _hybrid_tail_body
+    return _BODIES[name.split("_")[0] if name not in _BODIES else name]
+
+
+# ------------------------------------------------------------ cache builders
+def init_caches(cfg: ArchConfig, batch: int, max_len: int, dtype=None):
+    """Stacked decode caches per group (layer axis leading)."""
+    dt = jnp.dtype(dtype or cfg.dtype)
+
+    def attn_cache():
+        kvlen = min(max_len, cfg.window) if cfg.window else max_len
+        return {
+            "k": jnp.zeros((batch, kvlen, cfg.n_kv, cfg.d_head), dt),
+            "v": jnp.zeros((batch, kvlen, cfg.n_kv, cfg.d_head), dt),
+            "index": jnp.int32(0),
+        }
+
+    def mla_cache():
+        return {
+            "ckv": jnp.zeros((batch, max_len, cfg.kv_lora), dt),
+            "krope": jnp.zeros((batch, max_len, cfg.rope_head_dim), dt),
+            "index": jnp.int32(0),
+        }
+
+    def one(name):
+        if name.startswith("dense") or name == "vlm_self":
+            return attn_cache()
+        if name == "moe":
+            return mla_cache() if cfg.kv_lora else attn_cache()
+        if name == "ssm":
+            return S.init_ssm_cache(cfg, batch, dt)
+        raise ValueError(name)
+
+    caches = {}
+    for gname, n, _tree in groups_of(cfg):
+        if gname == "ssm":
+            caches[gname] = _stack_tree(one("ssm"), n)
+        elif gname in ("dense", "moe"):
+            caches[gname] = _stack_tree(one(gname), n)
+        elif gname == "hybrid":
+            unit = {
+                "rec1": R.init_rglru_cache(cfg, batch, dt),
+                "rec2": R.init_rglru_cache(cfg, batch, dt),
+                "attn": attn_cache(),
+            }
+            caches[gname] = _stack_tree(unit, n)
+        elif gname.startswith("hybrid_tail"):
+            caches[gname] = _stack_tree(R.init_rglru_cache(cfg, batch, dt), n)
+        elif gname == "vlm":
+            unit = {
+                "self": _stack_tree(attn_cache(), cfg.cross_attn_every),
+                "cross": {
+                    "k": jnp.zeros(
+                        (batch, cfg.frontend_tokens, cfg.n_kv, cfg.d_head), dt
+                    ),
+                    "v": jnp.zeros(
+                        (batch, cfg.frontend_tokens, cfg.n_kv, cfg.d_head), dt
+                    ),
+                },
+            }
+            caches[gname] = _stack_tree(unit, n)
+    return caches
+
+
+def _stack_tree(tree, n):
+    return jax.tree_util.tree_map(
+        lambda x: jnp.broadcast_to(x[None], (n,) + x.shape), tree
+    )
+
+
+# ----------------------------------------------------------------- forward
+def _run_groups(cfg, params, x, pos, caches, mode, img=None, remat=True):
+    from repro.sharding.partitioning import (
+        constrain_params_by_specs,
+        gather_rule_set,
+    )
+
+    aux_total = jnp.float32(0)
+    new_caches = {} if caches is not None else None
+    gather_rs = gather_rule_set()
+    for gname, n, _tree in groups_of(cfg):
+        body = _body_for(gname)
+        gp = params["groups"][gname]
+        gc = None if caches is None else caches[gname]
+
+        def scan_body(carry, xs, _tree=_tree):
+            xx, aux = carry
+            pp = xs[0]
+            cc = xs[1] if gc is not None else None
+            if gather_rs is not None:
+                # weight-gathering: constrain the layer's weight slice to
+                # TP-only sharding at use time (§Perf iteration 5)
+                pp = constrain_params_by_specs(_tree, pp, gather_rs)
+            kwargs = {"img": img} if gname == "vlm" else {}
+            xx, cc2, a = body(cfg, pp, xx, pos, cc, mode, **kwargs)
+            return (xx, aux + a), cc2
+
+        if remat and mode == "train":
+            scan_body = jax.checkpoint(
+                scan_body, policy=jax.checkpoint_policies.nothing_saveable
+            )
+        xs = (gp,) if gc is None else (gp, gc)
+        (x, aux_total), cs = jax.lax.scan(scan_body, (x, aux_total), xs)
+        if new_caches is not None:
+            new_caches[gname] = cs
+    return x, aux_total, new_caches
+
+
+def embed_inputs(cfg: ArchConfig, params, batch):
+    dt = jnp.dtype(cfg.dtype)
+    if cfg.frame_input or cfg.family == "audio":
+        x = batch["frames"].astype(dt)
+        x = jnp.einsum("bsd,de->bse", x, params["frame_proj"].astype(dt))
+    else:
+        x = params["embed"].astype(dt)[batch["tokens"]]
+    return constraint(x, "batch", "seq", "embed")
+
+
+def unembed(cfg: ArchConfig, params, x):
+    dt = x.dtype
+    w = (
+        params["embed"].T if cfg.tie_embeddings else params["head"]
+    ).astype(dt)
+    logits = jnp.einsum("bsd,dv->bsv", x, w)
+    if cfg.vocab_padded != cfg.vocab:  # mask padded vocab columns
+        logits = jnp.where(
+            jnp.arange(cfg.vocab_padded) < cfg.vocab, logits, -1e30
+        )
+    return constraint(logits, "batch", "seq", "vocab")
+
+
+def forward_train(cfg: ArchConfig, params, batch, remat=True):
+    x = embed_inputs(cfg, params, batch)
+    B, Sq = x.shape[:2]
+    pos = jnp.broadcast_to(jnp.arange(Sq)[None], (B, Sq))
+    img = batch.get("image_embeds")
+    if img is not None:
+        img = img.astype(x.dtype)
+    x, aux, _ = _run_groups(cfg, params, x, pos, None, "train", img, remat)
+    x = L.norm(cfg, x, params["final_norm"])
+    return unembed(cfg, params, x), aux
+
+
+def train_loss(cfg: ArchConfig, params, batch, remat=True):
+    logits, aux = forward_train(cfg, params, batch, remat)
+    labels = batch["labels"]
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    ll = jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    mask = (labels >= 0).astype(jnp.float32)
+    loss = -(ll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+    return loss + aux, {"ce": loss, "aux": aux}
+
+
+def prefill(cfg: ArchConfig, params, batch, max_len: int):
+    """Run the prompt, returning (logits_last, caches)."""
+    x = embed_inputs(cfg, params, batch)
+    B, Sq = x.shape[:2]
+    pos = jnp.broadcast_to(jnp.arange(Sq)[None], (B, Sq))
+    caches = init_caches(cfg, B, max_len)
+    img = batch.get("image_embeds")
+    if img is not None:
+        img = img.astype(x.dtype)
+    x, _aux, caches = _run_groups(cfg, params, x, pos, caches, "prefill", img,
+                                  remat=False)
+    x = L.norm(cfg, x, params["final_norm"])
+    return unembed(cfg, params, x[:, -1:]), caches
+
+
+def decode_step(cfg: ArchConfig, params, tokens, caches, index):
+    """One decode step.  tokens: (B, 1); index: scalar position."""
+    dt = jnp.dtype(cfg.dtype)
+    x = params["embed"].astype(dt)[tokens]
+    B = x.shape[0]
+    pos = jnp.full((B, 1), index, dtype=jnp.int32)
+    x, _aux, caches = _run_groups(cfg, params, x, pos, caches, "decode",
+                                  remat=False)
+    x = L.norm(cfg, x, params["final_norm"])
+    return unembed(cfg, params, x), caches

@@ -1,0 +1,1 @@
+from repro.runtime.fault_tolerance import FleetRuntime, StragglerMonitor  # noqa: F401

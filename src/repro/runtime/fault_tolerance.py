@@ -1,0 +1,191 @@
+"""Fleet runtime: fault tolerance, elastic rescale, straggler mitigation.
+
+The allocation functions of the paper are the *repair policy*: on endpoint
+failure the runtime asks the JobAllocator for a replacement partition over
+the surviving endpoints, re-places the mesh (fabric.placement), and resumes
+from the last committed checkpoint.  When no full-size partition survives,
+the job shrinks elastically to the largest mesh that still fits (halving
+the ``data`` axis), re-lowering the step and resharding the restored state.
+
+Hardware failure itself is simulated (we have one CPU); everything above
+the failure *signal* — detection bookkeeping, reallocation, checkpoint
+restore, mesh rebuild, straggler statistics — is the real production code
+path and is exercised by tests/test_runtime.py.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+
+from repro.core.allocation import JobAllocator
+from repro.core.hyperx import HyperX
+from repro.fabric.placement import HyperXPlacement, default_fleet, place_job
+
+
+# ----------------------------------------------------------- stragglers
+class StragglerMonitor:
+    """Per-step wall-time statistics with outlier flagging.
+
+    On a real fleet the per-host step times come from the coordination
+    service; here the train loop feeds (host, seconds) samples.  A host is
+    a straggler when its step time exceeds ``threshold`` x the rolling
+    median; persistent stragglers (>= ``evict_after`` flags) are proposed
+    for eviction, which the FleetRuntime treats like a failure (the
+    standard large-fleet mitigation).
+    """
+
+    def __init__(self, threshold: float = 1.8, window: int = 32,
+                 evict_after: int = 3):
+        self.threshold = threshold
+        self.window = window
+        self.evict_after = evict_after
+        self.samples: dict[int, list[float]] = {}
+        self.flags: dict[int, int] = {}
+
+    def record(self, host: int, seconds: float) -> bool:
+        s = self.samples.setdefault(host, [])
+        s.append(seconds)
+        del s[: -self.window]
+        med = float(np.median([x[-1] for x in self.samples.values()]))
+        is_straggler = seconds > self.threshold * med and len(self.samples) > 1
+        if is_straggler:
+            self.flags[host] = self.flags.get(host, 0) + 1
+        else:
+            self.flags[host] = 0
+        return is_straggler
+
+    def evictions(self) -> list[int]:
+        return [h for h, c in self.flags.items() if c >= self.evict_after]
+
+
+# ------------------------------------------------------------- runtime
+@dataclasses.dataclass
+class JobState:
+    placement: HyperXPlacement
+    mesh_shape: tuple
+    generation: int = 0     # bumped on every repair/rescale (re-lower key)
+
+
+class FleetRuntime:
+    """Owns the fleet allocator and one job's placement lifecycle."""
+
+    def __init__(
+        self,
+        mesh_shape: tuple[int, ...],
+        axis_names: tuple[str, ...],
+        strategy: str = "diagonal",
+        topo: HyperX | None = None,
+    ):
+        size = int(np.prod(mesh_shape))
+        self.topo = topo or default_fleet(size)
+        self.allocator = JobAllocator(self.topo, strategy=strategy)
+        self.axis_names = tuple(axis_names)
+        self.strategy = strategy
+        part = self.allocator.allocate(size=size)
+        placement = self._placement_from(part.endpoints, mesh_shape)
+        self.job = JobState(placement=placement, mesh_shape=tuple(mesh_shape))
+        self.events: list[dict] = []
+
+    def _placement_from(self, endpoints: np.ndarray, mesh_shape) -> HyperXPlacement:
+        return HyperXPlacement(
+            topo=self.topo,
+            strategy=self.strategy,
+            mesh_shape=tuple(mesh_shape),
+            axis_names=self.axis_names[-len(mesh_shape):],
+            endpoints=np.asarray(endpoints).reshape(mesh_shape),
+        )
+
+    # -------------------------------------------------------- failures
+    def fail(self, endpoints) -> dict:
+        """Report failed endpoints; repair or shrink.  Returns the event."""
+        endpoints = np.atleast_1d(np.asarray(endpoints))
+        affected = self.allocator.fail_endpoints(endpoints)
+        touched = np.intersect1d(self.job.placement.endpoints, endpoints).size
+        event = {
+            "time": time.time(),
+            "failed": endpoints.tolist(),
+            "job_affected": bool(touched),
+            "action": "none",
+        }
+        if touched:
+            event["action"] = self._repair()
+        self.events.append(event)
+        return event
+
+    def _release_current(self):
+        for jid in list(self.allocator.jobs):
+            self.allocator.release(jid)
+
+    def _try_allocate(self, size: int):
+        """Primary strategy, then stochastic fallbacks over the fragmented
+        fleet (the random allocations exist exactly for this: any free
+        switch/endpoint set works)."""
+        try:
+            return self.allocator.allocate(size=size), self.strategy
+        except RuntimeError:
+            pass
+        for seed in range(16):
+            for strat in ("random_switch", "random_endpoint"):
+                try:
+                    old_seed = self.allocator.seed
+                    self.allocator.seed = 1000 + seed
+                    try:
+                        return self.allocator.allocate(size=size, strategy=strat), strat
+                    finally:
+                        self.allocator.seed = old_seed
+                except RuntimeError:
+                    continue
+        # last resort: any free endpoints at all (arbitrary placement)
+        free = np.flatnonzero(self.allocator.free)
+        if len(free) >= size:
+            from repro.core.allocation import Partition
+
+            eps = free[:size]
+            self.allocator.free[eps] = False
+            part = Partition(
+                strategy="scavenge", topo=self.topo, job_id=-1, size=size,
+                endpoints=eps.astype(np.int64),
+                switches=np.unique(eps // self.topo.concentration),
+            )
+            self.allocator.jobs[self.allocator._next_job] = part
+            self.allocator._next_job += 1
+            return part, "scavenge"
+        raise RuntimeError(f"no {size} free endpoints")
+
+    def _repair(self) -> str:
+        """Try same-size reallocation; elastically halve ``data`` if needed."""
+        size = int(np.prod(self.job.mesh_shape))
+        self._release_current()
+        shape = list(self.job.mesh_shape)
+        while True:
+            try:
+                part, strat = self._try_allocate(int(np.prod(shape)))
+                self.job = JobState(
+                    placement=self._placement_from(part.endpoints, tuple(shape)),
+                    mesh_shape=tuple(shape),
+                    generation=self.job.generation + 1,
+                )
+                tag = (
+                    "reallocated"
+                    if int(np.prod(shape)) == size
+                    else f"rescaled_to_{tuple(shape)}"
+                )
+                return tag if strat == self.strategy else f"{tag}:{strat}"
+            except RuntimeError:
+                # shrink the data axis (first axis by convention)
+                if shape[0] == 1:
+                    raise RuntimeError(
+                        "fleet cannot host the job at any size"
+                    ) from None
+                shape[0] //= 2
+
+    # --------------------------------------------------------- queries
+    @property
+    def placement(self) -> HyperXPlacement:
+        return self.job.placement
+
+    def healthy_devices(self) -> int:
+        return int(np.prod(self.job.mesh_shape))

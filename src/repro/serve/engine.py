@@ -1,0 +1,51 @@
+"""Batched serving engine: prefill + jitted greedy decode loop.
+
+The engine owns jitted ``prefill`` and ``decode_step`` closures; requests
+are served in fixed-size batches (padding short prompts left-aligned is
+omitted — synthetic prompts are equal length, as in the dry-run shapes).
+``decode_32k`` / ``long_500k`` cells lower exactly ``engine.decode_fn``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ArchConfig
+from repro.models import transformer as M
+
+
+class ServeEngine:
+    def __init__(self, cfg: ArchConfig, params, max_len: int = 2048):
+        if cfg.encoder_only:
+            raise ValueError(f"{cfg.name} is encoder-only; no decode serving")
+        self.cfg = cfg
+        self.params = params
+        self.max_len = max_len
+        self.prefill_fn = jax.jit(
+            functools.partial(M.prefill, cfg, max_len=max_len)
+        )
+        self.decode_fn = jax.jit(functools.partial(M.decode_step, cfg))
+
+    def generate(self, batch: dict, steps: int, greedy: bool = True, seed: int = 0):
+        """Generate ``steps`` tokens for a batch of equal-length prompts."""
+        prompts = batch["tokens"]
+        B, S = prompts.shape
+        assert S + steps <= self.max_len
+        logits, caches = self.prefill_fn(self.params, batch)
+        key = jax.random.PRNGKey(seed)
+        out = []
+        tok = None
+        for t in range(steps):
+            if greedy:
+                tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+            else:
+                key, sub = jax.random.split(key)
+                tok = jax.random.categorical(sub, logits[:, -1])[:, None].astype(
+                    jnp.int32
+                )
+            out.append(tok)
+            logits, caches = self.decode_fn(self.params, tok, caches, S + t)
+        return jnp.concatenate(out, axis=1)

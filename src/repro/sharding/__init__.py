@@ -1,0 +1,7 @@
+from repro.sharding.partitioning import (  # noqa: F401
+    RULE_SETS,
+    activation_mesh,
+    constraint,
+    logical_to_pspec,
+    tree_shardings,
+)

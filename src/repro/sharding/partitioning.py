@@ -1,0 +1,175 @@
+"""Logical-axis sharding: ParamSpec axes -> mesh PartitionSpecs.
+
+Rule sets map logical axis names (what model code declares) onto mesh axis
+names (what the launcher builds).  Two standard sets:
+
+  * ``base``  — DP over (pod, data); TP over model (heads / ff / experts /
+    vocab).  Parameters replicated across DP.
+  * ``fsdp``  — additionally shards parameters and optimizer state over
+    ``data`` along the embed dimension (ZeRO-3 style); XLA turns the
+    gradient all-reduce into reduce-scatter + all-gather pairs.
+
+Activation sharding constraints are applied through :func:`constraint`,
+which consults a context-local mesh set by :func:`activation_mesh` — model
+code stays mesh-agnostic and runs unchanged without any mesh (smoke tests).
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.module import ParamSpec, is_spec
+
+# logical axis -> mesh axis (None = replicated)
+_BASE = {
+    "batch": ("pod", "data"),
+    "vocab": "model",
+    "embed": None,
+    "ff": "model",
+    "heads": "model",
+    "kv_heads": "model",
+    "head_dim": None,
+    "experts": "model",
+    "moe_group": ("pod", "data"),
+    "seq": None,
+    "layers": None,
+    "q_lora": None,
+    "kv_lora": None,
+    "rope_dim": None,
+    "ssm_in": "model",
+    "ssm_conv": "model",
+    "ssm_inner": "model",
+    "ssm_heads": "model",
+    "lru": "model",
+    "lru2": None,
+    "cache_batch": ("pod", "data"),
+    "cache_len": None,
+    # sequence-parallel alternative for very long contexts
+    "seq_sp": "model",
+}
+
+_FSDP = dict(_BASE)
+_FSDP.update({"embed": "data"})
+
+RULE_SETS = {"base": _BASE, "fsdp": _FSDP}
+
+
+def logical_to_pspec(axes, rules, mesh_axes, shape=None, mesh_sizes=None) -> P:
+    """Map logical axis names to a PartitionSpec on this mesh.
+
+    When ``shape``/``mesh_sizes`` are given, a mesh axis is only assigned
+    to a dimension it divides (e.g. kv_heads=8 stays replicated on a
+    model=16 mesh instead of failing at lowering).
+    """
+    parts = []
+    used = set()
+    for i, ax in enumerate(axes):
+        m = rules.get(ax) if ax is not None else None
+        if m is None:
+            parts.append(None)
+            continue
+        cand = m if isinstance(m, tuple) else (m,)
+        sel = []
+        prod = 1
+        for c in cand:
+            if c not in mesh_axes or c in used:
+                continue
+            if shape is not None and mesh_sizes is not None:
+                if shape[i] % (prod * mesh_sizes[c]) != 0:
+                    continue
+            sel.append(c)
+            prod *= mesh_sizes[c] if mesh_sizes else 1
+        if not sel:
+            parts.append(None)
+        elif len(sel) == 1:
+            parts.append(sel[0])
+            used.add(sel[0])
+        else:
+            parts.append(tuple(sel))
+            used.update(sel)
+    return P(*parts)
+
+
+def tree_shardings(specs, mesh: Mesh, rule_set: str = "base"):
+    """NamedSharding pytree for a ParamSpec tree (divisibility-aware)."""
+    rules = RULE_SETS[rule_set]
+    mesh_axes = set(mesh.axis_names)
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    def one(s: ParamSpec):
+        return NamedSharding(
+            mesh, logical_to_pspec(s.axes, rules, mesh_axes, s.shape, sizes)
+        )
+
+    return jax.tree_util.tree_map(one, specs, is_leaf=is_spec)
+
+
+# ----------------------------------------------------------- activations
+_ctx = threading.local()
+_gather = threading.local()
+
+
+@contextlib.contextmanager
+def weight_gather(rule_set: str = "base"):
+    """Force per-layer weights to this rule set at USE time.
+
+    With FSDP-stored parameters, constraining the layer's weight slice to
+    the TP-only ('base') sharding inside the scan body makes GSPMD
+    all-gather the (small) weights once per layer instead of all-reducing
+    the (large) activation partial sums the data-sharded contraction would
+    otherwise produce (EXPERIMENTS.md §Perf iteration 5)."""
+    prev = getattr(_gather, "rs", None)
+    _gather.rs = rule_set
+    try:
+        yield
+    finally:
+        _gather.rs = prev
+
+
+def gather_rule_set():
+    return getattr(_gather, "rs", None)
+
+
+def constrain_params_by_specs(specs_tree, params_tree, rule_set: str):
+    """Apply per-leaf logical-axis constraints to a parameter subtree."""
+    state = getattr(_ctx, "state", None)
+    if state is None:
+        return params_tree
+    mesh, _ = state
+    rules = RULE_SETS[rule_set]
+    mesh_axes = set(mesh.axis_names)
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    def one(s, v):
+        pspec = logical_to_pspec(s.axes, rules, mesh_axes, v.shape, sizes)
+        return jax.lax.with_sharding_constraint(v, NamedSharding(mesh, pspec))
+
+    return jax.tree_util.tree_map(one, specs_tree, params_tree, is_leaf=is_spec)
+
+
+@contextlib.contextmanager
+def activation_mesh(mesh: Mesh | None, rule_set: str = "base"):
+    """Enable activation sharding constraints inside model forwards."""
+    prev = getattr(_ctx, "state", None)
+    _ctx.state = (mesh, RULE_SETS[rule_set]) if mesh is not None else None
+    try:
+        yield
+    finally:
+        _ctx.state = prev
+
+
+def constraint(x, *axes):
+    """with_sharding_constraint by logical axes; no-op without a mesh."""
+    state = getattr(_ctx, "state", None)
+    if state is None:
+        return x
+    mesh, rules = state
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    pspec = logical_to_pspec(
+        axes, rules, set(mesh.axis_names), x.shape, sizes
+    )
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, pspec))

@@ -1,0 +1,121 @@
+"""Allocation-function tests (paper Section 4) — invariants + properties."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.allocation import (
+    ALLOCATIONS,
+    JobAllocator,
+    allocate_partition,
+    endpoint_owner,
+    machine_partitions,
+)
+from repro.core.hyperx import HyperX
+from repro.core.properties import has_switch_locality
+
+STRATS = sorted(ALLOCATIONS)
+
+
+@pytest.mark.parametrize("strat", STRATS)
+@pytest.mark.parametrize("n", [4, 8])
+def test_partition_size_and_validity(strat, n):
+    topo = HyperX(n=n, q=2)
+    part = allocate_partition(strat, topo, 0)
+    assert len(part.endpoints) == n * n
+    assert (part.endpoints >= 0).all()
+    assert (part.endpoints < topo.num_endpoints).all()
+    # a partition never assigns two ranks to one endpoint
+    assert len(np.unique(part.endpoints)) == n * n
+
+
+@pytest.mark.parametrize("strat", STRATS)
+@pytest.mark.parametrize("n", [4, 8])
+def test_machine_partitions_disjoint(strat, n):
+    """The machine supports exactly n disjoint partitions (paper Sec. 4)."""
+    topo = HyperX(n=n, q=2)
+    parts = machine_partitions(strat, topo, num_jobs=n)
+    owner = endpoint_owner(parts, topo.num_endpoints)  # raises on overlap
+    assert (owner >= 0).all()  # n partitions of n^2 fill the n^3 machine
+
+
+@pytest.mark.parametrize("strat", STRATS)
+def test_switch_locality_matches_table1(strat):
+    topo = HyperX(n=8, q=2)
+    part = allocate_partition(strat, topo, 0, seed=3)
+    expected = ALLOCATIONS[strat].locality_aware
+    assert has_switch_locality(topo, part.endpoints) == expected
+
+
+@given(st.integers(0, 3), st.sampled_from(STRATS), st.integers(0, 99))
+@settings(max_examples=60, deadline=None)
+def test_allocation_job_property(job, strat, seed):
+    """Property: any job id / seed yields a valid in-range 64-endpoint block."""
+    topo = HyperX(n=8, q=2)
+    part = allocate_partition(strat, topo, job, seed=seed)
+    assert len(np.unique(part.endpoints)) == 64
+    assert part.endpoints.min() >= 0 and part.endpoints.max() < 512
+
+
+@pytest.mark.parametrize("strat", STRATS)
+def test_multiblock_jobs(strat):
+    """128/256-process jobs take unions of consecutive blocks (Sec. 6.2)."""
+    topo = HyperX(n=8, q=2)
+    for size, njobs in [(128, 4), (256, 2)]:
+        parts = machine_partitions(strat, topo, num_jobs=njobs, job_size=size)
+        endpoint_owner(parts, topo.num_endpoints)
+        for p in parts:
+            assert len(np.unique(p.endpoints)) == size
+
+
+def test_row_is_identity():
+    topo = HyperX(n=8, q=2)
+    part = allocate_partition("row", topo, 3)
+    sw = part.endpoints // topo.concentration
+    assert set(sw // 8) == {3}  # all in row 3
+
+
+def test_diagonal_one_switch_per_row_and_col():
+    topo = HyperX(n=8, q=2)
+    part = allocate_partition("diagonal", topo, 2)
+    sw = np.unique(part.endpoints // topo.concentration)
+    ys, xs = sw // 8, sw % 8
+    assert len(set(ys.tolist())) == 8 and len(set(xs.tolist())) == 8
+
+
+def test_full_spread_touches_every_switch():
+    topo = HyperX(n=8, q=2)
+    part = allocate_partition("full_spread", topo, 5)
+    assert len(np.unique(part.endpoints // 8)) == 64
+
+
+def test_rectangular_tiles_are_2x4():
+    topo = HyperX(n=8, q=2)
+    for p in range(8):
+        part = allocate_partition("rectangular", topo, p)
+        sw = np.unique(part.endpoints // 8)
+        ys, xs = np.unique(sw // 8), np.unique(sw % 8)
+        assert len(ys) == 2 and len(xs) == 4
+        assert np.all(np.diff(ys) == 1)  # contiguous rows
+        assert np.all(np.diff(xs) == 1)  # contiguous cols
+
+
+def test_job_allocator_lifecycle():
+    topo = HyperX(n=8, q=2)
+    alloc = JobAllocator(topo, strategy="diagonal")
+    jobs = [alloc.allocate() for _ in range(8)]
+    assert alloc.capacity() == 0
+    with pytest.raises(RuntimeError):
+        alloc.allocate()
+    alloc.release(jobs[3].job_id)
+    assert alloc.capacity() == 64
+    j2 = alloc.allocate()
+    assert len(j2.endpoints) == 64
+
+
+def test_job_allocator_failure_tracking():
+    topo = HyperX(n=8, q=2)
+    alloc = JobAllocator(topo, strategy="row")
+    j = alloc.allocate()
+    affected = alloc.fail_endpoints(j.endpoints[:2])
+    assert affected == [j.job_id]

@@ -1,0 +1,41 @@
+"""Collective-on-HyperX simulation: the cost model vs the real simulator."""
+
+import pytest
+
+from repro.fabric.collective_sim import (
+    compare_strategies_simulated,
+    simulate_axis_collective,
+)
+from repro.fabric.placement import place_job
+
+
+def test_one_collective_completes():
+    p = place_job("diagonal", (8, 8), ("data", "model"))
+    r = simulate_axis_collective(p, "model", "all_reduce", num_groups=2)
+    assert r["completed"]
+    assert r["makespan"] > 0
+    assert r["group_size"] == 8
+
+
+@pytest.mark.slow
+def test_simulated_ordering_matches_pb_prediction():
+    """Lesson 2, closed loop: the placement the PB cost model prices
+    cheapest for the model-axis all-to-all (full_spread: axis-PB 2.0 vs
+    0.25-0.5 for the others) is also MEASURED fastest under concurrent
+    groups on the cycle simulator.
+
+    Note the deliberate scope: at 16-rank axis-group granularity the
+    group-level PB differs from the job-level Table-1 values (e.g. a
+    Diagonal job's model-axis groups are 2 unaligned switches — all
+    2-hop), and the analytic model under-prices INTER-group contention
+    for such distance-2 placements (the paper's Lesson 3 regime); the
+    robust invariant asserted here is the cheapest-placement agreement,
+    which is what the launcher acts on.
+    """
+    out = compare_strategies_simulated(
+        mesh_shape=(16, 16), axis="model", kind="all_to_all", num_groups=8,
+        strategies=("row", "diagonal", "full_spread", "rectangular"),
+    )
+    assert all(r["completed"] for r in out)
+    # analytic cheapest == measured fastest
+    assert out[0]["strategy"] == "full_spread"

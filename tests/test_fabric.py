@@ -1,0 +1,91 @@
+"""Placement + collective cost model tests (the paper -> JAX bridge)."""
+
+import numpy as np
+import pytest
+
+from repro.core.hyperx import HyperX
+from repro.fabric.collective_model import (
+    CollectiveModel,
+    rank_strategies_for_schedule,
+    steps,
+    wire_bytes_per_chip,
+)
+from repro.fabric.placement import default_fleet, place_job
+
+
+def test_default_fleet():
+    assert default_fleet(512).n == 8
+    assert default_fleet(512).num_endpoints == 512
+    assert default_fleet(256).n == 8  # single pod = half the 8x8 machine
+    assert default_fleet(64).n == 4
+    with pytest.raises(ValueError):
+        default_fleet(0)
+
+
+@pytest.mark.parametrize("strat", ["row", "diagonal", "full_spread", "random_switch"])
+def test_place_job_covers_mesh(strat):
+    p = place_job(strat, (2, 16, 16), ("pod", "data", "model"))
+    assert p.endpoints.shape == (2, 16, 16)
+    assert len(np.unique(p.endpoints)) == 512  # bijective placement
+    order = p.device_order()
+    assert sorted(order.tolist()) == list(range(512))
+
+
+def test_single_pod_placement_disjoint_from_second_job():
+    p0 = place_job("diagonal", (16, 16), ("data", "model"), job_id=0)
+    p1 = place_job("diagonal", (16, 16), ("data", "model"), job_id=1)
+    assert not np.intersect1d(p0.endpoints, p1.endpoints).size
+
+
+def test_axis_groups_shape():
+    p = place_job("diagonal", (16, 16), ("data", "model"))
+    g = p.axis_groups("model")
+    assert g.shape == (16, 16)
+    g2 = p.axis_groups("data")
+    assert g2.shape == (16, 16)
+
+
+def test_wire_bytes_formulas():
+    assert wire_bytes_per_chip("all_reduce", 100.0, 4) == pytest.approx(150.0)
+    assert wire_bytes_per_chip("all_gather", 100.0, 4) == pytest.approx(300.0)
+    assert wire_bytes_per_chip("reduce_scatter", 100.0, 4) == pytest.approx(75.0)
+    assert wire_bytes_per_chip("all_to_all", 100.0, 4) == pytest.approx(75.0)
+    assert wire_bytes_per_chip("all_reduce", 100.0, 1) == 0.0
+    assert steps("all_reduce", 4) == 6
+
+
+def test_axis_pb_reflects_allocation_strategy():
+    """Lesson 2 carried into the mesh: Diagonal data-axis groups have more
+    fabric bandwidth than Row groups."""
+    row = CollectiveModel(place_job("row", (16, 16), ("data", "model")))
+    diag = CollectiveModel(place_job("diagonal", (16, 16), ("data", "model")))
+    # data-axis groups stride across the partition blocks
+    assert diag.axis_pb("data") > row.axis_pb("data") * 0.99
+
+
+def test_collective_cost_orders_strategies():
+    schedule = [("all_reduce", "data", 64e6), ("all_gather", "model", 8e6)]
+    ranked = rank_strategies_for_schedule((16, 16), ("data", "model"), schedule)
+    names = [r["strategy"] for r in ranked]
+    # high-PB strategies must price cheaper than the rectangular tessellation
+    assert names.index("diagonal") < names.index("rectangular")
+    assert names.index("full_spread") < names.index("rectangular")
+    for r in ranked:
+        assert r["total_s"] > 0
+
+
+def test_cost_monotone_in_bytes_and_groupsize():
+    m = CollectiveModel(place_job("diagonal", (16, 16), ("data", "model")))
+    c1 = m.cost("all_reduce", "model", 1e6)
+    c2 = m.cost("all_reduce", "model", 2e6)
+    assert c2.bandwidth_s > c1.bandwidth_s
+    assert c1.latency_s == c2.latency_s
+
+
+def test_multi_pod_placement_axis_properties():
+    p = place_job("diagonal", (2, 16, 16), ("pod", "data", "model"))
+    props = p.axis_properties("pod")
+    assert props["groups"] == 256 and props["group_size"] == 2
+    m = CollectiveModel(p)
+    c = m.cost("all_reduce", "pod", 1e6)
+    assert c.total_s > 0

@@ -1,0 +1,79 @@
+"""Topology-level tests (paper Section 2)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.hyperx import HyperX
+
+
+def test_sizes_2d_paper_machine():
+    hx = HyperX(n=8, q=2)
+    assert hx.num_switches == 64
+    assert hx.num_endpoints == 512
+    assert hx.num_links == 2 * 7 * 64 // 2  # q(n-1)n^q/2 = 448
+    assert hx.diameter == 2
+    assert hx.switch_radix == 2 * 7 + 8
+
+
+def test_average_distance_formula():
+    for n, q in [(4, 2), (8, 2), (4, 3)]:
+        hx = HyperX(n=n, q=q)
+        d = hx.distance_matrix()
+        avg = d.mean()  # includes self pairs, the paper's convention
+        assert avg == pytest.approx(q - q / n)
+        assert d.max() == q
+
+
+def test_coord_roundtrip():
+    hx = HyperX(n=5, q=3)
+    for s in range(hx.num_switches):
+        assert hx.switch_id(hx.switch_coords(s)) == s
+
+
+def test_links_bidirectional_unique():
+    hx = HyperX(n=4, q=2)
+    links = hx.link_array()
+    assert len(links) == hx.num_links
+    assert (links[:, 0] < links[:, 1]).all()
+    # every link joins switches at Hamming distance exactly 1
+    for a, b in links:
+        assert hx.distance(int(a), int(b)) == 1
+
+
+def test_neighbors_count():
+    hx = HyperX(n=6, q=2)
+    for s in [0, 7, 35]:
+        nbrs = hx.neighbors(s)
+        assert len(nbrs) == hx.q * (hx.n - 1)
+        assert len(set(nbrs)) == len(nbrs)
+
+
+@given(st.integers(2, 6), st.integers(1, 3), st.integers(0, 10**6), st.integers(0, 10**6))
+@settings(max_examples=50, deadline=None)
+def test_distance_is_hamming(n, q, a, b):
+    hx = HyperX(n=n, q=q)
+    s1, s2 = a % hx.num_switches, b % hx.num_switches
+    c1, c2 = hx.switch_coords(s1), hx.switch_coords(s2)
+    assert hx.distance(s1, s2) == sum(x != y for x, y in zip(c1, c2))
+
+
+def test_minimal_paths_count_and_validity():
+    hx = HyperX(n=4, q=2)
+    # unaligned in both dims -> 2 minimal paths of length 2
+    paths = hx.minimal_paths(hx.switch_id((0, 0)), hx.switch_id((2, 3)))
+    assert len(paths) == 2
+    for p in paths:
+        assert len(p) == 3
+        for u, v in zip(p, p[1:]):
+            assert hx.distance(u, v) == 1
+    # aligned -> single minimal path of length 1
+    paths = hx.minimal_paths(hx.switch_id((0, 0)), hx.switch_id((0, 3)))
+    assert len(paths) == 1 and len(paths[0]) == 2
+
+
+def test_endpoint_addressing():
+    hx = HyperX(n=4, q=2)
+    e = hx.endpoint_id((1, 2), 3)
+    assert hx.endpoint_switch(e) == hx.switch_id((1, 2))
+    assert hx.endpoint_offset(e) == 3

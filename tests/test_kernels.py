@@ -1,0 +1,130 @@
+"""Pallas kernel sweeps vs pure-jnp oracles (interpret mode on CPU).
+
+Per the deliverable: every kernel sweeps shapes/dtypes and asserts
+allclose against the ref.py oracle.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.flash_ops import flash_attention as flash_model_layout
+from repro.kernels.ssd_ops import ssd
+from repro.kernels.ssd_scan import ssd_scan
+
+RNG = jax.random.PRNGKey(42)
+
+
+def _tol(dtype):
+    return dict(atol=2e-2, rtol=2e-2) if dtype == jnp.bfloat16 else dict(
+        atol=2e-5, rtol=2e-5
+    )
+
+
+# ------------------------------------------------------------------- flash
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "B,H,KV,S,D,bq,bk",
+    [
+        (1, 2, 2, 128, 64, 64, 64),     # MHA
+        (2, 4, 2, 256, 64, 64, 64),     # GQA rep=2
+        (1, 8, 1, 128, 128, 128, 128),  # MQA, MXU-aligned dh
+        (1, 2, 2, 192, 32, 64, 64),     # S not a multiple of bq*? (192=3x64)
+    ],
+)
+@pytest.mark.parametrize("causal,window", [(True, 0), (False, 0), (True, 64)])
+def test_flash_attention_sweep(dtype, B, H, KV, S, D, bq, bk, causal, window):
+    ks = jax.random.split(RNG, 3)
+    q = jax.random.normal(ks[0], (B, H, S, D), dtype)
+    k = jax.random.normal(ks[1], (B, KV, S, D), dtype)
+    v = jax.random.normal(ks[2], (B, KV, S, D), dtype)
+    out = flash_attention(q, k, v, causal=causal, window=window, bq=bq, bk=bk)
+    want = ref.attention_ref(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(want, np.float32), **_tol(dtype)
+    )
+
+
+def test_flash_model_layout_matches_chunked_sdpa():
+    """ops.py wrapper (model layout, padding) vs the model's jnp path."""
+    from repro.models.layers import chunked_sdpa
+
+    B, S, G, rep, dh = 2, 96, 2, 3, 32
+    ks = jax.random.split(RNG, 3)
+    q = jax.random.normal(ks[0], (B, S, G, rep, dh), jnp.float32)
+    k = jax.random.normal(ks[1], (B, S, G, dh), jnp.float32)
+    v = jax.random.normal(ks[2], (B, S, G, dh), jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    want = chunked_sdpa(q, k, v, pos, pos, causal=True, window=0, chunk=32)
+    got = flash_model_layout(q, k, v, pos, pos, causal=True, window=0,
+                             bq=32, bk=32)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5,
+                               rtol=2e-5)
+
+
+# --------------------------------------------------------------------- ssd
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "B,S,H,P,N,chunk",
+    [
+        (1, 64, 2, 16, 32, 16),
+        (2, 128, 3, 32, 64, 32),
+        (1, 96, 1, 8, 16, 32),     # S multiple of chunk, odd dims
+    ],
+)
+def test_ssd_sweep(dtype, B, S, H, P, N, chunk):
+    ks = jax.random.split(RNG, 5)
+    x = (jax.random.normal(ks[0], (B, S, H, P)) * 0.5).astype(dtype)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H))).astype(dtype)
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.3).astype(dtype)
+    Bm = (jax.random.normal(ks[3], (B, S, N)) * 0.3).astype(dtype)
+    Cm = (jax.random.normal(ks[4], (B, S, N)) * 0.3).astype(dtype)
+    y, st = ssd_scan(x, dt, A, Bm, Cm, chunk=chunk)
+    yr, sr = ref.ssd_ref(x, dt, A, Bm, Cm)
+    tol = dict(atol=5e-2, rtol=5e-2) if dtype == jnp.bfloat16 else dict(
+        atol=5e-5, rtol=5e-4
+    )
+    np.testing.assert_allclose(
+        np.asarray(y, np.float32), np.asarray(yr, np.float32), **tol
+    )
+    np.testing.assert_allclose(
+        np.asarray(st.transpose(0, 1, 3, 2), np.float32),
+        np.asarray(sr, np.float32), **tol,
+    )
+
+
+def test_ssd_ops_padding_path():
+    """S not divisible by chunk goes through the zero-dt padding path."""
+    B, S, H, P, N = 1, 50, 2, 8, 16
+    ks = jax.random.split(RNG, 5)
+    x = jax.random.normal(ks[0], (B, S, H, P)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H)))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.3)
+    Bm = jax.random.normal(ks[3], (B, S, N)) * 0.3
+    Cm = jax.random.normal(ks[4], (B, S, N)) * 0.3
+    y, st = ssd(x, dt, A, Bm, Cm, chunk=16)
+    yr, sr = ref.ssd_ref(x, dt, A, Bm, Cm)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), atol=5e-5,
+                               rtol=5e-4)
+    np.testing.assert_allclose(np.asarray(st), np.asarray(sr), atol=5e-5,
+                               rtol=5e-4)
+
+
+def test_ssd_kernel_matches_model_reference():
+    """kernel == models.ssm.ssd_chunked == sequential recurrence."""
+    from repro.models.ssm import ssd_chunked
+
+    B, S, H, P, N = 2, 64, 2, 16, 32
+    ks = jax.random.split(RNG, 5)
+    x = jax.random.normal(ks[0], (B, S, H, P)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H)))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.3)
+    Bm = jax.random.normal(ks[3], (B, S, N)) * 0.3
+    Cm = jax.random.normal(ks[4], (B, S, N)) * 0.3
+    yk, _ = ssd(x, dt, A, Bm, Cm, chunk=16)
+    yc, _ = ssd_chunked(x, dt, A, Bm, Cm, chunk=16)
+    np.testing.assert_allclose(np.asarray(yk), np.asarray(yc), atol=5e-5,
+                               rtol=5e-4)

@@ -1,0 +1,89 @@
+"""Routing model tests (paper Section 2.2)."""
+
+import numpy as np
+import pytest
+
+from repro.core.allocation import allocate_partition
+from repro.core.hyperx import HyperX
+from repro.core.properties import partition_bandwidth
+from repro.core.routing import (
+    LinkSpace,
+    candidate_ports,
+    empirical_partition_bandwidth,
+    minimal_link_loads,
+    saturation_throughput,
+    uniform_partition_traffic,
+)
+
+TOPO = HyperX(n=8, q=2)
+
+
+def test_linkspace_roundtrip():
+    ls = LinkSpace(TOPO)
+    src = np.array([0, 5, 63])
+    dim = np.array([0, 1, 1])
+    val = np.array([3, 0, 7])
+    ids = ls.link_id(src, dim, val)
+    s, d, v = ls.decode(ids)
+    assert np.array_equal(s, src) and np.array_equal(d, dim) and np.array_equal(v, val)
+
+
+def test_minimal_link_loads_conserve_flow():
+    # total link load == sum of traffic * distance
+    rng = np.random.default_rng(0)
+    S = TOPO.num_switches
+    t = rng.random((S, S)) * (rng.random((S, S)) < 0.1)
+    np.fill_diagonal(t, 0)
+    load = minimal_link_loads(TOPO, t)
+    dist = TOPO.distance_matrix()
+    assert load.sum() == pytest.approx((t * dist).sum())
+
+
+def test_uniform_full_machine_saturates_at_one():
+    """A well-balanced HyperX sustains 1 phit/cycle/endpoint under uniform
+    random traffic with minimal routing (paper Sec. 2.1)."""
+    all_eps = np.arange(TOPO.num_endpoints)
+    t = uniform_partition_traffic(TOPO, all_eps)
+    assert saturation_throughput(TOPO, t) == pytest.approx(1.0, rel=0.02)
+
+
+@pytest.mark.parametrize("strat", ["row", "diagonal", "full_spread"])
+def test_empirical_pb_equals_analytic(strat):
+    part = allocate_partition(strat, TOPO, 0)
+    pb, _ = partition_bandwidth(TOPO, part.endpoints)
+    emp = empirical_partition_bandwidth(TOPO, part.endpoints)
+    assert emp == pytest.approx(pb, rel=0.05)
+
+
+def test_candidate_ports_min_mode():
+    ls = LinkSpace(TOPO)
+    cur = np.array([TOPO.switch_id((0, 0))])
+    dst = np.array([TOPO.switch_id((3, 5))])
+    der = np.array([2])
+    lid, is_min, valid = candidate_ports(ls, cur, dst, der, mode="min")
+    # exactly two minimal ports (one per unaligned dimension)
+    assert valid.sum() == 2
+    assert (valid == is_min).all()
+
+
+def test_candidate_ports_omniwar_deroutes():
+    ls = LinkSpace(TOPO)
+    cur = np.array([TOPO.switch_id((0, 0))])
+    dst = np.array([TOPO.switch_id((3, 5))])
+    lid, is_min, valid = candidate_ports(ls, cur, dst, np.array([2]), mode="omniwar")
+    # every non-self port in each unaligned dimension: 2 * (n - 1) = 14
+    assert valid.sum() == 2 * (TOPO.n - 1)
+    assert is_min[valid].sum() == 2
+    # without deroute budget, only minimal hops remain
+    _, _, valid0 = candidate_ports(ls, cur, dst, np.array([0]), mode="omniwar")
+    assert valid0.sum() == 2
+
+
+def test_candidate_ports_aligned_dimension_closed():
+    ls = LinkSpace(TOPO)
+    cur = np.array([TOPO.switch_id((0, 0))])
+    dst = np.array([TOPO.switch_id((0, 5))])  # aligned in dim 0
+    lid, is_min, valid = candidate_ports(ls, cur, dst, np.array([2]))
+    v = valid.reshape(TOPO.q, TOPO.n)
+    assert v[0].sum() == 0  # no moves in the aligned dimension (Omni-WAR rule)
+    assert v[1].sum() == TOPO.n - 1

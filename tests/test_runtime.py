@@ -1,0 +1,82 @@
+"""Fault-tolerance / elastic / straggler runtime tests."""
+
+import numpy as np
+import pytest
+
+from repro.runtime import FleetRuntime, StragglerMonitor
+
+
+def test_failure_triggers_reallocation():
+    rt = FleetRuntime((16, 16), ("data", "model"), strategy="diagonal")
+    before = rt.placement.endpoints.copy()
+    dead = int(before.reshape(-1)[0])
+    ev = rt.fail([dead])
+    assert ev["job_affected"] and ev["action"] == "reallocated"
+    after = rt.placement.endpoints
+    assert dead not in after
+    assert rt.job.generation == 1
+    assert after.shape == (16, 16)  # same-size repair succeeded
+
+
+def test_unrelated_failure_no_action():
+    rt = FleetRuntime((16, 16), ("data", "model"))
+    outside = np.setdiff1d(
+        np.arange(rt.topo.num_endpoints), rt.placement.endpoints
+    )
+    ev = rt.fail([int(outside[0])])
+    assert not ev["job_affected"] and ev["action"] == "none"
+    assert rt.job.generation == 0
+
+
+def test_fallback_strategy_repairs_fragmented_fleet():
+    """One dead endpoint per row defeats the Row allocation at every block
+    position; the runtime falls back to a stochastic strategy (the random
+    allocations exist exactly for fragmented fleets) at FULL size."""
+    rt = FleetRuntime((16, 16), ("data", "model"), strategy="row")
+    n = rt.topo.n
+    dead = [rt.topo.endpoint_id((r, 0), 0) for r in range(n)]
+    ev = rt.fail(dead)
+    assert ev["action"].startswith("reallocated:")  # fallback strategy used
+    assert rt.healthy_devices() == 256
+    assert not np.intersect1d(rt.placement.endpoints, dead).size
+
+
+def test_elastic_shrink_when_fleet_degraded():
+    """Killing most of the fleet forces an elastic halving of the data axis."""
+    rt = FleetRuntime((16, 16), ("data", "model"), strategy="diagonal")
+    dead = np.arange(300)  # 512 - 300 = 212 < 256 endpoints left
+    ev = rt.fail(dead)
+    assert "rescaled_to_(8, 16)" in ev["action"]
+    assert rt.healthy_devices() == 128
+    assert rt.job.generation == 1
+    assert not np.intersect1d(rt.placement.endpoints, dead).size
+
+
+def test_repair_restores_capacity():
+    rt = FleetRuntime((16, 16), ("data", "model"))
+    dead = [int(rt.placement.endpoints.reshape(-1)[0])]
+    rt.fail(dead)
+    cap_degraded = rt.allocator.capacity()
+    rt.allocator.repair_endpoints(np.asarray(dead))
+    assert rt.allocator.capacity() == cap_degraded + 1
+
+
+def test_straggler_monitor_flags_and_evicts():
+    mon = StragglerMonitor(threshold=1.5, evict_after=3)
+    for step in range(6):
+        for h in range(4):
+            t = 1.0 if h != 2 else 3.0  # host 2 is 3x slower
+            mon.record(h, t)
+    assert 2 in mon.evictions()
+    assert all(h not in mon.evictions() for h in (0, 1, 3))
+
+
+def test_straggler_recovers():
+    mon = StragglerMonitor(threshold=1.5, evict_after=3)
+    for _ in range(2):
+        for h in range(4):
+            mon.record(h, 3.0 if h == 2 else 1.0)
+    for _ in range(2):
+        for h in range(4):
+            mon.record(h, 1.0)  # host 2 back to normal
+    assert mon.evictions() == []

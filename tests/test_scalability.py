@@ -1,0 +1,45 @@
+"""Scalability math vs the paper's Section 2.3 concrete claims."""
+
+from repro.core.scalability import (
+    dragonfly_endpoints,
+    fat_tree_endpoints,
+    hyperx_cables_per_endpoint,
+    hyperx_endpoints,
+    hyperx_side_for_radix,
+    paper_examples,
+    scalability_table,
+)
+
+
+def test_paper_section_2_3_numbers():
+    ex = paper_examples()
+    assert ex["ft2_r64"] == 2048
+    assert ex["hx2_r64_side"] == 22
+    assert ex["hx2_r64"] == 10648
+    assert ex["ft2_r128"] == 8192
+    assert ex["hx2_r128_side"] == 43
+    assert ex["hx2_r128"] == 79507
+    assert ex["hx3_r64_side"] == 16
+    assert ex["hx3_r64"] == 65536  # 4096 switches x 16 endpoints
+
+
+def test_cables_per_endpoint_approaches_q_over_2():
+    assert hyperx_cables_per_endpoint(256, 2) < 1.0
+    assert 0.9 < hyperx_cables_per_endpoint(1024, 2) < 1.0
+    assert 1.4 < hyperx_cables_per_endpoint(1024, 3) < 1.5
+
+
+def test_2d_hyperx_beats_two_level_fat_tree():
+    for radix in (32, 64, 128):
+        assert hyperx_endpoints(radix, 2) > fat_tree_endpoints(radix, 2)
+
+
+def test_table_structure():
+    rows = scalability_table()
+    assert {r["radix"] for r in rows} >= {64, 128}
+    for r in rows:
+        assert r["hyperx_3d"] > r["hyperx_2d"] or r["radix"] < 24
+
+
+def test_dragonfly_trunking_reduces_size():
+    assert dragonfly_endpoints(64, trunking=4) < dragonfly_endpoints(64, trunking=1)

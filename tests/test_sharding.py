@@ -1,0 +1,99 @@
+"""Sharding-rule tests: logical axes -> PartitionSpecs, divisibility."""
+
+import jax
+import numpy as np
+import pytest
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.models.module import spec
+from repro.sharding.partitioning import (
+    RULE_SETS,
+    activation_mesh,
+    constraint,
+    logical_to_pspec,
+    tree_shardings,
+)
+
+
+def mesh2(d=2, m=4):
+    devs = np.array(jax.devices("cpu") * (d * m))[: d * m]
+    # single-device CPU: build a logical mesh over repeated device is not
+    # allowed; use a 1x1 mesh for API-level tests instead
+    return Mesh(np.array(jax.devices()[:1]).reshape(1, 1), ("data", "model"))
+
+
+def test_logical_to_pspec_basic():
+    rules = RULE_SETS["base"]
+    ps = logical_to_pspec(("vocab", "embed"), rules, {"data", "model"},
+                          (1024, 512), {"data": 4, "model": 8})
+    assert ps == P("model", None)
+
+
+def test_logical_to_pspec_divisibility_guard():
+    rules = RULE_SETS["base"]
+    # kv_heads = 8 on a model=16 mesh must stay replicated
+    ps = logical_to_pspec(("embed", "kv_heads", "head_dim"), rules,
+                          {"data", "model"}, (1024, 8, 128),
+                          {"data": 16, "model": 16})
+    assert ps == P(None, None, None)
+    # but kv_heads = 16 shards
+    ps = logical_to_pspec(("embed", "kv_heads", "head_dim"), rules,
+                          {"data", "model"}, (1024, 16, 128),
+                          {"data": 16, "model": 16})
+    assert ps == P(None, "model", None)
+
+
+def test_fsdp_shards_embed_over_data():
+    rules = RULE_SETS["fsdp"]
+    ps = logical_to_pspec(("embed", "ff"), rules, {"data", "model"},
+                          (8192, 28672), {"data": 16, "model": 16})
+    assert ps == P("data", "model")
+
+
+def test_batch_axis_uses_pod_and_data():
+    rules = RULE_SETS["base"]
+    ps = logical_to_pspec(("batch", "seq"), rules, {"pod", "data", "model"},
+                          (256, 4096), {"pod": 2, "data": 16, "model": 16})
+    assert ps == P(("pod", "data"), None)
+    # batch=1 cannot shard
+    ps = logical_to_pspec(("batch", "seq"), rules, {"pod", "data", "model"},
+                          (1, 4096), {"pod": 2, "data": 16, "model": 16})
+    assert ps == P(None, None)
+
+
+def test_duplicate_mesh_axis_not_reused():
+    rules = RULE_SETS["base"]
+    # experts and ff both want 'model': first dim that fits wins
+    ps = logical_to_pspec(("experts", "embed", "ff"), rules,
+                          {"data", "model"}, (160, 5120, 1536),
+                          {"data": 16, "model": 16})
+    assert ps == P("model", None, None)
+
+
+def test_tree_shardings_respects_shapes():
+    m = mesh2()
+    specs = {
+        "wq": spec((64, 8, 16), ("embed", "heads", "head_dim")),
+        "norm": spec((64,), ("embed",), init="ones"),
+    }
+    sh = tree_shardings(specs, m, "base")
+    assert sh["wq"].spec == P(None, "model", None) or sh["wq"].spec == P(
+        None, None, None
+    )  # 1x1 mesh: everything effectively replicated but spec is well-formed
+    assert isinstance(sh["norm"].spec, P)
+
+
+def test_constraint_noop_without_mesh():
+    import jax.numpy as jnp
+
+    x = jnp.ones((4, 8))
+    assert constraint(x, "batch", "embed") is x
+
+
+def test_constraint_applies_inside_context():
+    import jax.numpy as jnp
+
+    m = mesh2()
+    with activation_mesh(m, "base"):
+        y = constraint(jnp.ones((4, 8)), "batch", "embed")
+    assert y.shape == (4, 8)

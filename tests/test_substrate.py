@@ -1,0 +1,200 @@
+"""Substrate tests: optimizer, train step, data, checkpoint, serving."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.checkpoint import Checkpointer
+from repro.data.pipeline import SyntheticLM, make_batch_specs
+from repro.models import transformer as M
+from repro.models.module import init
+from repro.serve import ServeEngine
+from repro.train.optimizer import (
+    AdamWConfig,
+    adamw_init,
+    adamw_update,
+    cosine_schedule,
+    global_norm,
+)
+from repro.train.train_step import TrainSettings, build_train_step, loss_and_grads
+
+RNG = jax.random.PRNGKey(0)
+
+
+def small():
+    return get_config("qwen3_0_6b", reduced=True)
+
+
+# ---------------------------------------------------------------- optimizer
+def test_cosine_schedule_shape():
+    c = AdamWConfig(lr_peak=1e-3, warmup_steps=10, total_steps=100)
+    lrs = [float(cosine_schedule(c, jnp.int32(s))) for s in [0, 5, 10, 50, 100]]
+    assert lrs[0] == 0.0
+    assert lrs[1] == pytest.approx(5e-4)
+    assert lrs[2] == pytest.approx(1e-3)
+    assert lrs[3] < lrs[2]
+    assert lrs[4] == pytest.approx(1e-4, rel=0.01)
+
+
+def test_adamw_converges_quadratic():
+    params = {"w": jnp.array([5.0, -3.0])}
+    opt = adamw_init(params)
+    c = AdamWConfig(lr_peak=0.2, warmup_steps=0, total_steps=200,
+                    weight_decay=0.0, clip_norm=100.0)
+    for _ in range(150):
+        g = {"w": 2 * params["w"]}
+        params, opt, m = adamw_update(c, params, g, opt)
+    assert float(jnp.abs(params["w"]).max()) < 0.05
+
+
+def test_grad_clipping():
+    c = AdamWConfig(clip_norm=1.0)
+    params = {"w": jnp.zeros(3)}
+    opt = adamw_init(params)
+    _, _, m = adamw_update(c, params, {"w": jnp.full(3, 100.0)}, opt)
+    assert float(m["grad_norm"]) > 100.0  # pre-clip norm reported
+
+
+# --------------------------------------------------------------- train step
+def test_train_step_loss_decreases():
+    cfg = small()
+    params = init(RNG, M.model_specs(cfg))
+    step = build_train_step(cfg, TrainSettings(
+        microbatches=1, remat=False,
+        opt=AdamWConfig(lr_peak=5e-3, warmup_steps=2, total_steps=50),
+    ))
+    step = jax.jit(step)
+    opt = adamw_init(params)
+    data = SyntheticLM(cfg)
+    losses = []
+    for _ in range(16):
+        batch = jax.tree_util.tree_map(jnp.asarray, data.next_batch(4, 32))
+        params, opt, metrics = step(params, opt, batch)
+        losses.append(float(metrics["loss"]))
+    assert min(losses[-3:]) < losses[0] - 0.15, losses
+
+
+def test_microbatching_matches_full_batch():
+    cfg = small()
+    params = init(RNG, M.model_specs(cfg))
+    data = SyntheticLM(cfg)
+    batch = jax.tree_util.tree_map(jnp.asarray, data.next_batch(8, 16))
+    l1, g1, _ = loss_and_grads(cfg, TrainSettings(microbatches=1, remat=False),
+                               params, batch)
+    l2, g2, _ = loss_and_grads(cfg, TrainSettings(microbatches=4, remat=False),
+                               params, batch)
+    assert float(jnp.abs(l1 - l2)) < 5e-2
+    d = jax.tree_util.tree_map(
+        lambda a, b: float(jnp.abs(a - b).max()), g1, g2
+    )
+    assert max(jax.tree_util.tree_leaves(d)) < 5e-2
+
+
+def test_grad_compression_halves_bytes():
+    cfg = small()
+    params = init(RNG, M.model_specs(cfg))
+    data = SyntheticLM(cfg)
+    batch = jax.tree_util.tree_map(jnp.asarray, data.next_batch(4, 16))
+    _, g_fp32, _ = loss_and_grads(cfg, TrainSettings(remat=False), params, batch)
+    _, g_bf16, _ = loss_and_grads(
+        cfg, TrainSettings(remat=False, grad_compression=True), params, batch
+    )
+    assert all(
+        g.dtype == jnp.bfloat16
+        for g in jax.tree_util.tree_leaves(g_bf16)
+        if g.ndim > 0
+    )
+    # compressed grads approximate the fp32 grads
+    n1, n2 = global_norm(g_fp32), global_norm(g_bf16)
+    assert float(jnp.abs(n1 - n2) / n1) < 0.05
+
+
+# --------------------------------------------------------------------- data
+def test_data_deterministic_and_restartable():
+    cfg = small()
+    d1 = SyntheticLM(cfg, seed=7)
+    batches = [d1.next_batch(4, 16) for _ in range(3)]
+    d2 = SyntheticLM(cfg, seed=7)
+    d2.load_state_dict({"seed": 7, "step": 2})
+    np.testing.assert_array_equal(batches[2]["tokens"], d2.next_batch(4, 16)["tokens"])
+
+
+def test_data_host_sharding_slices():
+    cfg = small()
+    d = SyntheticLM(cfg, seed=1)
+    full = d.batch_at(0, 8, 16)
+    part = d.batch_at(0, 8, 16, lo=2, hi=5)
+    np.testing.assert_array_equal(full["tokens"][2:5], part["tokens"])
+
+
+def test_batch_specs_match_real_batches():
+    for arch in ("qwen3_0_6b", "hubert_xlarge", "llama_3_2_vision_90b"):
+        cfg = get_config(arch, reduced=True)
+        specs = make_batch_specs(cfg, 4, 16, "train")
+        real = SyntheticLM(cfg).next_batch(4, 16)
+        assert set(specs) == set(real), arch
+        for k in specs:
+            assert tuple(specs[k].shape) == tuple(real[k].shape), (arch, k)
+
+
+# --------------------------------------------------------------- checkpoint
+def test_checkpoint_roundtrip(tmp_path):
+    cfg = small()
+    params = init(RNG, M.model_specs(cfg))
+    opt = adamw_init(params)
+    ck = Checkpointer(str(tmp_path), keep_n=2)
+    ck.save(3, {"params": params, "opt": opt}, extra={"data": {"seed": 7, "step": 9}})
+    restored, extra = ck.restore({"params": params, "opt": opt})
+    assert extra["data"]["step"] == 9
+    a = jax.tree_util.tree_leaves(params)
+    b = jax.tree_util.tree_leaves(restored["params"])
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+    # opt state namedtuple survives
+    assert int(restored["opt"].step) == 0
+
+
+def test_checkpoint_gc_and_latest(tmp_path):
+    ck = Checkpointer(str(tmp_path), keep_n=2)
+    for s in (1, 2, 3, 4):
+        ck.save(s, {"x": jnp.ones(3) * s})
+    assert ck.latest_step() == 4
+    assert len(os.listdir(tmp_path)) == 2  # GC kept 2
+
+
+def test_checkpoint_async(tmp_path):
+    ck = Checkpointer(str(tmp_path), async_save=True)
+    ck.save(1, {"x": jnp.arange(5)})
+    ck.wait()
+    r, _ = ck.restore({"x": jnp.zeros(5, jnp.int32)})
+    np.testing.assert_array_equal(np.asarray(r["x"]), np.arange(5))
+
+
+def test_checkpoint_ignores_uncommitted(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    ck.save(1, {"x": jnp.ones(2)})
+    os.makedirs(tmp_path / "step_000000002")
+    assert ck.latest_step() == 1
+
+
+# ------------------------------------------------------------------ serving
+def test_serve_engine_generates():
+    cfg = small()
+    params = init(RNG, M.model_specs(cfg))
+    eng = ServeEngine(cfg, params, max_len=64)
+    data = SyntheticLM(cfg)
+    batch = {"tokens": jnp.asarray(data.next_batch(2, 16)["tokens"])}
+    out = eng.generate(batch, steps=8)
+    assert out.shape == (2, 8)
+    assert int(out.min()) >= 0 and int(out.max()) < cfg.vocab
+
+
+def test_serve_rejects_encoder_only():
+    cfg = get_config("hubert_xlarge", reduced=True)
+    params = init(RNG, M.model_specs(cfg))
+    with pytest.raises(ValueError):
+        ServeEngine(cfg, params)
