@@ -1,18 +1,37 @@
-"""Shared helpers for the benchmark suite (one module per paper artifact)."""
+"""Shared helpers for the benchmark suite (one module per paper artifact).
+
+The simulation-backed benchmarks build their scenario grids as *workloads
+first*, then execute them through :func:`sweep`, which groups same-config
+scenarios and dispatches each group as **one** vmapped device call via
+``SimEngine.run_batch`` — a strategy grid that used to be a serial Python
+loop of per-scenario compiles is now one compile + one call per shape
+bucket.
+
+Module-level knobs set by ``benchmarks.run``:
+
+  * ``NUM_SEEDS`` — every scenario is fanned across this many seeds (the
+    seed axis rides in the same batched call); rows report means over
+    completed seeds;
+  * ``CSV_DIR``  — when set, :func:`emit` also writes each table to
+    ``<CSV_DIR>/<name>.csv`` so perf trajectories land in versionable
+    files.
+"""
 
 from __future__ import annotations
 
 import csv
 import io
+import os
+import re
 import sys
-import time
 
 import numpy as np
 
 from repro.core.hyperx import HyperX
 from repro.core.allocation import allocate_partition, machine_partitions
 from repro.core import traffic as tr
-from repro.core.simulator import build_simulator
+from repro.core.engine import SimResult, get_engine
+from repro.core.traffic import Workload
 
 STRATEGIES = [
     "row", "diagonal", "full_spread", "rectangular", "l_shape",
@@ -21,9 +40,16 @@ STRATEGIES = [
 
 PAPER_TOPO = HyperX(n=8, q=2)
 
+NUM_SEEDS = 1          # set by benchmarks.run --seeds
+CSV_DIR: str | None = None  # set by benchmarks.run --csv
+
 
 def emit(rows: list[dict], name: str):
-    """Print rows as CSV with a '# <name>' header (the harness contract)."""
+    """Print rows as CSV with a '# <name>' header (the harness contract).
+
+    When ``CSV_DIR`` is set the same table is also written to
+    ``<CSV_DIR>/<slug>.csv``.
+    """
     if not rows:
         print(f"# {name}: no rows")
         return
@@ -35,8 +61,14 @@ def emit(rows: list[dict], name: str):
     print(f"# {name}")
     sys.stdout.write(out.getvalue())
     sys.stdout.flush()
+    if CSV_DIR:
+        os.makedirs(CSV_DIR, exist_ok=True)
+        slug = re.sub(r"[^A-Za-z0-9_.-]+", "_", name.split(" ")[0]).strip("_")
+        with open(os.path.join(CSV_DIR, f"{slug}.csv"), "w", newline="") as f:
+            f.write(out.getvalue())
 
 
+# ------------------------------------------------------------------ traffic
 def kernel_app(kind: str, k: int, seed: int = 0):
     if kind == "all_to_all":
         return tr.all_to_all(k)
@@ -58,16 +90,87 @@ def kernel_app(kind: str, k: int, seed: int = 0):
     raise ValueError(kind)
 
 
-def escalation_makespan(strategy: str, kind: str, replicas: int, k: int = 64,
-                        mode: str = "omniwar", seed: int = 0,
-                        horizon: int = 60000) -> dict:
+# ------------------------------------------------------- workload builders
+def escalation_workload(strategy: str, kind: str, replicas: int, k: int = 64,
+                        seed: int = 0) -> Workload:
     """k-rank app x replicas on the paper machine; all replicas targets."""
     per_job = k
     parts = machine_partitions(strategy, PAPER_TOPO,
                                num_jobs=512 // per_job, job_size=per_job)
     apps = [(kernel_app(kind, k, seed + j), parts[j]) for j in range(replicas)]
-    wl = tr.compose_workload(PAPER_TOPO, apps)
-    res = build_simulator(PAPER_TOPO, wl, mode=mode, horizon=horizon)(seed)
+    return tr.compose_workload(PAPER_TOPO, apps)
+
+
+def interference_workload(strategy: str, kind: str, k: int = 64,
+                          fabric: str = "shared", with_bg: bool = True,
+                          warmup: int = 400, seed: int = 0) -> Workload:
+    """One target job (+ optional random-permutation background)."""
+    part = allocate_partition(strategy, PAPER_TOPO, 0, size=k)
+    apps = [(kernel_app(kind, k, seed), part)]
+    bgs = []
+    if with_bg:
+        free = np.setdiff1d(np.arange(PAPER_TOPO.num_endpoints),
+                            part.endpoints)
+        bgs = [tr.background_noise(PAPER_TOPO, free, seed=seed + 99)]
+    return tr.compose_workload(PAPER_TOPO, apps, background=bgs,
+                               fabric_partitioning=fabric,
+                               warmup=warmup if with_bg else 0)
+
+
+# --------------------------------------------------------- batched execution
+def sweep(workloads: list[Workload], mode: str = "omniwar",
+          horizon: int = 60_000, seeds=None,
+          topo: HyperX = PAPER_TOPO) -> list[list[SimResult]]:
+    """Run every (workload, seed) pair batched; returns [workload][seed].
+
+    Workloads are grouped by engine configuration (pool count) and shape
+    bucket; each group executes as a single vmapped device call.
+    """
+    if seeds is None:
+        seeds = list(range(NUM_SEEDS))
+    seeds = list(seeds)
+    by_pools: dict[int, list[int]] = {}
+    for i, wl in enumerate(workloads):
+        by_pools.setdefault(wl.num_pools, []).append(i)
+    results: list[list[SimResult] | None] = [None] * len(workloads)
+    for num_pools, idxs in by_pools.items():
+        engine = get_engine(topo, mode=mode, num_pools=num_pools)
+        per_wl = engine.run_batch_seeds(
+            [workloads[i] for i in idxs], seeds=seeds, horizon=horizon
+        )
+        for i, res in zip(idxs, per_wl):
+            results[i] = res
+    return results  # type: ignore[return-value]
+
+
+def summarize(per_seed: list[SimResult]) -> dict:
+    """Mean metrics over completed seeds (-1 when any seed hit the horizon)."""
+    done = [r for r in per_seed if r.completed]
+    completed = len(done) == len(per_seed)
+    if not done:
+        return {"makespan": -1, "makespan_cycles": -1, "avg_latency": -1.0,
+                "avg_hops": -1.0, "completed": False, "seeds": len(per_seed)}
+    return {
+        "makespan": round(float(np.mean([r.makespan for r in done])), 1)
+        if completed else -1,
+        "makespan_cycles": round(
+            float(np.mean([r.makespan_cycles for r in done])), 1)
+        if completed else -1,
+        "avg_latency": round(float(np.mean([r.avg_latency for r in done])), 2),
+        "avg_hops": round(float(np.mean([r.avg_hops for r in done])), 3),
+        "completed": completed,
+        "seeds": len(per_seed),
+    }
+
+
+# -------------------------------------------- single-scenario conveniences
+def escalation_makespan(strategy: str, kind: str, replicas: int, k: int = 64,
+                        mode: str = "omniwar", seed: int = 0,
+                        horizon: int = 60000) -> dict:
+    """One escalation scenario (kept for spot checks; sweeps use sweep())."""
+    wl = escalation_workload(strategy, kind, replicas, k=k, seed=seed)
+    res = get_engine(PAPER_TOPO, mode=mode, num_pools=wl.num_pools).run(
+        wl, seed=seed, horizon=horizon)
     return {
         "strategy": strategy, "kernel": kind, "replicas": replicas, "k": k,
         "makespan": res.makespan if res.completed else -1,
@@ -82,18 +185,10 @@ def interference_makespan(strategy: str, kind: str, k: int = 64,
                           fabric: str = "shared", with_bg: bool = True,
                           warmup: int = 400, seed: int = 0,
                           horizon: int = 80000) -> dict:
-    part = allocate_partition(strategy, PAPER_TOPO, 0,
-                              size=k)
-    apps = [(kernel_app(kind, k, seed), part)]
-    bgs = []
-    if with_bg:
-        free = np.setdiff1d(np.arange(PAPER_TOPO.num_endpoints),
-                            part.endpoints)
-        bgs = [tr.background_noise(PAPER_TOPO, free, seed=seed + 99)]
-    wl = tr.compose_workload(PAPER_TOPO, apps, background=bgs,
-                             fabric_partitioning=fabric,
-                             warmup=warmup if with_bg else 0)
-    res = build_simulator(PAPER_TOPO, wl, horizon=horizon)(seed)
+    wl = interference_workload(strategy, kind, k=k, fabric=fabric,
+                               with_bg=with_bg, warmup=warmup, seed=seed)
+    res = get_engine(PAPER_TOPO, num_pools=wl.num_pools).run(
+        wl, seed=seed, horizon=horizon)
     return {
         "strategy": strategy, "kernel": kind, "k": k, "fabric": fabric,
         "bg": with_bg,

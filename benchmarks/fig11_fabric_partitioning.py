@@ -1,7 +1,17 @@
 """Paper Figs. 11-12: interference with the background on its own VC set
-(fabric partitioning) vs shared VCs."""
+(fabric partitioning) vs shared VCs.
 
-from benchmarks.common import STRATEGIES, emit, interference_makespan
+Shared-VC and partitioned-VC grids need different engines (the pool count
+is compile-time structure), so ``sweep`` groups them automatically: one
+batched device call per (pool-count, bucket) group per kernel."""
+
+from benchmarks.common import (
+    STRATEGIES,
+    emit,
+    interference_workload,
+    summarize,
+    sweep,
+)
 
 KERNELS = ["all_to_all", "stencil_von_neumann", "random_involution"]
 
@@ -10,15 +20,21 @@ def run(quick=False):
     kernels = KERNELS[:2] if quick else KERNELS
     rows = []
     for kind in kernels:
-        for strat in STRATEGIES:
-            shared = interference_makespan(strat, kind, fabric="shared")
-            sep = interference_makespan(strat, kind, fabric="background")
+        shared_wls = [interference_workload(s, kind, fabric="shared")
+                      for s in STRATEGIES]
+        sep_wls = [interference_workload(s, kind, fabric="background")
+                   for s in STRATEGIES]
+        per_wl = sweep(shared_wls + sep_wls, horizon=80000)
+        shared_res = per_wl[:len(STRATEGIES)]
+        sep_res = per_wl[len(STRATEGIES):]
+        for strat, shared, sep in zip(STRATEGIES, shared_res, sep_res):
+            shared_m = summarize(shared)["makespan"]
+            sep_m = summarize(sep)["makespan"]
             rows.append({
                 "kernel": kind, "strategy": strat,
-                "makespan_shared_vcs": shared["makespan"],
-                "makespan_bg_own_vcs": sep["makespan"],
-                "vc_isolation_gain": round(
-                    shared["makespan"] / max(sep["makespan"], 1), 3),
+                "makespan_shared_vcs": shared_m,
+                "makespan_bg_own_vcs": sep_m,
+                "vc_isolation_gain": round(shared_m / max(sep_m, 1), 3),
             })
     emit(rows, "fig11_fabric_partitioning (paper Figs. 11-12)")
     return rows

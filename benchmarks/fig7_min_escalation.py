@@ -1,16 +1,28 @@
 """Paper Figure 7: escalation under MIN routing, uniform + random
-permutation, 1..8 replicas of 64-rank apps."""
+permutation, 1..8 replicas of 64-rank apps.  Each (pattern, load) strategy
+grid runs as one batched ``sweep`` dispatch."""
 
-from benchmarks.common import STRATEGIES, emit, escalation_makespan
+from benchmarks.common import (
+    STRATEGIES,
+    emit,
+    escalation_workload,
+    summarize,
+    sweep,
+)
 
 
 def run(quick=False):
     loads = [1, 4, 8] if quick else [1, 2, 4, 6, 8]
     rows = []
     for kind in ("uniform", "random_permutation"):
-        for strat in STRATEGIES:
-            for r in loads:
-                rows.append(escalation_makespan(strat, kind, r, mode="min"))
+        for r in loads:
+            wls = [escalation_workload(s, kind, r) for s in STRATEGIES]
+            per_wl = sweep(wls, mode="min", horizon=60000)
+            for strat, per_seed in zip(STRATEGIES, per_wl):
+                row = {"strategy": strat, "kernel": kind, "replicas": r,
+                       "k": 64}
+                row.update(summarize(per_seed))
+                rows.append(row)
     emit(rows, "fig7_min_escalation (paper Fig. 7)")
     return rows
 

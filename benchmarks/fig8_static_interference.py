@@ -1,20 +1,33 @@
 """Paper Figure 8: static patterns under Omni-WAR with random-permutation
-background noise."""
+background noise.  Executes each pattern's strategy grid as batched
+``sweep`` calls (isolated + background grids in one dispatch per bucket)."""
 
-from benchmarks.common import STRATEGIES, emit, interference_makespan
+from benchmarks.common import (
+    STRATEGIES,
+    emit,
+    interference_workload,
+    summarize,
+    sweep,
+)
 
 
 def run(quick=False):
     rows = []
     for kind in ("uniform", "random_switch_permutation"):
-        for strat in STRATEGIES:
-            iso = interference_makespan(strat, kind, with_bg=False)
-            bg = interference_makespan(strat, kind, with_bg=True)
+        iso_wls = [interference_workload(s, kind, with_bg=False)
+                   for s in STRATEGIES]
+        bg_wls = [interference_workload(s, kind, with_bg=True)
+                  for s in STRATEGIES]
+        per_wl = sweep(iso_wls + bg_wls, horizon=80000)
+        iso_res, bg_res = per_wl[:len(STRATEGIES)], per_wl[len(STRATEGIES):]
+        for strat, iso, bg in zip(STRATEGIES, iso_res, bg_res):
+            iso_m = summarize(iso)["makespan"]
+            bg_m = summarize(bg)["makespan"]
             rows.append({
                 "kernel": kind, "strategy": strat,
-                "makespan_isolated": iso["makespan"],
-                "makespan_bg": bg["makespan"],
-                "slowdown": round(bg["makespan"] / max(iso["makespan"], 1), 3),
+                "makespan_isolated": iso_m,
+                "makespan_bg": bg_m,
+                "slowdown": round(bg_m / max(iso_m, 1), 3),
             })
     emit(rows, "fig8_static_interference (paper Fig. 8)")
     return rows

@@ -1,9 +1,16 @@
 """Run every benchmark (one per paper table/figure + the roofline bench).
 
     PYTHONPATH=src python -m benchmarks.run [--quick|--full]
+                                            [--seeds N] [--csv DIR]
+                                            [--only NAME]
 
 --quick trims replica counts / kernel sets (1-core CPU friendly); --full
 runs the complete paper grids.  Default: quick.
+--seeds N fans every simulated scenario across N seeds — the seed axis is
+batched through ``SimEngine.run_batch`` (same device call as the strategy
+axis), and rows report means over seeds.
+--csv DIR additionally writes every emitted table to DIR/<name>.csv so
+perf trajectories land in versionable files.
 """
 
 import argparse
@@ -28,8 +35,17 @@ def main(argv=None):
     p = argparse.ArgumentParser()
     p.add_argument("--full", action="store_true")
     p.add_argument("--only", default=None)
+    p.add_argument("--seeds", type=int, default=1,
+                   help="seeds per scenario, fanned through run_batch")
+    p.add_argument("--csv", default=None, metavar="DIR",
+                   help="also write each table to DIR/<name>.csv")
     args = p.parse_args(argv)
     quick = not args.full
+
+    from benchmarks import common
+    common.NUM_SEEDS = max(1, args.seeds)
+    common.CSV_DIR = args.csv
+
     mods = [m for m in MODULES if args.only is None or args.only in m]
     t00 = time.time()
     for name in mods:

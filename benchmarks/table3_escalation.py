@@ -1,7 +1,17 @@
 """Paper Fig. 9 / Table 3: kernel escalation under Omni-WAR, normalized to
-Diagonal (values > 1 mean faster than Diagonal, as in the paper)."""
+Diagonal (values > 1 mean faster than Diagonal, as in the paper).
 
-from benchmarks.common import STRATEGIES, emit, escalation_makespan
+Each (kernel, load) strategy grid is built as workloads first and executed
+through ``sweep`` — one vmapped device call per shape bucket instead of the
+seed's serial per-scenario loop."""
+
+from benchmarks.common import (
+    STRATEGIES,
+    emit,
+    escalation_workload,
+    summarize,
+    sweep,
+)
 
 KERNELS = ["all_to_all", "all_reduce", "stencil_von_neumann",
            "stencil_moore", "random_involution"]
@@ -13,11 +23,13 @@ def run(quick=False):
     raw = []
     for kind in kernels:
         for r in loads:
-            per = {}
-            for strat in STRATEGIES:
-                m = escalation_makespan(strat, kind, r)
-                per[strat] = m["makespan"]
-                raw.append(m)
+            wls = [escalation_workload(s, kind, r) for s in STRATEGIES]
+            per_wl = sweep(wls, mode="omniwar", horizon=60000)
+            for strat, per_seed in zip(STRATEGIES, per_wl):
+                row = {"strategy": strat, "kernel": kind, "replicas": r,
+                       "k": 64}
+                row.update(summarize(per_seed))
+                raw.append(row)
     emit(raw, "fig9_kernel_escalation_raw (paper Fig. 9)")
     # normalized table (mean over kernels, per load)
     rows = []

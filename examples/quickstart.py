@@ -3,13 +3,11 @@
     PYTHONPATH=src python examples/quickstart.py
 """
 
-import numpy as np
-
 from repro.core.hyperx import HyperX
 from repro.core.allocation import allocate_partition, machine_partitions
 from repro.core.properties import analyze_partition
 from repro.core import traffic as tr
-from repro.core.simulator import simulate
+from repro.core.engine import SimEngine
 from repro.fabric.placement import place_job
 from repro.fabric.collective_model import CollectiveModel
 
@@ -21,17 +19,25 @@ def main():
           f"{topo.num_links} links, diameter {topo.diameter}")
 
     # 2) allocate one 64-rank job under two strategies and compare (Table 1)
-    for strat in ("row", "diagonal"):
+    strategies = ("row", "diagonal")
+    for strat in strategies:
         part = allocate_partition(strat, topo, 0)
         p = analyze_partition(topo, part)
         print(f"{strat:10s} avg_dist={p.avg_distance:.3f} "
               f"convex={p.convexity:13s} PB={p.partition_bandwidth:.2f}")
 
-    # 3) simulate an All-to-All on each allocation (the paper's evaluation)
-    for strat in ("row", "diagonal"):
+    # 3) simulate an All-to-All on each allocation (the paper's evaluation).
+    # Both scenarios share one compilation and run as ONE batched device
+    # call: the engine takes workload tables as vmapped pytree arguments.
+    engine = SimEngine(topo, mode="omniwar")
+    workloads = []
+    for strat in strategies:
         parts = machine_partitions(strat, topo, num_jobs=8)
-        wl = tr.compose_workload(topo, [(tr.all_to_all(64), p) for p in parts])
-        res = simulate(topo, wl, mode="omniwar", horizon=40000)
+        workloads.append(
+            tr.compose_workload(topo, [(tr.all_to_all(64), p) for p in parts])
+        )
+    results = engine.run_batch(workloads, horizon=40000)
+    for strat, res in zip(strategies, results):
         print(f"{strat:10s} 8x all-to-all makespan = "
               f"{res.makespan_cycles} cycles (avg hops {res.avg_hops:.2f})")
 

@@ -1,0 +1,48 @@
+"""Pytree-parameterized simulator engine (static structure vs workload data).
+
+Public surface:
+
+  * :class:`SimEngine` / :func:`get_engine` — compile-once, run-many
+    execution with ``run`` / ``run_batch`` / ``run_seeds``;
+  * :class:`WorkloadTables` / :func:`make_workload_tables` — per-workload
+    device data as a padded pytree of jit arguments;
+  * :func:`build_static_tables` — memoised topology/port/VC constants;
+  * :class:`SimState`, :class:`SimResult` — simulation state & summary.
+
+The legacy entry points ``build_simulator`` / ``simulate`` in
+:mod:`repro.core.simulator` are thin facades over this package.
+"""
+
+from repro.core.engine.runner import (
+    PACKET_FLITS,
+    SimEngine,
+    SimResult,
+    get_engine,
+)
+from repro.core.engine.step import SimState, all_done, build_step, init_state
+from repro.core.engine.tables import StaticTables, build_static_tables
+from repro.core.engine.workload_tables import (
+    PreparedWorkload,
+    WorkloadTables,
+    make_workload_tables,
+    shape_bucket,
+    stack_tables,
+)
+
+__all__ = [
+    "PACKET_FLITS",
+    "PreparedWorkload",
+    "SimEngine",
+    "SimResult",
+    "SimState",
+    "StaticTables",
+    "WorkloadTables",
+    "all_done",
+    "build_static_tables",
+    "build_step",
+    "get_engine",
+    "init_state",
+    "make_workload_tables",
+    "shape_bucket",
+    "stack_tables",
+]

@@ -1,0 +1,287 @@
+"""SimEngine: compile-once, run-many execution of the cycle simulator.
+
+The engine splits a simulation into
+
+  * static structure (:mod:`tables`) — baked into one jitted step/while-loop
+    per configuration, shared by every workload;
+  * per-workload device data (:mod:`workload_tables`) — passed as pytree
+    arguments, so the jit cache keys only on shape buckets.
+
+``run`` executes one scenario; ``run_batch`` stacks same-bucket tables and
+``jax.vmap``-s the entire ``lax.while_loop``, so a whole strategy x seed
+sweep is **one compilation and one device call** (per shape bucket).
+``run_seeds`` fans one scenario across many seeds without replicating its
+tables.
+
+Engines are memoised by :func:`get_engine`; ``trace_count`` /
+``device_calls`` expose how many XLA traces and dispatches actually
+happened (the benchmark suite and the trace-counter tests assert on them).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.engine.step import SimState, all_done, build_step, init_state
+from repro.core.engine.tables import build_static_tables
+from repro.core.engine.workload_tables import (
+    PreparedWorkload,
+    WorkloadTables,
+    make_workload_tables,
+    stack_tables,
+)
+from repro.core.hyperx import HyperX
+from repro.core.traffic import Workload
+
+PACKET_FLITS = 16  # paper Table 2: packet size 16 flits
+
+
+@dataclasses.dataclass(frozen=True)
+class SimResult:
+    makespan: int             # packet-times until all target ranks completed
+    makespan_cycles: int      # flit-cycles (x packet size)
+    delivered: int            # target packets delivered
+    injected: int             # packets injected (targets + background)
+    avg_latency: float        # packet-times, target packets
+    avg_hops: float           # network hops per delivered target packet
+    completed: bool           # all target ranks finished within horizon
+
+
+class SimEngine:
+    """Pytree-parameterized simulator for one static configuration.
+
+    One engine == one ``(topo, mode, num_pools, max_deroutes, cap,
+    penalty)`` tuple.  All workloads run through the same jitted core;
+    re-tracing happens only when a workload's shape *bucket* is new.
+    """
+
+    def __init__(
+        self,
+        topo: HyperX,
+        mode: str = "omniwar",
+        num_pools: int = 1,
+        max_deroutes: int | None = None,
+        cap: int = 8,
+        penalty_packets: int = 4,
+        bucket: bool = True,
+    ):
+        self.topo = topo
+        self.mode = mode
+        self.num_pools = num_pools
+        self.bucket = bucket
+        self.static = build_static_tables(
+            topo, mode=mode, num_pools=num_pools, max_deroutes=max_deroutes,
+            cap=cap, penalty_packets=penalty_packets,
+        )
+        self._step = build_step(self.static)
+        self.trace_count = 0   # XLA traces of the core (any batching)
+        self.device_calls = 0  # jitted dispatches issued
+
+        def core(wt: WorkloadTables, seed, horizon):
+            # Python side effect: runs once per trace, never per call.
+            self.trace_count += 1
+
+            def cond(state: SimState):
+                return (state.t < horizon) & ~all_done(wt, state)
+
+            def body(state: SimState):
+                return self._step(state, wt)
+
+            final = jax.lax.while_loop(cond, body, init_state(self.static, wt, seed))
+            return (
+                final.t, all_done(wt, final), final.n_delivered,
+                final.n_injected, final.lat_sum, final.hop_sum,
+            )
+
+        self._run1 = jax.jit(core)
+        self._runN = jax.jit(jax.vmap(core, in_axes=(0, 0, None)))
+        self._runS = jax.jit(jax.vmap(core, in_axes=(None, 0, None)))
+        # (workloads x seeds) cross product: tables batch on the outer axis
+        # only, seeds broadcast on the inner — no per-seed table replication
+        self._runNS = jax.jit(jax.vmap(
+            jax.vmap(core, in_axes=(None, 0, None)),
+            in_axes=(0, None, None),
+        ))
+
+    # ------------------------------------------------------------- prepare
+    def prepare(self, wl: Workload | PreparedWorkload) -> PreparedWorkload:
+        """Lower a Workload to padded device tables (idempotent)."""
+        if isinstance(wl, PreparedWorkload):
+            prep = wl
+        else:
+            if wl.topo != self.topo:
+                raise ValueError(
+                    f"workload was composed on {wl.topo} but engine was "
+                    f"built for {self.topo}"
+                )
+            prep = make_workload_tables(wl, bucket=self.bucket)
+        if prep.num_pools != self.num_pools:
+            raise ValueError(
+                f"workload uses {prep.num_pools} VC pools but engine was "
+                f"built with num_pools={self.num_pools}"
+            )
+        return prep
+
+    # ------------------------------------------------------------ running
+    def run(
+        self,
+        wl: Workload | PreparedWorkload,
+        seed: int = 0,
+        horizon: int = 60_000,
+    ) -> SimResult:
+        prep = self.prepare(wl)
+        self.device_calls += 1
+        out = self._run1(prep.tables, jnp.int32(seed), jnp.int32(horizon))
+        return self._to_result(out, prep)
+
+    def run_batch(
+        self,
+        workloads: Sequence[Workload | PreparedWorkload],
+        seeds: Sequence[int] | None = None,
+        horizon: int = 60_000,
+    ) -> list[SimResult]:
+        """Run many scenarios as (one device call per shape bucket).
+
+        ``seeds`` has one entry per workload (default: all 0).  Workloads
+        are grouped by shape bucket internally; results come back in input
+        order.  The jit cache keys on the stacked shapes — which include
+        the batch dimension — so repeated sweeps of the same grid size
+        (e.g. one batch per kernel over a fixed strategy set) share one
+        compilation.
+        """
+        preps = [self.prepare(w) for w in workloads]
+        if seeds is None:
+            seeds = [0] * len(preps)
+        if len(seeds) != len(preps):
+            raise ValueError(
+                f"{len(seeds)} seeds for {len(preps)} workloads"
+            )
+        groups: dict[tuple[int, int, int], list[int]] = {}
+        for i, p in enumerate(preps):
+            groups.setdefault(p.tables.shape_bucket, []).append(i)
+        results: list[SimResult | None] = [None] * len(preps)
+        for idxs in groups.values():
+            stacked = stack_tables([preps[i].tables for i in idxs])
+            seed_arr = jnp.asarray([int(seeds[i]) for i in idxs], dtype=jnp.int32)
+            self.device_calls += 1
+            outs = self._runN(stacked, seed_arr, jnp.int32(horizon))
+            for j, i in enumerate(idxs):
+                results[i] = self._to_result(
+                    tuple(o[j] for o in outs), preps[i]
+                )
+        return results  # type: ignore[return-value]
+
+    def run_batch_seeds(
+        self,
+        workloads: Sequence[Workload | PreparedWorkload],
+        seeds: Sequence[int],
+        horizon: int = 60_000,
+    ) -> list[list[SimResult]]:
+        """Cross product: every workload x every seed, one device call per
+        shape bucket.  Tables batch only on the workload axis (seeds
+        broadcast), so nothing is replicated per seed.  Returns
+        ``results[workload][seed]`` in input order.
+        """
+        preps = [self.prepare(w) for w in workloads]
+        seed_arr = jnp.asarray([int(s) for s in seeds], dtype=jnp.int32)
+        groups: dict[tuple[int, int, int], list[int]] = {}
+        for i, p in enumerate(preps):
+            groups.setdefault(p.tables.shape_bucket, []).append(i)
+        results: list[list[SimResult] | None] = [None] * len(preps)
+        for idxs in groups.values():
+            stacked = stack_tables([preps[i].tables for i in idxs])
+            self.device_calls += 1
+            outs = self._runNS(stacked, seed_arr, jnp.int32(horizon))
+            for j, i in enumerate(idxs):
+                results[i] = [
+                    self._to_result(tuple(o[j][k] for o in outs), preps[i])
+                    for k in range(len(seeds))
+                ]
+        return results  # type: ignore[return-value]
+
+    def run_seeds(
+        self,
+        wl: Workload | PreparedWorkload,
+        seeds: Sequence[int],
+        horizon: int = 60_000,
+    ) -> list[SimResult]:
+        """One scenario, many seeds — tables are not replicated on device."""
+        prep = self.prepare(wl)
+        seed_arr = jnp.asarray([int(s) for s in seeds], dtype=jnp.int32)
+        self.device_calls += 1
+        outs = self._runS(prep.tables, seed_arr, jnp.int32(horizon))
+        return [
+            self._to_result(tuple(o[j] for o in outs), prep)
+            for j in range(len(seeds))
+        ]
+
+    def run_debug(
+        self,
+        wl: Workload | PreparedWorkload,
+        seed: int = 0,
+        steps: int = 512,
+        stride: int = 16,
+    ):
+        """Scan ``steps`` cycles; return per-stride (delivered, injected, qsum)."""
+        prep = self.prepare(wl)
+        wt = prep.tables
+
+        def body(state, _):
+            s2 = self._step(state, wt)
+            return s2, (s2.n_delivered, s2.n_injected, s2.qlen.sum())
+
+        state = init_state(self.static, wt, seed)
+        final, (d, i, qs) = jax.lax.scan(body, state, None, length=steps)
+        return (
+            final,
+            np.asarray(d)[::stride],
+            np.asarray(i)[::stride],
+            np.asarray(qs)[::stride],
+        )
+
+    # ------------------------------------------------------------ private
+    def _to_result(self, out, prep: PreparedWorkload) -> SimResult:
+        t, done, ndel, ninj, lat, hops = (np.asarray(x) for x in out)
+        ndel = int(ndel)
+        return SimResult(
+            makespan=int(t) - prep.warmup,
+            makespan_cycles=(int(t) - prep.warmup) * PACKET_FLITS,
+            delivered=ndel,
+            injected=int(ninj),
+            avg_latency=float(lat) / max(ndel, 1),
+            avg_hops=float(hops) / max(ndel, 1),
+            completed=bool(done),
+        )
+
+
+@functools.lru_cache(maxsize=None)
+def _engine_for(topo, mode, num_pools, max_deroutes, cap, penalty_packets, bucket):
+    return SimEngine(
+        topo, mode=mode, num_pools=num_pools, max_deroutes=max_deroutes,
+        cap=cap, penalty_packets=penalty_packets, bucket=bucket,
+    )
+
+
+def get_engine(
+    topo: HyperX,
+    mode: str = "omniwar",
+    num_pools: int = 1,
+    max_deroutes: int | None = None,
+    cap: int = 8,
+    penalty_packets: int = 4,
+    bucket: bool = True,
+) -> SimEngine:
+    """Memoised engine lookup: one engine (and one compile) per config.
+
+    Arguments are normalised into one positional cache key, so calls that
+    spell defaults explicitly share the engine with calls that omit them.
+    """
+    return _engine_for(
+        topo, mode, num_pools, max_deroutes, cap, penalty_packets, bucket
+    )

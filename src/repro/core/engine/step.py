@@ -1,0 +1,353 @@
+"""The cycle kernel: one packet-time of the whole machine.
+
+``build_step`` closes over the configuration's :class:`StaticTables` (trace
+constants) and returns a pure function ``step(state, wt)`` operating on the
+``(SimState, WorkloadTables)`` pair.  Because every workload-dependent array
+arrives through ``wt`` — a pytree argument, not a closure constant — the
+compiled step is shared by all workloads whose tables land in the same shape
+bucket, and the surrounding while-loop can be ``jax.vmap``-ed over stacked
+tables.
+
+The physics is unchanged from the seed simulator (see DESIGN.md §6 for the
+CAMINOS fidelity deviations): packet-time granularity, input-queued FIFOs
+with hop-indexed VCs per pool, MIN / Omni-WAR routing with an occupancy +
+deroute-penalty cost, two-round random separable allocation with a 2x
+internal speedup token bucket, and the step/dependency engine that walks
+the Workload step tables.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.engine.tables import StaticTables
+from repro.core.engine.workload_tables import WorkloadTables
+
+I32 = jnp.int32
+U32 = jnp.uint32
+
+
+class SimState(NamedTuple):
+    t: jnp.ndarray            # () int32 — current packet-time
+    key: jnp.ndarray          # PRNG key
+    # queue field arrays, flat (NQ * CAP,)
+    f_dst: jnp.ndarray        # destination endpoint id
+    f_der: jnp.ndarray        # deroutes left
+    f_hop: jnp.ndarray        # hops taken
+    f_rank: jnp.ndarray       # source rank
+    f_step: jnp.ndarray       # source step index
+    f_birth: jnp.ndarray      # injection time
+    qhead: jnp.ndarray        # (NQ,) ring head
+    qlen: jnp.ndarray         # (NQ,) occupancy
+    busy: jnp.ndarray         # (S*OUT,) output-buffer tokens (2x speedup)
+    # per-rank step engine
+    cur_step: jnp.ndarray     # (R,)
+    dst_i: jnp.ndarray        # (R,)
+    pkt_i: jnp.ndarray        # (R,)
+    completed: jnp.ndarray    # (R,) first incomplete step pointer
+    sent: jnp.ndarray         # ((R+1)*T,) delivered sends per (rank, step)
+    got: jnp.ndarray          # ((R+1)*T,) received packets per (rank, step)
+    # metrics
+    lat_sum: jnp.ndarray      # () float32 sum of target packet latencies
+    n_delivered: jnp.ndarray  # () target packets delivered
+    n_injected: jnp.ndarray   # () packets injected (all sources)
+    hop_sum: jnp.ndarray      # () network hops of delivered target packets
+
+
+def init_state(st: StaticTables, wt: WorkloadTables, seed) -> SimState:
+    """Fresh simulation state for one workload (R/T taken from ``wt``)."""
+    R, T = wt.R, wt.T
+
+    def z(n):
+        return jnp.zeros(n, dtype=I32)
+
+    return SimState(
+        t=jnp.int32(0), key=jax.random.PRNGKey(seed),
+        f_dst=z(st.NQ * st.CAP), f_der=z(st.NQ * st.CAP),
+        f_hop=z(st.NQ * st.CAP), f_rank=z(st.NQ * st.CAP),
+        f_step=z(st.NQ * st.CAP), f_birth=z(st.NQ * st.CAP),
+        qhead=z(st.NQ), qlen=z(st.NQ), busy=z(st.S * st.OUT),
+        cur_step=z(R), dst_i=z(R), pkt_i=z(R), completed=z(R),
+        sent=z((R + 1) * T), got=z((R + 1) * T),
+        lat_sum=jnp.float32(0.0),
+        n_delivered=jnp.int32(0), n_injected=jnp.int32(0),
+        hop_sum=jnp.int32(0),
+    )
+
+
+def all_done(wt: WorkloadTables, state: SimState) -> jnp.ndarray:
+    """All finite (target) ranks have completed their real steps."""
+    return jnp.all(jnp.where(wt.finite, state.completed >= wt.n_steps, True))
+
+
+def build_step(
+    st: StaticTables,
+) -> Callable[[SimState, WorkloadTables], SimState]:
+    """Return the cycle kernel for one static configuration."""
+    S, E, IN, OUT = st.S, st.E, st.IN, st.OUT
+    P, V, NQ, H, CAP = st.P, st.V, st.NQ, st.H, st.CAP
+    q, n, conc, m, PEN = st.q, st.n, st.conc, st.m, st.PEN
+    use_min = st.use_min
+    coords, nbr, in_port_at_nb = st.coords, st.nbr, st.in_port_at_nb
+    port_dim, port_val = st.port_dim, st.port_val
+    h_pool, h_sw, inj_base = st.h_pool, st.h_sw, st.inj_base
+    BIGCOST = jnp.int32(1 << 28)
+    OOB = jnp.int32(NQ * CAP + 5)  # safely out of bounds => dropped scatters
+
+    def step(state: SimState, wt: WorkloadTables) -> SimState:
+        R, T = wt.R, wt.T
+        MAXD = wt.D
+        t = state.t
+        key = jax.random.fold_in(state.key, t)
+        k_arb, k_jit, k_smp = jax.random.split(key, 3)
+
+        qlen, qhead = state.qlen, state.qhead
+        # per-(switch, in-port) total occupancy (packets over all pools+VCs):
+        # the adaptive-routing congestion signal (CAMINOS counts phits in the
+        # whole input buffer; penalty/range ratio ~1/8 is preserved).
+        port_occ = qlen.reshape(S * IN, P * V).sum(axis=1)
+
+        # ---------------- heads --------------------------------------------
+        exists = qlen > 0                                   # (H,)
+        slot = jnp.arange(H, dtype=I32) * CAP + qhead
+        dst = state.f_dst[slot]
+        der = state.f_der[slot]
+        hop = state.f_hop[slot]
+        dsw = dst // conc
+        dof = dst % conc
+
+        cur = h_sw
+        at_dst = cur == dsw
+
+        # ---------------- routing: candidate network ports -----------------
+        ccur = coords[cur]                                  # (H, q)
+        cdst = coords[dsw]                                  # (H, q)
+        pv = port_val[None, :]                              # (1, q*n)
+        cur_d = ccur[:, port_dim]                           # (H, q*n)
+        dst_d = cdst[:, port_dim]
+        unaligned = cur_d != dst_d                          # (H, q*n)
+        not_self = pv != cur_d
+        is_min = (pv == dst_d) & unaligned
+        nb = nbr[cur]                                       # (H, q*n)
+        ipnb = in_port_at_nb[cur]                           # (H, q*n)
+        vc_next = jnp.minimum(hop + 1, V - 1)[:, None]      # (H, 1)
+        qi_down = ((nb * IN + ipnb) * P + h_pool[:, None]) * V + vc_next
+        room = qlen[qi_down] < CAP                          # own queue has space
+        occ = port_occ[nb * IN + ipnb]                      # congestion signal
+        busy = jnp.maximum(state.busy - 1, 0)               # link served 1 pkt
+        avail_net = busy[cur[:, None] * OUT + jnp.arange(q * n)[None, :]] < 2
+        if use_min:
+            legal = is_min & room & avail_net
+        else:
+            legal = (
+                unaligned & not_self & (is_min | (der[:, None] > 0))
+                & room & avail_net
+            )
+        jitter = jax.random.randint(k_jit, (H, q * n), 0, 8, dtype=I32)
+        cost = occ * 8 + PEN * (~is_min) + jitter
+        cost = jnp.where(legal, cost, BIGCOST)
+        best = jnp.argmin(cost, axis=1).astype(I32)         # (H,)
+        best_cost = jnp.take_along_axis(cost, best[:, None], 1)[:, 0]
+        has_port = best_cost < BIGCOST
+        best_min = jnp.take_along_axis(is_min, best[:, None], 1)[:, 0]
+
+        out_port = jnp.where(at_dst, q * n + dof, best)
+        requesting = exists & (at_dst | has_port)
+        requesting = requesting & (busy[cur * OUT + out_port] < 2)
+        # NOTE: scatter/gather OOB markers must be POSITIVE out-of-range —
+        # negative indices wrap NumPy-style in jnp .at[] even with mode='drop'.
+        OOB_OUT = jnp.int32(S * OUT + 1)
+        req_out = jnp.where(requesting, cur * OUT + out_port, OOB_OUT)
+        req_out_safe = jnp.minimum(req_out, S * OUT - 1)
+
+        # ------------- iterative random arbitration (2x internal speedup) --
+        # Round 1: every head requests its best port; one random winner per
+        # output.  Round 2 (separable-allocator iteration + the paper's 2x
+        # crossbar speedup): losers re-route to their best port that still
+        # has output tokens, enabling a second grant per cycle per output.
+        # The `busy` token bucket keeps sustained link rate at 1 pkt/time.
+        arb_key = jax.random.bits(k_arb, (H,), dtype=U32) >> 17  # 15 bits
+        packed = (arb_key << 17) | jnp.arange(H, dtype=U32)
+        INVALID = jnp.uint32(0xFFFFFFFF)
+        grant1 = jnp.full(S * OUT, INVALID)
+        grant1 = grant1.at[req_out].min(packed, mode="drop")
+        won1 = requesting & (grant1[req_out_safe] == packed)
+
+        qi_best1 = jnp.take_along_axis(qi_down, best[:, None], 1)[:, 0]
+        arr1 = jnp.zeros(NQ, dtype=I32).at[
+            jnp.where(won1 & ~at_dst, qi_best1, NQ + 1)
+        ].add(1, mode="drop")
+        g1 = jnp.zeros(S * OUT, dtype=I32).at[
+            jnp.where(won1, req_out, OOB_OUT)
+        ].add(1, mode="drop")
+        tokens = (2 - busy) - g1                            # remaining slots
+
+        loser = requesting & ~won1
+        # re-route: best legal port with tokens left and downstream room
+        # (accounting for the round-1 arrival into the same queue)
+        tok_net = tokens[cur[:, None] * OUT + jnp.arange(q * n)[None, :]] > 0
+        room_2 = qlen[qi_down] + arr1[qi_down] < CAP
+        cost2 = jnp.where(legal & tok_net & room_2, cost, BIGCOST)
+        best2 = jnp.argmin(cost2, axis=1).astype(I32)
+        has2 = jnp.take_along_axis(cost2, best2[:, None], 1)[:, 0] < BIGCOST
+        ej_ok = at_dst & (tokens[cur * OUT + q * n + dof] > 0)
+        out2 = jnp.where(at_dst, q * n + dof, best2)
+        req2 = loser & jnp.where(at_dst, ej_ok, has2)
+        req_out2 = jnp.where(req2, cur * OUT + out2, OOB_OUT)
+        req_out2_safe = jnp.minimum(req_out2, S * OUT - 1)
+        grant2 = jnp.full(S * OUT, INVALID)
+        grant2 = grant2.at[req_out2].min(packed, mode="drop")
+        won2 = req2 & (grant2[req_out2_safe] == packed)
+        won = won1 | won2
+
+        # final chosen queue / minimality per winner
+        qi_best = jnp.where(
+            won2,
+            jnp.take_along_axis(qi_down, jnp.minimum(best2, q * n - 1)[:, None], 1)[:, 0],
+            qi_best1,
+        )
+        best_min = jnp.where(
+            won2,
+            jnp.take_along_axis(is_min, jnp.minimum(best2, q * n - 1)[:, None], 1)[:, 0],
+            best_min,
+        )
+
+        # output token update: +1 per grant (burst absorbed by 2x speedup)
+        gcount = g1.at[jnp.where(won2, req_out2, OOB_OUT)].add(1, mode="drop")
+        busy = busy + gcount
+
+        # ---------------- dequeue winners ----------------------------------
+        qhead = jnp.where(won, (qhead + 1) % CAP, qhead)
+        dlen = jnp.zeros(NQ, dtype=I32).at[jnp.arange(H)].add(-won.astype(I32))
+
+        # ---------------- deliveries (ejection winners) --------------------
+        eject = won & at_dst
+        rank = state.f_rank[slot]
+        pstep = state.f_step[slot]
+        src_finite = wt.finite[rank]
+        # sender-side accounting row (infinite sources -> trash row R)
+        send_row = jnp.where(src_finite, rank, R)
+        OOB_RT = jnp.int32((R + 1) * T + 1)
+        sent = state.sent.at[
+            jnp.where(eject, send_row * T + pstep, OOB_RT)
+        ].add(1, mode="drop")
+        drank = wt.ep_rank[dst]
+        drank_ok = (drank >= 0) & wt.finite[jnp.maximum(drank, 0)]
+        recv_row = jnp.where(drank_ok, drank, R)
+        got = state.got.at[
+            jnp.where(eject, recv_row * T + pstep, OOB_RT)
+        ].add(1, mode="drop")
+        tgt_del = eject & src_finite
+        lat_sum = state.lat_sum + jnp.sum(
+            jnp.where(tgt_del, (t - state.f_birth[slot]).astype(jnp.float32), 0.0)
+        )
+        hop_sum = state.hop_sum + jnp.sum(jnp.where(tgt_del, hop, 0))
+        n_delivered = state.n_delivered + jnp.sum(tgt_del)
+
+        # ---------------- network moves (enqueue downstream) ---------------
+        net = won & ~at_dst
+        tgt_qi = qi_best
+        # ring tail = head_pre + len_pre, invariant under same-cycle dequeue;
+        # a round-2 arrival lands one slot behind the round-1 arrival.
+        tgt_slot = (
+            state.qhead[tgt_qi] + qlen[tgt_qi]
+            + jnp.where(won2, arr1[tgt_qi], 0)
+        ) % CAP
+        tgt_flat = jnp.where(net, tgt_qi * CAP + tgt_slot, OOB)
+        f_dst = state.f_dst.at[tgt_flat].set(dst, mode="drop")
+        f_der = state.f_der.at[tgt_flat].set(der - (~best_min), mode="drop")
+        f_hop = state.f_hop.at[tgt_flat].set(hop + 1, mode="drop")
+        f_rank = state.f_rank.at[tgt_flat].set(rank, mode="drop")
+        f_step = state.f_step.at[tgt_flat].set(pstep, mode="drop")
+        f_birth = state.f_birth.at[tgt_flat].set(state.f_birth[slot], mode="drop")
+        dlen = dlen.at[jnp.where(net, tgt_qi, NQ + 1)].add(1, mode="drop")
+
+        # ---------------- step-engine: completion pointers ------------------
+        # a rank is done after its *real* n_steps (padded steps never walked)
+        completed = state.completed
+        for _ in range(4):
+            pidx = jnp.arange(R, dtype=I32) * T + jnp.minimum(completed, T - 1)
+            comp = (completed >= wt.n_steps) | (
+                (sent[pidx] >= wt.total_sends[pidx])
+                & (got[pidx] >= wt.recv_need[pidx])
+            )
+            completed = completed + (
+                wt.finite & (completed < wt.n_steps) & comp
+            )
+
+        # skip empty (padded) steps
+        cs = state.cur_step
+        cs_deg = wt.deg[jnp.arange(R), jnp.minimum(cs, T - 1)]
+        cs = cs + (wt.finite & (cs < wt.n_steps) & (cs_deg == 0))
+
+        # ---------------- injection ----------------------------------------
+        r_of_e = wt.ep_rank                                 # (E,)
+        r_safe = jnp.maximum(r_of_e, 0)
+        e_fin = wt.finite[r_safe]
+        e_cs = jnp.where(e_fin, cs[r_safe], 0)
+        e_di = jnp.where(e_fin, state.dst_i[r_safe], 0)
+        e_pk = jnp.where(e_fin, state.pkt_i[r_safe], 0)
+        flat_td = jnp.minimum(e_cs, T - 1) * MAXD + e_di
+        e_deg = wt.deg[r_safe, jnp.minimum(e_cs, T - 1)]
+        e_np = wt.npkts[r_safe, flat_td]
+        e_ns = wt.n_steps[r_safe]
+        in_window = e_cs < jnp.minimum(e_ns, completed[r_safe] + wt.window[r_safe])
+        has_work = jnp.where(
+            e_fin, (e_cs < e_ns) & (e_di < e_deg) & in_window, True
+        )
+        has_work = has_work & (t >= wt.start_t[r_safe])
+        inj_qi = inj_base + wt.pool[r_safe] * V
+        has_room = qlen[inj_qi] + dlen[inj_qi] < CAP  # dlen: arrivals this cycle
+        do_inj = (r_of_e >= 0) & has_work & has_room
+
+        d_fixed = wt.sends_dst[r_safe, flat_td]
+        rspan = jnp.maximum(wt.smp_hi[r_safe, flat_td] - wt.smp_lo[r_safe, flat_td], 1)
+        rnd = jax.random.bits(k_smp, (E,), dtype=U32)
+        d_smp = wt.smp_lo[r_safe, flat_td] + (rnd % rspan.astype(U32)).astype(I32)
+        d_rank = jnp.where(wt.sampled[r_safe, flat_td], d_smp, d_fixed)
+        d_rank = jnp.clip(d_rank, 0, R - 1)
+        d_ep = wt.rank_ep[d_rank]
+
+        inj_flat = jnp.where(
+            do_inj, inj_qi * CAP + (state.qhead[inj_qi] + qlen[inj_qi]) % CAP,
+            OOB,
+        )
+        f_dst = f_dst.at[inj_flat].set(d_ep, mode="drop")
+        f_der = f_der.at[inj_flat].set(jnp.int32(m), mode="drop")
+        f_hop = f_hop.at[inj_flat].set(0, mode="drop")
+        f_rank = f_rank.at[inj_flat].set(r_safe, mode="drop")
+        f_step = f_step.at[inj_flat].set(jnp.where(e_fin, e_cs, 0), mode="drop")
+        f_birth = f_birth.at[inj_flat].set(t, mode="drop")
+        dlen = dlen.at[jnp.where(do_inj, inj_qi, NQ + 1)].add(1, mode="drop")
+        n_injected = state.n_injected + jnp.sum(do_inj)
+
+        # cursor advance for finite injecting ranks
+        adv = do_inj & e_fin
+        pk2 = jnp.where(adv, e_pk + 1, e_pk)
+        move_d = adv & (pk2 >= e_np)
+        di2 = jnp.where(move_d, e_di + 1, e_di)
+        pk2 = jnp.where(move_d, 0, pk2)
+        move_s = move_d & (di2 >= e_deg)
+        cs2 = jnp.where(move_s, e_cs + 1, e_cs)
+        di2 = jnp.where(move_s, 0, di2)
+        # scatter back to rank arrays (each finite rank has exactly 1 endpoint)
+        upd = jnp.where((r_of_e >= 0) & e_fin, r_of_e, R + 5)
+        cur_step = cs.at[upd].set(cs2, mode="drop")
+        dst_i = state.dst_i.at[upd].set(di2, mode="drop")
+        pkt_i = state.pkt_i.at[upd].set(pk2, mode="drop")
+
+        return SimState(
+            t=t + 1, key=state.key,
+            f_dst=f_dst, f_der=f_der, f_hop=f_hop, f_rank=f_rank,
+            f_step=f_step, f_birth=f_birth,
+            qhead=qhead, qlen=qlen + dlen, busy=busy,
+            cur_step=cur_step, dst_i=dst_i, pkt_i=pkt_i, completed=completed,
+            sent=sent, got=got,
+            lat_sum=lat_sum, n_delivered=n_delivered, n_injected=n_injected,
+            hop_sum=hop_sum,
+        )
+
+    return step

@@ -1,0 +1,127 @@
+"""Static compile-time structure of the simulator.
+
+Everything here depends only on the *configuration* of a simulation — the
+topology, routing mode, VC-pool count, deroute budget, and queue capacity —
+never on the workload.  The tables are baked into the jit closure as trace
+constants (they are genuinely constant across a sweep), while everything
+per-workload lives in :mod:`repro.core.engine.workload_tables` and is passed
+to the compiled step function as device *arguments*.
+
+``build_static_tables`` is memoised on its full key, so every simulator /
+engine construction for the same ``(topo, mode, P, m, cap, penalty)``
+configuration shares one table set — and therefore one XLA compilation of
+the step function.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.hyperx import HyperX
+
+I32 = jnp.int32
+
+
+class StaticTables(NamedTuple):
+    """Topology / port / VC constant tables + static dimensions.
+
+    Shapes (S switches, E endpoints, IN=OUT ports/switch, P pools, V VCs):
+      coords          (S, q)     switch coordinates
+      nbr             (S, q*n)   neighbour switch per network port
+      in_port_at_nb   (S, q*n)   arrival port at that neighbour
+      port_dim/val    (q*n,)     dimension / value addressed by each port
+      h_pool, h_sw    (H,)       queue-head index decomposition (H == NQ)
+      inj_base        (E,)       injection queue base index (pool 0, VC 0)
+    """
+
+    # dimensions (Python ints — static under jit)
+    n: int
+    q: int
+    conc: int
+    S: int
+    E: int
+    IN: int
+    OUT: int
+    P: int
+    V: int
+    NQ: int
+    H: int
+    CAP: int
+    m: int            # deroute budget
+    PEN: int          # deroute penalty on the cost scale
+    use_min: bool
+    # device constant tables
+    coords: jnp.ndarray
+    nbr: jnp.ndarray
+    in_port_at_nb: jnp.ndarray
+    port_dim: jnp.ndarray
+    port_val: jnp.ndarray
+    h_pool: jnp.ndarray
+    h_sw: jnp.ndarray
+    inj_base: jnp.ndarray
+
+
+@functools.lru_cache(maxsize=None)
+def build_static_tables(
+    topo: HyperX,
+    mode: str = "omniwar",
+    num_pools: int = 1,
+    max_deroutes: int | None = None,
+    cap: int = 8,
+    penalty_packets: int = 4,
+) -> StaticTables:
+    """Construct (and cache) the constant tables for one configuration."""
+    if mode not in ("min", "omniwar"):
+        raise ValueError(f"unknown routing mode {mode!r}")
+    n, q, conc = topo.n, topo.q, topo.concentration
+    S = topo.num_switches
+    E = topo.num_endpoints
+    IN = q * n + conc          # network input ports (dense dim*val) + injection
+    OUT = q * n + conc         # network output ports + ejection per offset
+    P = num_pools
+    m = q if max_deroutes is None else max_deroutes
+    V = q + m + 1              # hop-indexed VCs (deadlock freedom)
+    NQ = S * IN * P * V
+    H = NQ                     # one potential head per queue
+
+    coords_np = topo.all_switch_coords()                       # (S, q)
+    nbr = np.empty((S, q * n), dtype=np.int32)                 # dst switch
+    in_port_at_nb = np.empty((S, q * n), dtype=np.int32)       # arrival port
+    for d in range(q):
+        for v in range(n):
+            nc = coords_np.copy()
+            nc[:, d] = v
+            ids = np.zeros(S, dtype=np.int64)
+            for d2 in range(q):
+                ids = ids * n + nc[:, d2]
+            nbr[:, d * n + v] = ids
+            in_port_at_nb[:, d * n + v] = d * n + coords_np[:, d]
+
+    h_idx = np.arange(H, dtype=np.int64)
+    h_pool = jnp.asarray((h_idx // V) % P, dtype=I32)
+    h_sw = jnp.asarray(h_idx // (V * P * IN), dtype=I32)
+
+    # endpoint -> injection queue (pool of its rank added at runtime, VC 0)
+    e_ids = np.arange(E)
+    e_sw = e_ids // conc
+    e_port = q * n + (e_ids % conc)
+    inj_base = jnp.asarray(((e_sw * IN + e_port) * P) * V, dtype=I32)
+
+    return StaticTables(
+        n=n, q=q, conc=conc, S=S, E=E, IN=IN, OUT=OUT, P=P, V=V,
+        NQ=NQ, H=H, CAP=cap, m=m,
+        PEN=penalty_packets * 8,  # cost scale: occupancy*8 + jitter(3 bits)
+        use_min=mode == "min",
+        coords=jnp.asarray(coords_np, dtype=I32),
+        nbr=jnp.asarray(nbr),
+        in_port_at_nb=jnp.asarray(in_port_at_nb),
+        port_dim=jnp.asarray(np.arange(q * n) // n, dtype=I32),
+        port_val=jnp.asarray(np.arange(q * n) % n, dtype=I32),
+        h_pool=h_pool,
+        h_sw=h_sw,
+        inj_base=inj_base,
+    )

@@ -1,0 +1,176 @@
+"""Per-workload device data, as a pytree of jit *arguments*.
+
+The seed simulator baked every workload array into the jit closure, so each
+scenario — even with identical shapes — produced a fresh trace.  Here all
+per-workload state lives in a :class:`WorkloadTables` NamedTuple (a pytree),
+padded to shape *buckets*, and is handed to the compiled step function as a
+device argument.  Two consequences:
+
+  * scenarios whose tables land in the same bucket share one compilation
+    (the jit cache keys on shapes, not values);
+  * same-bucket tables can be ``jnp.stack``-ed along a leading axis and the
+    whole while-loop ``jax.vmap``-ed, so an entire strategy x seed sweep is
+    one device call.
+
+Padding is semantics-preserving:
+
+  * extra *steps* (T -> T_b) are never walked: the per-rank ``n_steps``
+    field keeps the real step count, and the completion / window / injection
+    logic compares against it instead of the padded table width;
+  * extra *ranks* (R -> R_b) are flagged ``infinite`` (ignored by the
+    completion predicate) and mapped to no endpoint (so they never inject);
+  * extra *destination slots* (MAXD -> D_b) sit beyond ``deg`` and are never
+    dereferenced by the send cursor.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from typing import NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.traffic import Workload
+
+I32 = jnp.int32
+
+
+class WorkloadTables(NamedTuple):
+    """All per-workload arrays the step function consumes (R, T, D padded).
+
+    Every leaf is a jnp array so the tuple is a pytree: it can be passed as
+    a jit argument, stacked with ``stack_tables`` and vmapped.
+    """
+
+    rank_ep: jnp.ndarray      # (R,)   endpoint id per rank (pad: 0)
+    ep_rank: jnp.ndarray      # (E,)   rank per endpoint, -1 = none
+    pool: jnp.ndarray         # (R,)   VC pool per rank
+    finite: jnp.ndarray       # (R,)   bool; pad ranks are ~finite
+    window: jnp.ndarray       # (R,)   outstanding-step window
+    start_t: jnp.ndarray      # (R,)   injection start time (warmup gating)
+    n_steps: jnp.ndarray      # (R,)   real step count (<= padded T)
+    sends_dst: jnp.ndarray    # (R, T*D) destination rank ids
+    npkts: jnp.ndarray        # (R, T*D) packets per destination
+    deg: jnp.ndarray          # (R, T) valid destinations per step
+    recv_need: jnp.ndarray    # (R*T,) packets needed to complete a step
+    total_sends: jnp.ndarray  # (R*T,) packets sent when a step is done
+    sampled: jnp.ndarray      # (R, T*D) bool: sample destination?
+    smp_lo: jnp.ndarray       # (R, T*D) sample range lo
+    smp_hi: jnp.ndarray       # (R, T*D) sample range hi (exclusive)
+
+    @property
+    def R(self) -> int:
+        return self.rank_ep.shape[-1]
+
+    @property
+    def T(self) -> int:
+        return self.deg.shape[-1]
+
+    @property
+    def D(self) -> int:
+        return self.sends_dst.shape[-1] // self.deg.shape[-1]
+
+    @property
+    def shape_bucket(self) -> tuple[int, int, int]:
+        return (self.R, self.T, self.D)
+
+
+@dataclasses.dataclass(frozen=True)
+class PreparedWorkload:
+    """A workload lowered to device tables + the host-side metadata that
+    the engine needs to interpret raw simulation outputs."""
+
+    tables: WorkloadTables
+    warmup: int        # makespan is reported relative to this time
+    num_pools: int     # must match the engine's static pool count
+    R: int             # real (unpadded) rank count
+    T: int             # real (unpadded) step count
+
+
+def _pow2_bucket(x: int, floor: int = 1) -> int:
+    b = max(floor, 1)
+    while b < x:
+        b *= 2
+    return b
+
+
+def shape_bucket(R: int, T: int, maxd: int) -> tuple[int, int, int]:
+    """Pad (R, T, D) up to power-of-two buckets so near-miss shapes share
+    one compilation (e.g. all-to-all T=63 and all-reduce T=64 -> T_b=64)."""
+    return _pow2_bucket(R, 8), _pow2_bucket(T, 4), _pow2_bucket(maxd, 1)
+
+
+def make_workload_tables(
+    wl: Workload,
+    bucket: bool = True,
+) -> PreparedWorkload:
+    """Lower a :class:`Workload` into padded device tables."""
+    R, T, D = wl.R, wl.T, wl.maxd
+    R_b, T_b, D_b = shape_bucket(R, T, D) if bucket else (R, T, D)
+    E = wl.topo.num_endpoints
+
+    def pad_r(a: np.ndarray, fill=0):
+        if R_b == R:
+            return a
+        out = np.full((R_b,) + a.shape[1:], fill, dtype=a.dtype)
+        out[:R] = a
+        return out
+
+    def pad_rtd(a: np.ndarray, fill=0):
+        out = np.full((R_b, T_b, D_b), fill, dtype=a.dtype)
+        out[:R, :T, :D] = a
+        return out
+
+    def pad_rt(a: np.ndarray, fill=0):
+        out = np.full((R_b, T_b), fill, dtype=a.dtype)
+        out[:R, :T] = a
+        return out
+
+    ep_rank = np.full(E, -1, dtype=np.int64)
+    ep_rank[wl.rank_ep] = np.arange(R)
+
+    n_steps = np.full(R_b, 0, dtype=np.int64)
+    n_steps[:R] = T
+
+    # pad ranks: infinite (ignored by completion) + no endpoint (never inject)
+    infinite = pad_r(wl.infinite, fill=True)
+
+    tables = WorkloadTables(
+        rank_ep=jnp.asarray(pad_r(wl.rank_ep), dtype=I32),
+        ep_rank=jnp.asarray(ep_rank, dtype=I32),
+        pool=jnp.asarray(pad_r(wl.pool), dtype=I32),
+        finite=jnp.asarray(~infinite),
+        window=jnp.asarray(pad_r(wl.window, fill=1), dtype=I32),
+        start_t=jnp.asarray(pad_r(wl.start), dtype=I32),
+        n_steps=jnp.asarray(n_steps, dtype=I32),
+        sends_dst=jnp.asarray(
+            pad_rtd(wl.sends_dst, fill=-1).reshape(R_b, T_b * D_b), dtype=I32
+        ),
+        npkts=jnp.asarray(pad_rtd(wl.npkts).reshape(R_b, T_b * D_b), dtype=I32),
+        deg=jnp.asarray(pad_rt(wl.deg), dtype=I32),
+        recv_need=jnp.asarray(pad_rt(wl.recv_need).reshape(R_b * T_b), dtype=I32),
+        total_sends=jnp.asarray(
+            pad_rt(wl.total_sends).reshape(R_b * T_b), dtype=I32
+        ),
+        sampled=jnp.asarray(pad_rtd(wl.sampled.astype(bool)).reshape(R_b, T_b * D_b)),
+        smp_lo=jnp.asarray(pad_rtd(wl.lo).reshape(R_b, T_b * D_b), dtype=I32),
+        smp_hi=jnp.asarray(pad_rtd(wl.hi).reshape(R_b, T_b * D_b), dtype=I32),
+    )
+    return PreparedWorkload(
+        tables=tables, warmup=int(wl.start.max()), num_pools=wl.num_pools,
+        R=R, T=T,
+    )
+
+
+def stack_tables(tables: Sequence[WorkloadTables]) -> WorkloadTables:
+    """Stack same-bucket tables along a new leading batch axis (for vmap)."""
+    buckets = {t.shape_bucket for t in tables}
+    if len(buckets) != 1:
+        raise ValueError(
+            f"cannot stack workload tables from different shape buckets: "
+            f"{sorted(buckets)}"
+        )
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *tables)

@@ -1,99 +1,35 @@
-"""Cycle-driven HyperX network simulator, vectorized in JAX.
+"""Cycle-driven HyperX network simulator — backward-compatible facade.
 
-The paper evaluates allocation strategies with CAMINOS, an event-driven
-flit-level simulator.  An event queue is hostile to JAX; the TPU-native
-re-think used here is a fully vectorized, cycle-driven simulator operating
-at *packet-time* granularity:
+The simulator core lives in :mod:`repro.core.engine`: static topology
+structure is compiled once per configuration (:mod:`engine.tables`), every
+per-workload array travels as a pytree jit argument
+(:mod:`engine.workload_tables`), the cycle kernel is
+:func:`engine.step.build_step`, and :class:`engine.SimEngine` offers
+``run`` / ``run_batch`` / ``run_seeds`` with vmapped whole-simulation
+batching.  See the engine package docstrings and DESIGN.md §6 for the
+physics and its fidelity deviations from CAMINOS.
 
-  * one simulator step = the service time of one packet on one link
-    (16 flit-cycles in the paper's configuration).  Every directed link and
-    every ejection port moves at most one packet per step, which makes link
-    bandwidth exact at packet granularity; phit-level interleaving inside a
-    packet is abstracted away.
-  * switches are input-queued: one FIFO per (input port, VC pool, hop-VC).
-    Hop-indexed virtual channels (a packet that has taken h hops occupies
-    VC h; with Omni-WAR's hop limit q+m this needs q+m+1 VCs) make the
-    buffer dependency graph acyclic => deadlock freedom, mirroring the
-    escape VCs real HyperX routers use.
-  * VC *pools* implement the paper's fabric partitioning (Sec. 6.3.3): each
-    pool has private FIFOs per input port, so traffic in other pools cannot
-    HoL-block it, but all pools share physical link bandwidth.
-  * routing is MIN or Omni-WAR: moves only in unaligned dimensions; the
-    minimal hop of a dimension is preferred over deroutes through an
-    occupancy cost with a deroute penalty (paper: P = 64 phits = 4 packets);
-    at most m = q deroutes per packet.
-  * output arbitration is random among requesting queue heads (paper
-    Table 2: "Allocator: Random"); internal speedup is modeled by letting
-    different VC queues of one input port win different outputs in the same
-    cycle.
-  * injection: each endpoint owns an injection queue and may inject one
-    packet per step (1 packet/packet-time == 1 phit/cycle, the paper's
-    maximum injection rate).
-  * the step/dependency engine executes Workload step tables (traffic.py):
-    windows, multi-destination steps, receive counts, infinite background
-    sources.
+This module keeps the original seed API alive:
 
-Everything is fixed-shape and jit-compiled; a whole simulation is one
-``lax.while_loop``.  See DESIGN.md §6 for the fidelity deviations from
-CAMINOS and their rationale.
+  * ``build_simulator(topo, wl, ...) -> run(seed) -> SimResult`` — now a
+    thin wrapper that *genuinely* shares one compilation across workloads
+    of the same shape bucket (the seed version re-traced per workload
+    because tables were closure constants);
+  * ``simulate(topo, wl, ...)`` — one-shot convenience;
+  * re-exports of ``SimState``, ``SimResult``, ``PACKET_FLITS``.
 """
 
 from __future__ import annotations
 
-import dataclasses
-import functools
-from typing import NamedTuple
-
-import jax
-import jax.numpy as jnp
-import numpy as np
-
+from repro.core.engine import (  # noqa: F401  (re-exports are the API)
+    PACKET_FLITS,
+    SimEngine,
+    SimResult,
+    SimState,
+    get_engine,
+)
 from repro.core.hyperx import HyperX
 from repro.core.traffic import Workload
-
-I32 = jnp.int32
-U32 = jnp.uint32
-
-
-class SimState(NamedTuple):
-    t: jnp.ndarray            # () int32 — current packet-time
-    key: jnp.ndarray          # PRNG key
-    # queue field arrays, flat (NQ * CAP,)
-    f_dst: jnp.ndarray        # destination endpoint id
-    f_der: jnp.ndarray        # deroutes left
-    f_hop: jnp.ndarray        # hops taken
-    f_rank: jnp.ndarray       # source rank
-    f_step: jnp.ndarray       # source step index
-    f_birth: jnp.ndarray      # injection time
-    qhead: jnp.ndarray        # (NQ,) ring head
-    qlen: jnp.ndarray         # (NQ,) occupancy
-    busy: jnp.ndarray         # (S*OUT,) output-buffer tokens (2x speedup)
-    # per-rank step engine
-    cur_step: jnp.ndarray     # (R,)
-    dst_i: jnp.ndarray        # (R,)
-    pkt_i: jnp.ndarray        # (R,)
-    completed: jnp.ndarray    # (R,) first incomplete step pointer
-    sent: jnp.ndarray         # ((R+1)*T,) delivered sends per (rank, step)
-    got: jnp.ndarray          # ((R+1)*T,) received packets per (rank, step)
-    # metrics
-    lat_sum: jnp.ndarray      # () float32 sum of target packet latencies
-    n_delivered: jnp.ndarray  # () target packets delivered
-    n_injected: jnp.ndarray   # () packets injected (all sources)
-    hop_sum: jnp.ndarray      # () network hops of delivered target packets
-
-
-@dataclasses.dataclass(frozen=True)
-class SimResult:
-    makespan: int             # packet-times until all target ranks completed
-    makespan_cycles: int      # flit-cycles (x packet size)
-    delivered: int            # target packets delivered
-    injected: int             # packets injected (targets + background)
-    avg_latency: float        # packet-times, target packets
-    avg_hops: float           # network hops per delivered target packet
-    completed: bool           # all target ranks finished within horizon
-
-
-PACKET_FLITS = 16  # paper Table 2: packet size 16 flits
 
 
 def build_simulator(
@@ -105,394 +41,27 @@ def build_simulator(
     penalty_packets: int = 4,
     horizon: int = 60_000,
 ):
-    """Compile a simulator for one workload shape; returns run(seed)->SimResult.
+    """Prepare a simulator for one workload; returns run(seed)->SimResult.
 
-    The returned callable re-traces only when the *shapes* of the workload
-    change, so sweeps over strategies (same k, same pattern) share one
-    compilation.
+    The underlying engine is memoised per configuration and re-traces only
+    when the workload's shape *bucket* is new, so sweeps over strategies
+    (same kernel, same job size) share one compilation and one engine.
     """
-    n, q, conc = topo.n, topo.q, topo.concentration
-    S = topo.num_switches
-    E = topo.num_endpoints
-    IN = q * n + conc          # network input ports (dense dim*val) + injection
-    OUT = q * n + conc         # network output ports + ejection per offset
-    P = wl.num_pools
-    m = q if max_deroutes is None else max_deroutes
-    V = q + m + 1              # hop-indexed VCs (deadlock freedom)
-    NQ = S * IN * P * V
-    H = NQ                     # one potential head per queue
-    R, T, MAXD = wl.R, wl.T, wl.maxd
-    CAP = cap
-    PEN = penalty_packets * 8  # cost scale: occupancy*8 + jitter(3 bits)
-    BIGCOST = jnp.int32(1 << 28)
-    use_min = mode == "min"
-    if mode not in ("min", "omniwar"):
-        raise ValueError(f"unknown routing mode {mode!r}")
-
-    # ---------------- static topology tables (jnp constants) ---------------
-    coords_np = topo.all_switch_coords()                       # (S, q)
-    nbr = np.empty((S, q * n), dtype=np.int32)                 # dst switch
-    in_port_at_nb = np.empty((S, q * n), dtype=np.int32)       # arrival port
-    for d in range(q):
-        for v in range(n):
-            nc = coords_np.copy()
-            nc[:, d] = v
-            ids = np.zeros(S, dtype=np.int64)
-            for d2 in range(q):
-                ids = ids * n + nc[:, d2]
-            nbr[:, d * n + v] = ids
-            in_port_at_nb[:, d * n + v] = d * n + coords_np[:, d]
-    coords = jnp.asarray(coords_np, dtype=I32)                 # (S, q)
-    nbr = jnp.asarray(nbr)
-    in_port_at_nb = jnp.asarray(in_port_at_nb)
-    port_dim = jnp.asarray(np.arange(q * n) // n, dtype=I32)   # (q*n,)
-    port_val = jnp.asarray(np.arange(q * n) % n, dtype=I32)
-
-    # ---------------- head index decomposition (constants) -----------------
-    h_idx = np.arange(H, dtype=np.int64)
-    h_vc = jnp.asarray(h_idx % V, dtype=I32)
-    h_pool = jnp.asarray((h_idx // V) % P, dtype=I32)
-    h_port = jnp.asarray((h_idx // (V * P)) % IN, dtype=I32)
-    h_sw = jnp.asarray(h_idx // (V * P * IN), dtype=I32)
-
-    # ---------------- workload tables --------------------------------------
-    rank_ep = jnp.asarray(wl.rank_ep, dtype=I32)               # (R,)
-    ep_rank = np.full(E, -1, dtype=np.int32)
-    ep_rank[wl.rank_ep] = np.arange(R)
-    ep_rank = jnp.asarray(ep_rank)
-    pool_of_rank = jnp.asarray(wl.pool, dtype=I32)
-    finite = jnp.asarray(~wl.infinite)
-    window = jnp.asarray(wl.window, dtype=I32)
-    start_t = jnp.asarray(wl.start, dtype=I32)
-    warmup = int(wl.start.max())
-    sends_dst = jnp.asarray(wl.sends_dst.reshape(R, T * MAXD), dtype=I32)
-    npkts = jnp.asarray(wl.npkts.reshape(R, T * MAXD), dtype=I32)
-    deg = jnp.asarray(wl.deg, dtype=I32)                       # (R, T)
-    recv_need = jnp.asarray(wl.recv_need.reshape(R * T), dtype=I32)
-    total_sends = jnp.asarray(wl.total_sends.reshape(R * T), dtype=I32)
-    sampled = jnp.asarray(wl.sampled.reshape(R, T * MAXD))
-    smp_lo = jnp.asarray(wl.lo.reshape(R, T * MAXD), dtype=I32)
-    smp_hi = jnp.asarray(wl.hi.reshape(R, T * MAXD), dtype=I32)
-
-    # endpoint -> injection queue (pool of its rank, VC 0)
-    e_ids = np.arange(E)
-    e_sw = e_ids // conc
-    e_port = q * n + (e_ids % conc)
-    inj_qi_np = ((e_sw * IN + e_port) * P) * V  # + pool*V later (pool varies)
-    inj_base = jnp.asarray(inj_qi_np, dtype=I32)
-
-    OOB = jnp.int32(NQ * CAP + 5)  # safely out of bounds => dropped scatters
-
-    def step(state: SimState) -> SimState:
-        t = state.t
-        key = jax.random.fold_in(state.key, t)
-        k_arb, k_jit, k_smp = jax.random.split(key, 3)
-
-        qlen, qhead = state.qlen, state.qhead
-        # per-(switch, in-port) total occupancy (packets over all pools+VCs):
-        # the adaptive-routing congestion signal (CAMINOS counts phits in the
-        # whole input buffer; penalty/range ratio ~1/8 is preserved).
-        port_occ = qlen.reshape(S * IN, P * V).sum(axis=1)
-
-        # ---------------- heads --------------------------------------------
-        exists = qlen > 0                                   # (H,)
-        slot = jnp.arange(H, dtype=I32) * CAP + qhead
-        dst = state.f_dst[slot]
-        der = state.f_der[slot]
-        hop = state.f_hop[slot]
-        dsw = dst // conc
-        dof = dst % conc
-
-        cur = h_sw
-        at_dst = cur == dsw
-
-        # ---------------- routing: candidate network ports -----------------
-        ccur = coords[cur]                                  # (H, q)
-        cdst = coords[dsw]                                  # (H, q)
-        pv = port_val[None, :]                              # (1, q*n)
-        cur_d = ccur[:, port_dim]                           # (H, q*n)
-        dst_d = cdst[:, port_dim]
-        unaligned = cur_d != dst_d                          # (H, q*n)
-        not_self = pv != cur_d
-        is_min = (pv == dst_d) & unaligned
-        nb = nbr[cur]                                       # (H, q*n)
-        ipnb = in_port_at_nb[cur]                           # (H, q*n)
-        vc_next = jnp.minimum(hop + 1, V - 1)[:, None]      # (H, 1)
-        qi_down = ((nb * IN + ipnb) * P + h_pool[:, None]) * V + vc_next
-        room = qlen[qi_down] < CAP                          # own queue has space
-        occ = port_occ[nb * IN + ipnb]                      # congestion signal
-        busy = jnp.maximum(state.busy - 1, 0)               # link served 1 pkt
-        avail_net = busy[cur[:, None] * OUT + jnp.arange(q * n)[None, :]] < 2
-        if use_min:
-            legal = is_min & room & avail_net
-        else:
-            legal = (
-                unaligned & not_self & (is_min | (der[:, None] > 0))
-                & room & avail_net
-            )
-        jitter = jax.random.randint(k_jit, (H, q * n), 0, 8, dtype=I32)
-        cost = occ * 8 + PEN * (~is_min) + jitter
-        cost = jnp.where(legal, cost, BIGCOST)
-        best = jnp.argmin(cost, axis=1).astype(I32)         # (H,)
-        best_cost = jnp.take_along_axis(cost, best[:, None], 1)[:, 0]
-        has_port = best_cost < BIGCOST
-        best_min = jnp.take_along_axis(is_min, best[:, None], 1)[:, 0]
-
-        out_port = jnp.where(at_dst, q * n + dof, best)
-        requesting = exists & (at_dst | has_port)
-        requesting = requesting & (busy[cur * OUT + out_port] < 2)
-        # NOTE: scatter/gather OOB markers must be POSITIVE out-of-range —
-        # negative indices wrap NumPy-style in jnp .at[] even with mode='drop'.
-        OOB_OUT = jnp.int32(S * OUT + 1)
-        req_out = jnp.where(requesting, cur * OUT + out_port, OOB_OUT)
-        req_out_safe = jnp.minimum(req_out, S * OUT - 1)
-
-        # ------------- iterative random arbitration (2x internal speedup) --
-        # Round 1: every head requests its best port; one random winner per
-        # output.  Round 2 (separable-allocator iteration + the paper's 2x
-        # crossbar speedup): losers re-route to their best port that still
-        # has output tokens, enabling a second grant per cycle per output.
-        # The `busy` token bucket keeps sustained link rate at 1 pkt/time.
-        arb_key = jax.random.bits(k_arb, (H,), dtype=U32) >> 17  # 15 bits
-        packed = (arb_key << 17) | jnp.arange(H, dtype=U32)
-        INVALID = jnp.uint32(0xFFFFFFFF)
-        grant1 = jnp.full(S * OUT, INVALID)
-        grant1 = grant1.at[req_out].min(packed, mode="drop")
-        won1 = requesting & (grant1[req_out_safe] == packed)
-
-        qi_best1 = jnp.take_along_axis(qi_down, best[:, None], 1)[:, 0]
-        arr1 = jnp.zeros(NQ, dtype=I32).at[
-            jnp.where(won1 & ~at_dst, qi_best1, NQ + 1)
-        ].add(1, mode="drop")
-        g1 = jnp.zeros(S * OUT, dtype=I32).at[
-            jnp.where(won1, req_out, OOB_OUT)
-        ].add(1, mode="drop")
-        tokens = (2 - busy) - g1                            # remaining slots
-
-        loser = requesting & ~won1
-        # re-route: best legal port with tokens left and downstream room
-        # (accounting for the round-1 arrival into the same queue)
-        tok_net = tokens[cur[:, None] * OUT + jnp.arange(q * n)[None, :]] > 0
-        room_2 = qlen[qi_down] + arr1[qi_down] < CAP
-        cost2 = jnp.where(legal & tok_net & room_2, cost, BIGCOST)
-        best2 = jnp.argmin(cost2, axis=1).astype(I32)
-        has2 = jnp.take_along_axis(cost2, best2[:, None], 1)[:, 0] < BIGCOST
-        ej_ok = at_dst & (tokens[cur * OUT + q * n + dof] > 0)
-        out2 = jnp.where(at_dst, q * n + dof, best2)
-        req2 = loser & jnp.where(at_dst, ej_ok, has2)
-        req_out2 = jnp.where(req2, cur * OUT + out2, OOB_OUT)
-        req_out2_safe = jnp.minimum(req_out2, S * OUT - 1)
-        grant2 = jnp.full(S * OUT, INVALID)
-        grant2 = grant2.at[req_out2].min(packed, mode="drop")
-        won2 = req2 & (grant2[req_out2_safe] == packed)
-        won = won1 | won2
-
-        # final chosen queue / minimality per winner
-        qi_best = jnp.where(
-            won2,
-            jnp.take_along_axis(qi_down, jnp.minimum(best2, q * n - 1)[:, None], 1)[:, 0],
-            qi_best1,
-        )
-        best_min = jnp.where(
-            won2,
-            jnp.take_along_axis(is_min, jnp.minimum(best2, q * n - 1)[:, None], 1)[:, 0],
-            best_min,
-        )
-
-        # output token update: +1 per grant (burst absorbed by 2x speedup)
-        gcount = g1.at[jnp.where(won2, req_out2, OOB_OUT)].add(1, mode="drop")
-        busy = busy + gcount
-
-        # ---------------- dequeue winners ----------------------------------
-        qhead = jnp.where(won, (qhead + 1) % CAP, qhead)
-        dlen = jnp.zeros(NQ, dtype=I32).at[jnp.arange(H)].add(-won.astype(I32))
-
-        # ---------------- deliveries (ejection winners) --------------------
-        eject = won & at_dst
-        rank = state.f_rank[slot]
-        pstep = state.f_step[slot]
-        src_finite = finite[rank]
-        # sender-side accounting row (infinite sources -> trash row R)
-        send_row = jnp.where(src_finite, rank, R)
-        OOB_RT = jnp.int32((R + 1) * T + 1)
-        sent = state.sent.at[
-            jnp.where(eject, send_row * T + pstep, OOB_RT)
-        ].add(1, mode="drop")
-        drank = ep_rank[dst]
-        drank_ok = (drank >= 0) & finite[jnp.maximum(drank, 0)]
-        recv_row = jnp.where(drank_ok, drank, R)
-        got = state.got.at[
-            jnp.where(eject, recv_row * T + pstep, OOB_RT)
-        ].add(1, mode="drop")
-        tgt_del = eject & src_finite
-        lat_sum = state.lat_sum + jnp.sum(
-            jnp.where(tgt_del, (t - state.f_birth[slot]).astype(jnp.float32), 0.0)
-        )
-        hop_sum = state.hop_sum + jnp.sum(jnp.where(tgt_del, hop, 0))
-        n_delivered = state.n_delivered + jnp.sum(tgt_del)
-
-        # ---------------- network moves (enqueue downstream) ---------------
-        net = won & ~at_dst
-        tgt_qi = qi_best
-        # ring tail = head_pre + len_pre, invariant under same-cycle dequeue;
-        # a round-2 arrival lands one slot behind the round-1 arrival.
-        tgt_slot = (
-            state.qhead[tgt_qi] + qlen[tgt_qi]
-            + jnp.where(won2, arr1[tgt_qi], 0)
-        ) % CAP
-        tgt_flat = jnp.where(net, tgt_qi * CAP + tgt_slot, OOB)
-        f_dst = state.f_dst.at[tgt_flat].set(dst, mode="drop")
-        f_der = state.f_der.at[tgt_flat].set(der - (~best_min), mode="drop")
-        f_hop = state.f_hop.at[tgt_flat].set(hop + 1, mode="drop")
-        f_rank = state.f_rank.at[tgt_flat].set(rank, mode="drop")
-        f_step = state.f_step.at[tgt_flat].set(pstep, mode="drop")
-        f_birth = state.f_birth.at[tgt_flat].set(state.f_birth[slot], mode="drop")
-        dlen = dlen.at[jnp.where(net, tgt_qi, NQ + 1)].add(1, mode="drop")
-
-        # ---------------- step-engine: completion pointers ------------------
-        completed = state.completed
-        for _ in range(4):
-            pidx = jnp.arange(R, dtype=I32) * T + jnp.minimum(completed, T - 1)
-            comp = (completed >= T) | (
-                (sent[pidx] >= total_sends[pidx]) & (got[pidx] >= recv_need[pidx])
-            )
-            completed = completed + (finite & (completed < T) & comp)
-
-        # skip empty (padded) steps
-        cs = state.cur_step
-        cs_deg = deg[jnp.arange(R), jnp.minimum(cs, T - 1)]
-        cs = cs + (finite & (cs < T) & (cs_deg == 0))
-
-        # ---------------- injection ----------------------------------------
-        r_of_e = ep_rank                                    # (E,)
-        r_safe = jnp.maximum(r_of_e, 0)
-        e_fin = finite[r_safe]
-        e_cs = jnp.where(e_fin, cs[r_safe], 0)
-        e_di = jnp.where(e_fin, state.dst_i[r_safe], 0)
-        e_pk = jnp.where(e_fin, state.pkt_i[r_safe], 0)
-        flat_td = jnp.minimum(e_cs, T - 1) * MAXD + e_di
-        e_deg = deg[r_safe, jnp.minimum(e_cs, T - 1)]
-        e_np = npkts[r_safe, flat_td]
-        in_window = e_cs < jnp.minimum(
-            jnp.asarray(T, I32), completed[r_safe] + window[r_safe]
-        )
-        has_work = jnp.where(e_fin, (e_cs < T) & (e_di < e_deg) & in_window, True)
-        has_work = has_work & (t >= start_t[r_safe])
-        inj_qi = inj_base + pool_of_rank[r_safe] * V
-        has_room = qlen[inj_qi] + dlen[inj_qi] < CAP  # dlen: arrivals this cycle
-        do_inj = (r_of_e >= 0) & has_work & has_room
-
-        d_fixed = sends_dst[r_safe, flat_td]
-        rspan = jnp.maximum(smp_hi[r_safe, flat_td] - smp_lo[r_safe, flat_td], 1)
-        rnd = jax.random.bits(k_smp, (E,), dtype=U32)
-        d_smp = smp_lo[r_safe, flat_td] + (rnd % rspan.astype(U32)).astype(I32)
-        d_rank = jnp.where(sampled[r_safe, flat_td], d_smp, d_fixed)
-        d_rank = jnp.clip(d_rank, 0, R - 1)
-        d_ep = rank_ep[d_rank]
-
-        inj_flat = jnp.where(
-            do_inj, inj_qi * CAP + (state.qhead[inj_qi] + qlen[inj_qi]) % CAP,
-            OOB,
-        )
-        f_dst = f_dst.at[inj_flat].set(d_ep, mode="drop")
-        f_der = f_der.at[inj_flat].set(jnp.int32(m), mode="drop")
-        f_hop = f_hop.at[inj_flat].set(0, mode="drop")
-        f_rank = f_rank.at[inj_flat].set(r_safe, mode="drop")
-        f_step = f_step.at[inj_flat].set(jnp.where(e_fin, e_cs, 0), mode="drop")
-        f_birth = f_birth.at[inj_flat].set(t, mode="drop")
-        dlen = dlen.at[jnp.where(do_inj, inj_qi, NQ + 1)].add(1, mode="drop")
-        n_injected = state.n_injected + jnp.sum(do_inj)
-
-        # cursor advance for finite injecting ranks
-        adv = do_inj & e_fin
-        pk2 = jnp.where(adv, e_pk + 1, e_pk)
-        move_d = adv & (pk2 >= e_np)
-        di2 = jnp.where(move_d, e_di + 1, e_di)
-        pk2 = jnp.where(move_d, 0, pk2)
-        move_s = move_d & (di2 >= e_deg)
-        cs2 = jnp.where(move_s, e_cs + 1, e_cs)
-        di2 = jnp.where(move_s, 0, di2)
-        # scatter back to rank arrays (each finite rank has exactly 1 endpoint)
-        upd = jnp.where((r_of_e >= 0) & e_fin, r_of_e, R + 5)
-        cur_step = cs.at[upd].set(cs2, mode="drop")
-        dst_i = state.dst_i.at[upd].set(di2, mode="drop")
-        pkt_i = state.pkt_i.at[upd].set(pk2, mode="drop")
-
-        return SimState(
-            t=t + 1, key=state.key,
-            f_dst=f_dst, f_der=f_der, f_hop=f_hop, f_rank=f_rank,
-            f_step=f_step, f_birth=f_birth,
-            qhead=qhead, qlen=qlen + dlen, busy=busy,
-            cur_step=cur_step, dst_i=dst_i, pkt_i=pkt_i, completed=completed,
-            sent=sent, got=got,
-            lat_sum=lat_sum, n_delivered=n_delivered, n_injected=n_injected,
-            hop_sum=hop_sum,
-        )
-
-    def all_done(state: SimState) -> jnp.ndarray:
-        return jnp.all(jnp.where(finite, state.completed >= T, True))
-
-    def cond(state: SimState) -> jnp.ndarray:
-        return (state.t < horizon) & ~all_done(state)
-
-    @jax.jit
-    def run(seed: jnp.ndarray) -> tuple:
-        z = functools.partial(jnp.zeros, dtype=I32)
-        state = SimState(
-            t=jnp.int32(0), key=jax.random.PRNGKey(seed),
-            f_dst=z(NQ * CAP), f_der=z(NQ * CAP), f_hop=z(NQ * CAP),
-            f_rank=z(NQ * CAP), f_step=z(NQ * CAP), f_birth=z(NQ * CAP),
-            qhead=z(NQ), qlen=z(NQ), busy=z(S * OUT),
-            cur_step=z(R), dst_i=z(R), pkt_i=z(R), completed=z(R),
-            sent=z((R + 1) * T), got=z((R + 1) * T),
-            lat_sum=jnp.float32(0.0),
-            n_delivered=jnp.int32(0), n_injected=jnp.int32(0),
-            hop_sum=jnp.int32(0),
-        )
-        final = jax.lax.while_loop(cond, step, state)
-        return (
-            final.t, all_done(final), final.n_delivered, final.n_injected,
-            final.lat_sum, final.hop_sum,
-        )
-
-    def run_debug(seed: int = 0, steps: int = 512, stride: int = 16):
-        """Scan ``steps`` cycles; return per-stride (delivered, injected, qsum)."""
-
-        def body(state, _):
-            s2 = step(state)
-            return s2, (s2.n_delivered, s2.n_injected, s2.qlen.sum())
-
-        z = functools.partial(jnp.zeros, dtype=I32)
-        state = SimState(
-            t=jnp.int32(0), key=jax.random.PRNGKey(seed),
-            f_dst=z(NQ * CAP), f_der=z(NQ * CAP), f_hop=z(NQ * CAP),
-            f_rank=z(NQ * CAP), f_step=z(NQ * CAP), f_birth=z(NQ * CAP),
-            qhead=z(NQ), qlen=z(NQ), busy=z(S * OUT),
-            cur_step=z(R), dst_i=z(R), pkt_i=z(R), completed=z(R),
-            sent=z((R + 1) * T), got=z((R + 1) * T),
-            lat_sum=jnp.float32(0.0),
-            n_delivered=jnp.int32(0), n_injected=jnp.int32(0),
-            hop_sum=jnp.int32(0),
-        )
-        final, (d, i, qs) = jax.lax.scan(body, state, None, length=steps)
-        return final, np.asarray(d)[::stride], np.asarray(i)[::stride], np.asarray(qs)[::stride]
+    engine = get_engine(
+        topo, mode=mode, num_pools=wl.num_pools, max_deroutes=max_deroutes,
+        cap=cap, penalty_packets=penalty_packets,
+    )
+    prep = engine.prepare(wl)
 
     def run_result(seed: int = 0) -> SimResult:
-        t, done, ndel, ninj, lat, hops = (
-            np.asarray(x) for x in run(jnp.int32(seed))
-        )
-        ndel = int(ndel)
-        return SimResult(
-            makespan=int(t) - warmup,
-            makespan_cycles=(int(t) - warmup) * PACKET_FLITS,
-            delivered=ndel,
-            injected=int(ninj),
-            avg_latency=float(lat) / max(ndel, 1),
-            avg_hops=float(hops) / max(ndel, 1),
-            completed=bool(done),
-        )
+        return engine.run(prep, seed=seed, horizon=horizon)
+
+    def run_debug(seed: int = 0, steps: int = 512, stride: int = 16):
+        return engine.run_debug(prep, seed=seed, steps=steps, stride=stride)
 
     run_result.debug = run_debug
+    run_result.engine = engine
+    run_result.prepared = prep
     return run_result
 
 

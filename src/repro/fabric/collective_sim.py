@@ -5,10 +5,14 @@ from partition bandwidth.  This module grounds that price: it expresses a
 mesh-axis collective as a step-table workload (ring all-reduce = the
 paper's neighbour-exchange; all-to-all = the paper's All-to-All kernel)
 over the placement's actual endpoints, runs it through the cycle-level
-simulator, and returns measured makespans.  Benchmarks compare analytic
-vs simulated ordering across allocation strategies — closing the loop
-between the paper's simulator evidence and the framework's launcher
+simulator engine, and returns measured makespans.  Benchmarks compare
+analytic vs simulated ordering across allocation strategies — closing the
+loop between the paper's simulator evidence and the framework's launcher
 policy.
+
+Strategy comparisons run through ``SimEngine.run_batch``: every strategy's
+workload shares one shape bucket, so the whole comparison is a single
+compilation and one vmapped device call.
 """
 
 from __future__ import annotations
@@ -17,8 +21,8 @@ import numpy as np
 
 from repro.core import traffic as tr
 from repro.core.allocation import Partition
+from repro.core.engine import get_engine
 from repro.core.hyperx import HyperX
-from repro.core.simulator import build_simulator
 from repro.fabric.placement import HyperXPlacement
 
 
@@ -39,24 +43,38 @@ def _alltoall_app(k: int) -> tr.AppTraffic:
     return tr.all_to_all(k)
 
 
-def simulate_axis_collective(
+def _axis_groups(placement: HyperXPlacement, axis: str,
+                 num_groups: int | None) -> np.ndarray:
+    groups = placement.axis_groups(axis)
+    return groups if num_groups is None else groups[:num_groups]
+
+
+def _result_row(placement: HyperXPlacement, axis: str, kind: str,
+                num_groups: int | None, res) -> dict:
+    groups = _axis_groups(placement, axis, num_groups)
+    return {
+        "strategy": placement.strategy, "axis": axis, "kind": kind,
+        "groups": len(groups), "group_size": groups.shape[1],
+        "makespan": res.makespan if res.completed else -1,
+        "completed": res.completed,
+        "avg_hops": round(res.avg_hops, 3),
+    }
+
+
+def axis_collective_workload(
     placement: HyperXPlacement,
     axis: str,
     kind: str = "all_reduce",
     num_groups: int | None = None,
-    seed: int = 0,
-    horizon: int = 120_000,
-) -> dict:
-    """Run ``kind`` concurrently over (a subset of) the axis groups.
+) -> tr.Workload:
+    """Express ``kind`` over (a subset of) the axis groups as one workload.
 
     All groups run simultaneously — exactly how a mesh collective executes —
     so inter-group link contention is captured, which is what
     distinguishes allocation strategies (the paper's Lesson 2/3).
     """
     topo: HyperX = placement.topo
-    groups = placement.axis_groups(axis)
-    if num_groups is not None:
-        groups = groups[:num_groups]
+    groups = _axis_groups(placement, axis, num_groups)
     k = groups.shape[1]
     app_fn = {"all_reduce": _ring_allreduce_app, "all_to_all": _alltoall_app}[kind]
     apps = []
@@ -67,15 +85,23 @@ def simulate_axis_collective(
             switches=np.unique(np.asarray(g) // topo.concentration),
         )
         apps.append((app_fn(k), part))
-    wl = tr.compose_workload(topo, apps)
-    res = build_simulator(topo, wl, mode="omniwar", horizon=horizon)(seed)
-    return {
-        "strategy": placement.strategy, "axis": axis, "kind": kind,
-        "groups": len(groups), "group_size": k,
-        "makespan": res.makespan if res.completed else -1,
-        "completed": res.completed,
-        "avg_hops": round(res.avg_hops, 3),
-    }
+    return tr.compose_workload(topo, apps)
+
+
+def simulate_axis_collective(
+    placement: HyperXPlacement,
+    axis: str,
+    kind: str = "all_reduce",
+    num_groups: int | None = None,
+    seed: int = 0,
+    horizon: int = 120_000,
+) -> dict:
+    """Run ``kind`` concurrently over (a subset of) the axis groups."""
+    wl = axis_collective_workload(placement, axis, kind, num_groups)
+    engine = get_engine(placement.topo, mode="omniwar",
+                        num_pools=wl.num_pools)
+    res = engine.run(wl, seed=seed, horizon=horizon)
+    return _result_row(placement, axis, kind, num_groups, res)
 
 
 def compare_strategies_simulated(
@@ -88,13 +114,21 @@ def compare_strategies_simulated(
     num_groups: int | None = 8,
     seed: int = 0,
 ) -> list[dict]:
-    """Measured makespan of one mesh collective per allocation strategy."""
+    """Measured makespan of one mesh collective per allocation strategy.
+
+    All strategies execute as one batched ``run_batch`` device call (their
+    workloads share a shape bucket).
+    """
     from repro.fabric.placement import place_job
 
-    out = []
-    for strat in strategies:
-        placement = place_job(strat, mesh_shape, axis_names, seed=seed)
-        out.append(simulate_axis_collective(placement, axis, kind,
-                                            num_groups=num_groups, seed=seed))
+    placements = [place_job(s, mesh_shape, axis_names, seed=seed)
+                  for s in strategies]
+    wls = [axis_collective_workload(p, axis, kind, num_groups)
+           for p in placements]
+    engine = get_engine(placements[0].topo, mode="omniwar",
+                        num_pools=wls[0].num_pools)
+    results = engine.run_batch(wls, seeds=[seed] * len(wls), horizon=120_000)
+    out = [_result_row(p, axis, kind, num_groups, res)
+           for p, res in zip(placements, results)]
     out.sort(key=lambda d: d["makespan"] if d["makespan"] > 0 else 10**9)
     return out

@@ -2,7 +2,11 @@
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:  # optional test extra (pip install -e .[test]); property tests need it
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # pragma: no cover - exercised only without hypothesis
+    given = settings = st = None
 
 from repro.core.allocation import (
     ALLOCATIONS,
@@ -47,14 +51,18 @@ def test_switch_locality_matches_table1(strat):
     assert has_switch_locality(topo, part.endpoints) == expected
 
 
-@given(st.integers(0, 3), st.sampled_from(STRATS), st.integers(0, 99))
-@settings(max_examples=60, deadline=None)
-def test_allocation_job_property(job, strat, seed):
-    """Property: any job id / seed yields a valid in-range 64-endpoint block."""
-    topo = HyperX(n=8, q=2)
-    part = allocate_partition(strat, topo, job, seed=seed)
-    assert len(np.unique(part.endpoints)) == 64
-    assert part.endpoints.min() >= 0 and part.endpoints.max() < 512
+if st is not None:
+    @given(st.integers(0, 3), st.sampled_from(STRATS), st.integers(0, 99))
+    @settings(max_examples=60, deadline=None)
+    def test_allocation_job_property(job, strat, seed):
+        """Property: any job id / seed yields a valid in-range 64-endpoint block."""
+        topo = HyperX(n=8, q=2)
+        part = allocate_partition(strat, topo, job, seed=seed)
+        assert len(np.unique(part.endpoints)) == 64
+        assert part.endpoints.min() >= 0 and part.endpoints.max() < 512
+else:
+    def test_allocation_job_property():
+        pytest.importorskip("hypothesis")
 
 
 @pytest.mark.parametrize("strat", STRATS)

@@ -2,7 +2,11 @@
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:  # optional test extra (pip install -e .[test]); property tests need it
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # pragma: no cover - exercised only without hypothesis
+    given = settings = st = None
 
 from repro.core.hyperx import HyperX
 
@@ -49,13 +53,18 @@ def test_neighbors_count():
         assert len(set(nbrs)) == len(nbrs)
 
 
-@given(st.integers(2, 6), st.integers(1, 3), st.integers(0, 10**6), st.integers(0, 10**6))
-@settings(max_examples=50, deadline=None)
-def test_distance_is_hamming(n, q, a, b):
-    hx = HyperX(n=n, q=q)
-    s1, s2 = a % hx.num_switches, b % hx.num_switches
-    c1, c2 = hx.switch_coords(s1), hx.switch_coords(s2)
-    assert hx.distance(s1, s2) == sum(x != y for x, y in zip(c1, c2))
+if st is not None:
+    @given(st.integers(2, 6), st.integers(1, 3),
+           st.integers(0, 10**6), st.integers(0, 10**6))
+    @settings(max_examples=50, deadline=None)
+    def test_distance_is_hamming(n, q, a, b):
+        hx = HyperX(n=n, q=q)
+        s1, s2 = a % hx.num_switches, b % hx.num_switches
+        c1, c2 = hx.switch_coords(s1), hx.switch_coords(s2)
+        assert hx.distance(s1, s2) == sum(x != y for x, y in zip(c1, c2))
+else:
+    def test_distance_is_hamming():
+        pytest.importorskip("hypothesis")
 
 
 def test_minimal_paths_count_and_validity():
