@@ -42,6 +42,15 @@ PAPER_TOPO = HyperX(n=8, q=2)
 
 NUM_SEEDS = 1          # set by benchmarks.run --seeds
 CSV_DIR: str | None = None  # set by benchmarks.run --csv
+QUICK = True           # set by benchmarks.run --quick/--full
+
+
+def resolve_quick(quick) -> bool:
+    """Shared CI-sizing switch.  Benchmark modules take ``run(quick=None)``
+    and resolve through this, so :data:`QUICK` (set once by
+    ``benchmarks.run``) is the single source of truth unless a caller
+    overrides explicitly — no more half-quick/half-full grids."""
+    return QUICK if quick is None else bool(quick)
 
 
 def emit(rows: list[dict], name: str):

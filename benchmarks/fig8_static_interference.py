@@ -6,14 +6,17 @@ from benchmarks.common import (
     STRATEGIES,
     emit,
     interference_workload,
+    resolve_quick,
     summarize,
     sweep,
 )
 
 
-def run(quick=False):
+def run(quick=None):
+    quick = resolve_quick(quick)
     rows = []
-    for kind in ("uniform", "random_switch_permutation"):
+    kinds = ("uniform",) if quick else ("uniform", "random_switch_permutation")
+    for kind in kinds:
         iso_wls = [interference_workload(s, kind, with_bg=False)
                    for s in STRATEGIES]
         bg_wls = [interference_workload(s, kind, with_bg=True)

@@ -26,6 +26,7 @@ MODULES = [
     "table3_escalation",
     "table4_interference",
     "fig11_fabric_partitioning",
+    "sched_stream",
     "collective_sim_bench",
     "roofline_bench",
 ]
@@ -33,6 +34,8 @@ MODULES = [
 
 def main(argv=None):
     p = argparse.ArgumentParser()
+    p.add_argument("--quick", action="store_true",
+                   help="CI-sized grids (the default; --full overrides)")
     p.add_argument("--full", action="store_true")
     p.add_argument("--only", default=None)
     p.add_argument("--seeds", type=int, default=1,
@@ -40,11 +43,14 @@ def main(argv=None):
     p.add_argument("--csv", default=None, metavar="DIR",
                    help="also write each table to DIR/<name>.csv")
     args = p.parse_args(argv)
+    if args.quick and args.full:
+        p.error("--quick and --full are mutually exclusive")
     quick = not args.full
 
     from benchmarks import common
     common.NUM_SEEDS = max(1, args.seeds)
     common.CSV_DIR = args.csv
+    common.QUICK = quick
 
     mods = [m for m in MODULES if args.only is None or args.only in m]
     t00 = time.time()

@@ -27,7 +27,7 @@ them for thousands of ranks at once.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, Tuple
+from typing import Callable, Dict, Sequence, Tuple
 
 import numpy as np
 
@@ -221,6 +221,74 @@ def allocate_partition(
     )
 
 
+def allocate_blocks(
+    strategy: str | AllocationStrategy,
+    topo: HyperX,
+    block_ids: Sequence[int] | np.ndarray,
+    job_id: int = 0,
+    size: int | None = None,
+    seed: int = 0,
+) -> Partition:
+    """Allocate a partition over an *arbitrary* list of base blocks.
+
+    Generalizes :func:`allocate_partition` (which always takes consecutive
+    blocks) to the fragmented-machine case: the online scheduler hands the
+    block slots it found free, in rank order.  Rank ``r`` lands in block
+    ``block_ids[r // n**2]``; ``size`` (default: all of them) may take a
+    prefix of the final block.  All strategies keep distinct block ids in
+    ``[0, n)`` pairwise disjoint, so any subset of slots yields a valid
+    partition.
+    """
+    strat = get_strategy(strategy) if isinstance(strategy, str) else strategy
+    n = topo.n
+    block = n * n
+    block_ids = np.asarray(block_ids, dtype=np.int64)
+    if block_ids.ndim != 1 or len(block_ids) == 0:
+        raise ValueError(f"need a non-empty 1D block list, got {block_ids!r}")
+    if len(np.unique(block_ids)) != len(block_ids):
+        raise ValueError(f"duplicate block ids in {block_ids.tolist()}")
+    if (block_ids < 0).any() or (block_ids >= n).any():
+        raise ValueError(f"block ids {block_ids.tolist()} out of range [0, {n})")
+    if size is None:
+        size = len(block_ids) * block
+    if not 0 < size <= len(block_ids) * block:
+        raise ValueError(
+            f"size {size} does not fit {len(block_ids)} blocks of {block}"
+        )
+    ranks = np.arange(size, dtype=np.int64)
+    blk = block_ids[ranks // block]
+    r_in = ranks % block
+    rng = np.random.default_rng(seed) if strat.needs_rng else None
+    s_y, s_x, c = strat(blk, r_in // n, r_in % n, n, rng)
+    endpoints = (s_y * n + s_x) * topo.concentration + c
+    return Partition(
+        strategy=strat.name,
+        topo=topo,
+        job_id=job_id,
+        size=size,
+        endpoints=endpoints.astype(np.int64),
+        switches=np.unique(s_y * n + s_x).astype(np.int64),
+    )
+
+
+def scavenge_partition(
+    free_mask: np.ndarray, topo: HyperX, job_id: int, size: int
+) -> Partition:
+    """The first ``size`` free endpoints as a structureless partition.
+
+    Shared last-resort placement used by every allocator's ``scavenge``;
+    the caller does its own record-keeping (free-mask update, job table).
+    """
+    free = np.flatnonzero(free_mask)
+    if len(free) < size:
+        raise RuntimeError(f"no {size} free endpoints to scavenge")
+    eps = free[:size].astype(np.int64)
+    return Partition(
+        strategy="scavenge", topo=topo, job_id=job_id, size=size,
+        endpoints=eps, switches=np.unique(eps // topo.concentration),
+    )
+
+
 def machine_partitions(
     strategy: str | AllocationStrategy,
     topo: HyperX,
@@ -293,6 +361,17 @@ class JobAllocator:
             f"no free {strat.name} partition of size {size} "
             f"(free endpoints: {self.capacity()})"
         )
+
+    def scavenge(self, size: int) -> Partition:
+        """Last-resort placement: the first ``size`` free endpoints, with no
+        allocation structure at all.  The elastic runtime falls back to this
+        when every strategy (including the stochastic ones) fails on the
+        fragmented fleet."""
+        part = scavenge_partition(self.free, self.topo, self._next_job, size)
+        self.free[part.endpoints] = False
+        self.jobs[part.job_id] = part
+        self._next_job += 1
+        return part
 
     def release(self, job_id: int) -> None:
         part = self.jobs.pop(job_id)

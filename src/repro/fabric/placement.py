@@ -69,6 +69,35 @@ class HyperXPlacement:
     def num_devices(self) -> int:
         return int(np.prod(self.mesh_shape))
 
+    @classmethod
+    def from_partition(
+        cls,
+        part,
+        mesh_shape: Sequence[int],
+        axis_names: Sequence[str],
+    ) -> "HyperXPlacement":
+        """Lay a mesh onto an already-allocated partition (rank order).
+
+        This is how dynamically-placed jobs (the online scheduler's ledger,
+        the elastic runtime's repair path) become JAX meshes: whatever block
+        set the allocator found free, its rank order carries the strategy's
+        locality structure and the last mesh axis walks consecutive ranks.
+        """
+        mesh_shape = tuple(int(s) for s in mesh_shape)
+        size = int(np.prod(mesh_shape))
+        if len(part.endpoints) < size:
+            raise ValueError(
+                f"partition has {len(part.endpoints)} endpoints < mesh "
+                f"{mesh_shape}"
+            )
+        return cls(
+            topo=part.topo,
+            strategy=part.strategy,
+            mesh_shape=mesh_shape,
+            axis_names=tuple(axis_names)[-len(mesh_shape):],
+            endpoints=np.asarray(part.endpoints[:size]).reshape(mesh_shape),
+        )
+
     def axis_groups(self, axis: str) -> np.ndarray:
         """(num_groups, group_size) endpoint ids of each group of ``axis``.
 

@@ -78,24 +78,34 @@ class FleetRuntime:
         axis_names: tuple[str, ...],
         strategy: str = "diagonal",
         topo: HyperX | None = None,
+        allocator=None,
     ):
+        """``allocator`` may inject any JobAllocator-compatible resource
+        manager (e.g. the online scheduler's ``repro.sched.BlockLedger``) so
+        the fleet and a job stream share one machine-state ledger; default
+        is a private JobAllocator over ``topo``."""
         size = int(np.prod(mesh_shape))
-        self.topo = topo or default_fleet(size)
-        self.allocator = JobAllocator(self.topo, strategy=strategy)
+        if allocator is not None and topo is not None and allocator.topo != topo:
+            raise ValueError(
+                f"allocator manages {allocator.topo}, runtime asked for {topo}"
+            )
+        self.topo = allocator.topo if allocator is not None else (
+            topo or default_fleet(size)
+        )
+        self.allocator = allocator or JobAllocator(self.topo, strategy=strategy)
         self.axis_names = tuple(axis_names)
         self.strategy = strategy
+        self._owned: set[int] = set()  # jobs THIS runtime allocated; a shared
+        # allocator may also hold other tenants' jobs, which we never touch
         part = self.allocator.allocate(size=size)
-        placement = self._placement_from(part.endpoints, mesh_shape)
+        self._owned.add(part.job_id)
+        placement = self._placement_from(part, mesh_shape)
         self.job = JobState(placement=placement, mesh_shape=tuple(mesh_shape))
         self.events: list[dict] = []
 
-    def _placement_from(self, endpoints: np.ndarray, mesh_shape) -> HyperXPlacement:
-        return HyperXPlacement(
-            topo=self.topo,
-            strategy=self.strategy,
-            mesh_shape=tuple(mesh_shape),
-            axis_names=self.axis_names[-len(mesh_shape):],
-            endpoints=np.asarray(endpoints).reshape(mesh_shape),
+    def _placement_from(self, part, mesh_shape) -> HyperXPlacement:
+        return HyperXPlacement.from_partition(
+            part, mesh_shape, self.axis_names
         )
 
     # -------------------------------------------------------- failures
@@ -116,8 +126,10 @@ class FleetRuntime:
         return event
 
     def _release_current(self):
-        for jid in list(self.allocator.jobs):
-            self.allocator.release(jid)
+        for jid in list(self._owned):
+            if jid in self.allocator.jobs:
+                self.allocator.release(jid)
+            self._owned.discard(jid)
 
     def _try_allocate(self, size: int):
         """Primary strategy, then stochastic fallbacks over the fragmented
@@ -139,21 +151,7 @@ class FleetRuntime:
                 except RuntimeError:
                     continue
         # last resort: any free endpoints at all (arbitrary placement)
-        free = np.flatnonzero(self.allocator.free)
-        if len(free) >= size:
-            from repro.core.allocation import Partition
-
-            eps = free[:size]
-            self.allocator.free[eps] = False
-            part = Partition(
-                strategy="scavenge", topo=self.topo, job_id=-1, size=size,
-                endpoints=eps.astype(np.int64),
-                switches=np.unique(eps // self.topo.concentration),
-            )
-            self.allocator.jobs[self.allocator._next_job] = part
-            self.allocator._next_job += 1
-            return part, "scavenge"
-        raise RuntimeError(f"no {size} free endpoints")
+        return self.allocator.scavenge(size), "scavenge"
 
     def _repair(self) -> str:
         """Try same-size reallocation; elastically halve ``data`` if needed."""
@@ -163,8 +161,9 @@ class FleetRuntime:
         while True:
             try:
                 part, strat = self._try_allocate(int(np.prod(shape)))
+                self._owned.add(part.job_id)
                 self.job = JobState(
-                    placement=self._placement_from(part.endpoints, tuple(shape)),
+                    placement=self._placement_from(part, tuple(shape)),
                     mesh_shape=tuple(shape),
                     generation=self.job.generation + 1,
                 )

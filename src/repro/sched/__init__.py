@@ -1,0 +1,49 @@
+"""Online cluster scheduler: the paper's allocation strategies under churn.
+
+The paper evaluates its seven allocation functions as *static* partitions
+of a fully-packed machine; real HPC/AI fleets face a continuous stream of
+job arrivals and departures that fragments the machine.  This subsystem
+turns the allocation functions into dynamic placement policies:
+
+  * :mod:`jobs`      — synthetic (Poisson / heavy-tailed) arrival
+    generators and deterministic trace replay, jobs sized in base blocks;
+  * :mod:`ledger`    — the machine-state ledger: free/occupied block
+    slots and endpoints, strategy-aware first-fit/best-fit placement on a
+    fragmented machine, failure/repair bookkeeping;
+  * :mod:`scheduler` — the event loop: FCFS + EASY backfilling, failure
+    re-placement, co-resident snapshots at scheduling events;
+  * :mod:`metrics`   — per-strategy utilization, wait, fragmentation and
+    realized partition-bandwidth / switch-locality of placed partitions;
+  * :mod:`bridge`    — evaluates co-resident snapshots through the
+    batched :class:`~repro.core.engine.SimEngine`, so a whole strategy x
+    seed x snapshot grid stays one compile + one device call per shape
+    bucket.
+"""
+
+from repro.sched.bridge import evaluate_snapshots, snapshot_workload
+from repro.sched.jobs import (
+    Job,
+    heavy_tailed_stream,
+    load_trace,
+    poisson_stream,
+    save_trace,
+)
+from repro.sched.ledger import BlockLedger
+from repro.sched.metrics import JobRecord, StreamResult
+from repro.sched.scheduler import FailureEvent, OnlineScheduler, Snapshot
+
+__all__ = [
+    "BlockLedger",
+    "FailureEvent",
+    "Job",
+    "JobRecord",
+    "OnlineScheduler",
+    "Snapshot",
+    "StreamResult",
+    "evaluate_snapshots",
+    "heavy_tailed_stream",
+    "load_trace",
+    "poisson_stream",
+    "save_trace",
+    "snapshot_workload",
+]

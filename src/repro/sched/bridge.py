@@ -1,0 +1,126 @@
+"""Interference bridge: co-resident snapshots through the batched SimEngine.
+
+A :class:`~repro.sched.scheduler.Snapshot` freezes the set of jobs sharing
+the machine at one scheduling event.  This module lowers snapshots to
+:class:`~repro.core.traffic.Workload`s (each job runs its communication
+kernel on its *actually placed* partition) and executes the whole
+strategy x snapshot x seed grid through ``SimEngine.run_batch_seeds`` — the
+engine groups workloads by shape bucket internally, so the entire grid
+costs **one compilation and one device call per shape bucket** regardless
+of how many strategies, snapshots, or seeds it spans (the trace-counter
+test pins this).
+"""
+
+from __future__ import annotations
+
+from typing import Mapping, Sequence
+
+import numpy as np
+
+from repro.core import traffic as tr
+from repro.core.engine import SimResult, get_engine
+from repro.core.engine.workload_tables import shape_bucket
+from repro.core.hyperx import HyperX
+from repro.core.traffic import Workload
+from repro.sched.scheduler import Snapshot
+
+_KERNELS = dict(tr.KERNELS)
+_KERNELS["uniform"] = tr.uniform
+_KERNELS["random_permutation"] = tr.random_permutation
+
+
+def snapshot_workload(
+    topo: HyperX,
+    snap: Snapshot,
+    fabric_partitioning: str = "shared",
+) -> Workload:
+    """Lower one snapshot: every co-resident job's kernel on its partition."""
+    apps = []
+    for job_id, kernel, part in snap.jobs:
+        try:
+            builder = _KERNELS[kernel]
+        except KeyError:
+            raise KeyError(
+                f"job {job_id}: unknown kernel {kernel!r}; "
+                f"available: {sorted(_KERNELS)}"
+            ) from None
+        apps.append((builder(part.size), part))
+    return tr.compose_workload(
+        topo, apps, fabric_partitioning=fabric_partitioning
+    )
+
+
+def pick_snapshots(
+    snapshots: Sequence[Snapshot],
+    max_snapshots: int,
+    min_jobs: int = 2,
+) -> list[Snapshot]:
+    """Evenly sample up to ``max_snapshots`` snapshots with >= min_jobs."""
+    eligible = [s for s in snapshots if s.num_jobs >= min_jobs]
+    if len(eligible) <= max_snapshots:
+        return eligible
+    idx = np.linspace(0, len(eligible) - 1, max_snapshots).round().astype(int)
+    return [eligible[i] for i in sorted(set(idx.tolist()))]
+
+
+def evaluate_snapshots(
+    topo: HyperX,
+    snapshots_by_key: Mapping[str, Sequence[Snapshot]],
+    seeds: Sequence[int] = (0,),
+    horizon: int = 60_000,
+    mode: str = "omniwar",
+    fabric_partitioning: str = "shared",
+) -> tuple[list[dict], dict]:
+    """Evaluate snapshot grids for many strategies in batched device calls.
+
+    ``snapshots_by_key`` maps a label (typically the strategy name) to its
+    snapshots.  ALL workloads across all keys go through one engine and one
+    ``run_batch_seeds`` call, so same-shape-bucket scenarios of different
+    strategies share both the compilation and the dispatch.
+
+    Returns (rows, stats): one row per (key, snapshot, seed) with the
+    SimResult metrics plus co-residency context; ``stats`` holds the
+    ``engine`` plus the ``traces`` / ``device_calls`` this evaluation
+    *added* (deltas — engines are memoised per config and may already
+    carry counts from earlier sweeps).
+    """
+    keys, snaps, workloads = [], [], []
+    for key, group in snapshots_by_key.items():
+        for snap in group:
+            wl = snapshot_workload(topo, snap, fabric_partitioning)
+            keys.append(key)
+            snaps.append(snap)
+            workloads.append(wl)
+    if not workloads:
+        return [], {"engine": None, "traces": 0, "device_calls": 0}
+    num_pools = {wl.num_pools for wl in workloads}
+    if len(num_pools) != 1:
+        raise ValueError(
+            f"snapshots lower to mixed VC pool counts {sorted(num_pools)}; "
+            "evaluate per fabric_partitioning mode"
+        )
+    engine = get_engine(topo, mode=mode, num_pools=num_pools.pop())
+    traces0, calls0 = engine.trace_count, engine.device_calls
+    per_wl = engine.run_batch_seeds(workloads, seeds=seeds, horizon=horizon)
+    rows = []
+    for key, snap, wl, per_seed in zip(keys, snaps, workloads, per_wl):
+        bucket = shape_bucket(wl.R, wl.T, wl.maxd)
+        for seed, res in zip(seeds, per_seed):
+            assert isinstance(res, SimResult)
+            rows.append({
+                "key": key,
+                "time": round(snap.time, 3),
+                "co_jobs": snap.num_jobs,
+                "ranks": wl.R,
+                "bucket": "x".join(map(str, bucket)),
+                "seed": int(seed),
+                "makespan": res.makespan if res.completed else -1,
+                "avg_latency": round(res.avg_latency, 3),
+                "avg_hops": round(res.avg_hops, 4),
+                "completed": res.completed,
+            })
+    return rows, {
+        "engine": engine,
+        "traces": engine.trace_count - traces0,
+        "device_calls": engine.device_calls - calls0,
+    }

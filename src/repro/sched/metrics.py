@@ -1,0 +1,98 @@
+"""Metrics layer: per-job records and per-stream aggregates.
+
+Wait/turnaround are classic scheduler metrics; ``realized_pb`` and
+``switch_local`` apply the paper's Section 5 partition properties to the
+partitions *actually placed* on the fragmented machine — a Diagonal job
+backfilled onto scattered blocks does not get the textbook Diagonal PB,
+and this layer is where that gap becomes measurable.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class JobRecord:
+    """Lifecycle + realized-placement metrics of one job."""
+
+    job_id: int
+    arrival: float
+    blocks: int
+    service: float
+    kernel: str
+    start: float | None = None
+    finish: float | None = None
+    wait: float | None = None        # first start - arrival
+    scattered: bool = False          # placed on non-contiguous slots
+    migrations: int = 0              # failure-driven re-placements
+    requeues: int = 0                # failure evictions back to the queue
+    realized_pb: float | None = None
+    pb_bound: float | None = None
+    switch_local: bool | None = None
+
+    @property
+    def turnaround(self) -> float | None:
+        return None if self.finish is None else self.finish - self.arrival
+
+    @property
+    def slowdown(self) -> float | None:
+        t = self.turnaround
+        return None if t is None else t / max(self.service, 1e-9)
+
+
+@dataclasses.dataclass
+class StreamResult:
+    """Everything one (strategy, policy, stream) scheduling run produced."""
+
+    strategy: str
+    policy: str
+    records: List[JobRecord]
+    snapshots: list  # list[Snapshot] — kept loose to avoid a cycle
+    span: float                    # first arrival .. last completion
+    utilization: float             # requested endpoint-seconds / (E * span)
+    gross_utilization: float       # slot-held endpoint-seconds / (E * span)
+    frag_mean: float               # time-weighted mean fragmentation
+    frag_max: float
+    mean_queue: float              # time-weighted mean queue length
+
+    def finished(self) -> List[JobRecord]:
+        return [r for r in self.records if r.finish is not None]
+
+    def summary(self) -> dict:
+        """One flat row (the benchmark CSV contract)."""
+        waits = [r.wait for r in self.records if r.wait is not None]
+        slow = [r.slowdown for r in self.finished()]
+        pbs = [r.realized_pb for r in self.records
+               if r.realized_pb is not None and np.isfinite(r.realized_pb)]
+        loc = [r.switch_local for r in self.records if r.switch_local is not None]
+        placed = [r for r in self.records if r.start is not None]
+        return {
+            "strategy": self.strategy,
+            "policy": self.policy,
+            "jobs": len(self.records),
+            "placed": len(placed),
+            "finished": len(self.finished()),
+            "span": round(self.span, 2),
+            "utilization": round(self.utilization, 4),
+            "gross_utilization": round(self.gross_utilization, 4),
+            "mean_wait": round(float(np.mean(waits)), 3) if waits else 0.0,
+            "p95_wait": round(float(np.percentile(waits, 95)), 3) if waits else 0.0,
+            "max_wait": round(float(np.max(waits)), 3) if waits else 0.0,
+            "mean_slowdown": round(float(np.mean(slow)), 3) if slow else 0.0,
+            "frag_mean": round(self.frag_mean, 4),
+            "frag_max": round(self.frag_max, 4),
+            "mean_queue": round(self.mean_queue, 3),
+            "scattered_frac": round(
+                float(np.mean([r.scattered for r in placed])), 4
+            ) if placed else 0.0,
+            "migrations": sum(r.migrations for r in self.records),
+            "requeues": sum(r.requeues for r in self.records),
+            "realized_pb_mean": round(float(np.mean(pbs)), 4) if pbs else -1.0,
+            "realized_pb_min": round(float(np.min(pbs)), 4) if pbs else -1.0,
+            "locality_frac": round(float(np.mean(loc)), 4) if loc else -1.0,
+            "snapshots": len(self.snapshots),
+        }

@@ -1,0 +1,283 @@
+"""Online scheduler event loop: FCFS + EASY backfilling over the ledger.
+
+Discrete-event simulation of a job stream against one
+:class:`~repro.sched.ledger.BlockLedger`.  Event kinds, in same-time
+processing order: departures free slots first, repairs return endpoints,
+failures take them, arrivals join the queue; after each timestamp the
+scheduling pass runs.
+
+Scheduling is FCFS with count-based EASY backfilling: when the queue head
+does not fit, its *shadow time* (earliest time enough block slots will be
+free, from the known finish times of running jobs) reserves capacity, and a
+later job may jump ahead only if it fits now and either finishes before the
+shadow time or leaves enough slots for the head's reservation.  Service
+times are known at submission (user-supplied walltime), the standard EASY
+assumption.
+
+Failures route through the ledger's repair path: a job whose slots are hit
+is re-placed on the surviving machine (a migration — same contract as
+``FleetRuntime``'s checkpoint-restore repair) and, when the survivors
+cannot host it, evicted back to the queue head with its remaining service
+time (a requeue).
+
+At every successful placement the scheduler snapshots the co-resident job
+set; :mod:`repro.sched.bridge` turns those snapshots into batched SimEngine
+evaluations.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from typing import Sequence
+
+import numpy as np
+
+from repro.core.allocation import Partition
+from repro.core.hyperx import HyperX
+from repro.core.properties import has_switch_locality, partition_bandwidth
+from repro.sched.jobs import Job
+from repro.sched.ledger import BlockLedger
+from repro.sched.metrics import JobRecord, StreamResult
+
+_ORDER = {"depart": 0, "repair": 1, "fail": 2, "arrive": 3}
+
+
+@dataclasses.dataclass(frozen=True)
+class FailureEvent:
+    """Endpoints fail at ``time``; optionally repaired at ``repair_at``."""
+
+    time: float
+    endpoints: tuple[int, ...]
+    repair_at: float | None = None
+
+
+@dataclasses.dataclass(frozen=True)
+class Snapshot:
+    """Co-resident jobs at one scheduling event (placement time)."""
+
+    time: float
+    trigger: int  # job id whose placement produced this snapshot
+    jobs: tuple[tuple[int, str, Partition], ...]  # (job_id, kernel, partition)
+
+    @property
+    def num_jobs(self) -> int:
+        return len(self.jobs)
+
+
+class OnlineScheduler:
+    """One strategy x policy scheduling run over a job stream."""
+
+    def __init__(
+        self,
+        topo: HyperX,
+        strategy: str = "diagonal",
+        policy: str = "first_fit",
+        backfill: bool = True,
+        allow_scatter: bool = True,
+        seed: int = 0,
+        analyze: bool = True,
+    ):
+        self.topo = topo
+        self.ledger = BlockLedger(
+            topo, strategy=strategy, seed=seed,
+            policy=policy, allow_scatter=allow_scatter,
+        )
+        self.backfill = backfill
+        self.analyze = analyze
+
+    # --------------------------------------------------------------- driver
+    def run_stream(
+        self,
+        jobs: Sequence[Job],
+        failures: Sequence[FailureEvent] = (),
+        check_invariants: bool = False,
+    ) -> StreamResult:
+        ledger = self.ledger
+        too_big = [j.job_id for j in jobs if j.blocks > ledger.num_slots]
+        if too_big:
+            raise ValueError(
+                f"jobs {too_big[:4]} request more than the machine's "
+                f"{ledger.num_slots} base blocks"
+            )
+        records = {j.job_id: JobRecord(
+            job_id=j.job_id, arrival=j.arrival, blocks=j.blocks,
+            service=j.service, kernel=j.kernel,
+        ) for j in jobs}
+
+        heap: list[tuple] = []
+        seq = 0
+        for j in sorted(jobs, key=lambda x: (x.arrival, x.job_id)):
+            heapq.heappush(heap, (j.arrival, _ORDER["arrive"], seq, "arrive", j))
+            seq += 1
+        for f in failures:
+            heapq.heappush(heap, (f.time, _ORDER["fail"], seq, "fail", f))
+            seq += 1
+            if f.repair_at is not None:
+                heapq.heappush(
+                    heap, (f.repair_at, _ORDER["repair"], seq, "repair", f)
+                )
+                seq += 1
+
+        queue: list[Job] = []
+        running: dict[int, dict] = {}  # jid -> {job, finish}
+        gens: dict[int, int] = {}      # jid -> placement generation
+        snapshots: list[Snapshot] = []
+        # time integrals
+        last_t = 0.0
+        busy = 0.0        # requested endpoint-seconds
+        gross = 0.0       # slot-held endpoint-seconds
+        frag_int = 0.0
+        frag_max = 0.0
+        queue_int = 0.0
+        E = self.topo.num_endpoints
+
+        def advance(now: float):
+            nonlocal last_t, busy, gross, frag_int, frag_max, queue_int
+            dt = now - last_t
+            if dt > 0:
+                req = sum(ledger.jobs[j].partition.size for j in running)
+                held = sum(len(ledger.jobs[j].slot_endpoints) for j in running)
+                frag = ledger.fragmentation()
+                busy += req * dt
+                gross += held * dt
+                frag_int += frag * dt
+                frag_max = max(frag_max, frag)
+                queue_int += len(queue) * dt
+                last_t = now
+
+        def analyze_placement(jid: int):
+            """Record the job's CURRENT placement quality (last placement
+            wins: a migration onto scattered blocks must show up)."""
+            rec = records[jid]
+            placed = ledger.jobs[jid]
+            rec.scattered = rec.scattered or not placed.contiguous
+            if self.analyze:
+                eps = placed.partition.endpoints
+                pb, bound = partition_bandwidth(self.topo, eps)
+                rec.realized_pb = pb
+                rec.pb_bound = bound
+                rec.switch_local = has_switch_locality(self.topo, eps)
+
+        def take_snapshot(now: float, trigger: int):
+            snapshots.append(Snapshot(
+                time=now, trigger=trigger,
+                jobs=tuple(
+                    (jid, running[jid]["job"].kernel, ledger.jobs[jid].partition)
+                    for jid in sorted(running)
+                ),
+            ))
+
+        def start(job: Job, now: float) -> bool:
+            try:
+                ledger.place(job.blocks, job_id=job.job_id)
+            except RuntimeError:
+                return False
+            rec = records[job.job_id]
+            if rec.start is None:
+                rec.start = now
+                rec.wait = now - rec.arrival
+            nonlocal seq
+            gen = gens.get(job.job_id, 0) + 1
+            gens[job.job_id] = gen
+            running[job.job_id] = {"job": job, "finish": now + job.service}
+            heapq.heappush(
+                heap,
+                (now + job.service, _ORDER["depart"], seq, "depart",
+                 (job.job_id, gen)),
+            )
+            seq += 1
+            analyze_placement(job.job_id)
+            take_snapshot(now, job.job_id)
+            return True
+
+        def shadow_for(head: Job, now: float) -> tuple[float, int]:
+            """Count-based reservation: (shadow time, slots freed by then)."""
+            free_now = int(ledger.free_slots().sum())
+            if free_now >= head.blocks:
+                return now, 0  # blocked by fragmentation only, not capacity
+            freed = 0
+            for jid in sorted(running, key=lambda j: running[j]["finish"]):
+                freed += len(ledger.jobs[jid].slots)
+                if free_now + freed >= head.blocks:
+                    return running[jid]["finish"], freed
+            return float("inf"), freed
+
+        def schedule(now: float):
+            while queue:
+                if start(queue[0], now):
+                    queue.pop(0)
+                    continue
+                if not self.backfill or len(queue) == 1:
+                    break
+                head = queue[0]
+                shadow, freed_by_shadow = shadow_for(head, now)
+                for cand in list(queue[1:]):
+                    if ledger.find_slots(cand.blocks) is None:
+                        continue
+                    free_now = int(ledger.free_slots().sum())
+                    fits_reservation = (
+                        now + cand.service <= shadow + 1e-9
+                        or free_now - cand.blocks + freed_by_shadow >= head.blocks
+                    )
+                    if fits_reservation and start(cand, now):
+                        queue.remove(cand)
+                break
+
+        while heap:
+            now = heap[0][0]
+            while heap and heap[0][0] == now:
+                _, _, _, kind, payload = heapq.heappop(heap)
+                advance(now)
+                if kind == "arrive":
+                    queue.append(payload)
+                elif kind == "depart":
+                    jid, gen = payload
+                    if jid not in running or gens.get(jid) != gen:
+                        continue  # stale event (job was requeued)
+                    del running[jid]
+                    ledger.release(jid)
+                    records[jid].finish = now
+                elif kind == "fail":
+                    affected = ledger.fail_endpoints(np.asarray(payload.endpoints))
+                    for jid in affected:
+                        if jid not in running:
+                            continue
+                        rec = records[jid]
+                        try:
+                            ledger.replace_job(jid)
+                            rec.migrations += 1
+                            # a migration IS a placement: refresh the
+                            # realized metrics and snapshot the machine
+                            analyze_placement(jid)
+                            take_snapshot(now, jid)
+                        except RuntimeError:
+                            # evicted: back to the queue head with the
+                            # remaining service time
+                            info = running.pop(jid)
+                            gens[jid] += 1  # invalidate the depart event
+                            remaining = info["finish"] - now
+                            rec.requeues += 1
+                            queue.insert(0, dataclasses.replace(
+                                info["job"], service=remaining,
+                            ))
+                elif kind == "repair":
+                    ledger.repair_endpoints(np.asarray(payload.endpoints))
+            schedule(now)
+            if check_invariants:
+                ledger.check_conservation()
+
+        span = max(last_t, 1e-9)
+        return StreamResult(
+            strategy=ledger.strategy.name,
+            policy=ledger.policy,
+            records=[records[j.job_id] for j in
+                     sorted(jobs, key=lambda x: (x.arrival, x.job_id))],
+            snapshots=snapshots,
+            span=span,
+            utilization=busy / (E * span),
+            gross_utilization=gross / (E * span),
+            frag_mean=frag_int / span,
+            frag_max=frag_max,
+            mean_queue=queue_int / span,
+        )
