@@ -1,7 +1,7 @@
 """Closing the loop: mesh collectives SIMULATED on the HyperX fabric per
 allocation strategy (cost-model validation against the cycle simulator)."""
 
-from benchmarks.common import emit
+from benchmarks.common import emit, resolve_routing
 from repro.fabric.collective_sim import compare_strategies_simulated
 
 
@@ -18,6 +18,7 @@ def run(quick=False):
         out = compare_strategies_simulated(
             mesh_shape=mesh, axis="model", kind=kind,
             num_groups=groups, strategies=strategies,
+            mode=resolve_routing(),
         )
         rows.extend(out)
     emit(rows, "collective_sim (mesh collectives measured on the fabric)")

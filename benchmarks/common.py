@@ -43,6 +43,15 @@ PAPER_TOPO = HyperX(n=8, q=2)
 NUM_SEEDS = 1          # set by benchmarks.run --seeds
 CSV_DIR: str | None = None  # set by benchmarks.run --csv
 QUICK = True           # set by benchmarks.run --quick/--full
+ROUTING = "omniwar"    # set by benchmarks.run --routing (any registered policy)
+
+
+def resolve_routing(mode: str | None = None) -> str:
+    """Routing-policy switch, same contract as :func:`resolve_quick`:
+    ``benchmarks.run --routing`` sets :data:`ROUTING` once and the
+    simulation-backed modules resolve through it unless a caller
+    overrides explicitly."""
+    return ROUTING if mode is None else mode
 
 
 def resolve_quick(quick) -> bool:
@@ -127,14 +136,16 @@ def interference_workload(strategy: str, kind: str, k: int = 64,
 
 
 # --------------------------------------------------------- batched execution
-def sweep(workloads: list[Workload], mode: str = "omniwar",
+def sweep(workloads: list[Workload], mode: str | None = None,
           horizon: int = 60_000, seeds=None,
           topo: HyperX = PAPER_TOPO) -> list[list[SimResult]]:
     """Run every (workload, seed) pair batched; returns [workload][seed].
 
     Workloads are grouped by engine configuration (pool count) and shape
-    bucket; each group executes as a single vmapped device call.
+    bucket; each group executes as a single vmapped device call.  The
+    routing policy defaults to the suite-wide ``--routing`` choice.
     """
+    mode = resolve_routing(mode)
     if seeds is None:
         seeds = list(range(NUM_SEEDS))
     seeds = list(seeds)
@@ -174,11 +185,12 @@ def summarize(per_seed: list[SimResult]) -> dict:
 
 # -------------------------------------------- single-scenario conveniences
 def escalation_makespan(strategy: str, kind: str, replicas: int, k: int = 64,
-                        mode: str = "omniwar", seed: int = 0,
+                        mode: str | None = None, seed: int = 0,
                         horizon: int = 60000) -> dict:
     """One escalation scenario (kept for spot checks; sweeps use sweep())."""
     wl = escalation_workload(strategy, kind, replicas, k=k, seed=seed)
-    res = get_engine(PAPER_TOPO, mode=mode, num_pools=wl.num_pools).run(
+    res = get_engine(PAPER_TOPO, mode=resolve_routing(mode),
+                     num_pools=wl.num_pools).run(
         wl, seed=seed, horizon=horizon)
     return {
         "strategy": strategy, "kernel": kind, "replicas": replicas, "k": k,
@@ -196,7 +208,8 @@ def interference_makespan(strategy: str, kind: str, k: int = 64,
                           horizon: int = 80000) -> dict:
     wl = interference_workload(strategy, kind, k=k, fabric=fabric,
                                with_bg=with_bg, warmup=warmup, seed=seed)
-    res = get_engine(PAPER_TOPO, num_pools=wl.num_pools).run(
+    res = get_engine(PAPER_TOPO, mode=resolve_routing(),
+                     num_pools=wl.num_pools).run(
         wl, seed=seed, horizon=horizon)
     return {
         "strategy": strategy, "kernel": kind, "k": k, "fabric": fabric,

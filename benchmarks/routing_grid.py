@@ -1,0 +1,99 @@
+"""Routing x strategy x fault-rate grid (the DESIGN.md §Routing sweep).
+
+Every registered routing policy runs the same allocation-strategy grid on
+the same progressively-degraded machine: per fault rate one seeded set of
+dead cables (identical across policies and strategies, so deltas are pure
+routing/placement effects).  Within one policy the whole
+strategy x fault x seed grid batches through ``sweep`` — fault masks are
+per-workload device data, so every fault scenario shares the healthy
+grid's shape bucket and the policy pays one compilation total.
+
+The ``max_hops`` column doubles as a live deadlock-freedom check: it must
+stay below the policy's declared VC budget (``vc_budget`` in
+``repro.route``), faults included.
+"""
+
+from benchmarks.common import (
+    PAPER_TOPO,
+    STRATEGIES,
+    emit,
+    interference_workload,
+    resolve_quick,
+    summarize,
+    sweep,
+)
+
+from repro.route import (
+    apply_faults,
+    available_policies,
+    get_policy,
+    is_connected,
+    random_link_faults,
+)
+
+FAULT_RATES = (0.0, 0.01, 0.02)   # ~0 / 4 / 9 dead cables on the paper machine
+FAULT_SEED = 77
+
+
+def run(quick=None):
+    quick = resolve_quick(quick)
+    strategies = ("row", "diagonal") if quick else STRATEGIES
+    rates = (FAULT_RATES[0], FAULT_RATES[2]) if quick else FAULT_RATES
+    kind = "all_to_all"
+    # the vmapped while-loop runs lanes in lockstep, so one strangled lane
+    # (a packet out of budget at a dead link never delivers) bills the
+    # whole bucket its horizon — keep it tight; incomplete lanes report
+    # completed=False / makespan -1.  Rates beyond ~2% strand the
+    # budget-bounded minimal-phase policies routinely (the failure mode
+    # 2404.04315 provisions extra VCs for); they are deliberately out of
+    # this grid's range.
+    horizon = 6_000 if quick else 8_000
+
+    masks = {}
+    for rate in rates:
+        if rate == 0.0:
+            masks[rate] = None
+            continue
+        mask = random_link_faults(PAPER_TOPO, rate, seed=FAULT_SEED)
+        assert is_connected(PAPER_TOPO, mask), "fault draw disconnected machine"
+        masks[rate] = mask
+
+    base = {s: interference_workload(s, kind, with_bg=False)
+            for s in strategies}
+    rows = []
+    for mode in available_policies():
+        wls, grid = [], []   # (strategy, rate) in workload order
+        for strat in strategies:
+            for rate in rates:
+                wl = base[strat]
+                if masks[rate] is not None:
+                    wl = apply_faults(wl, masks[rate])
+                wls.append(wl)
+                grid.append((strat, rate))
+        per_wl = sweep(wls, mode=mode, horizon=horizon)
+        policy = get_policy(mode)
+        budget = policy.vc_budget(
+            PAPER_TOPO.q, policy.default_deroutes(PAPER_TOPO.q)
+        )
+        for (strat, rate), per_seed in zip(grid, per_wl):
+            s = summarize(per_seed)
+            hop_peak = max(r.max_hops for r in per_seed)
+            rows.append({
+                "routing": mode, "strategy": strat, "fault_rate": rate,
+                "makespan": s["makespan"],
+                "avg_latency": s["avg_latency"],
+                "avg_hops": s["avg_hops"],
+                "max_hops": hop_peak,
+                "vc_budget": budget,
+                "completed": s["completed"],
+            })
+            assert hop_peak < budget, (
+                f"{mode}/{strat}@{rate}: observed {hop_peak} hops "
+                f">= VC budget {budget}"
+            )
+    emit(rows, "routing_grid (routing x strategy x fault-rate)")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -3,6 +3,7 @@
     PYTHONPATH=src python -m benchmarks.run [--quick|--full]
                                             [--seeds N] [--csv DIR]
                                             [--only NAME]
+                                            [--routing POLICY]
 
 --quick trims replica counts / kernel sets (1-core CPU friendly); --full
 runs the complete paper grids.  Default: quick.
@@ -11,6 +12,11 @@ batched through ``SimEngine.run_batch`` (same device call as the strategy
 axis), and rows report means over seeds.
 --csv DIR additionally writes every emitted table to DIR/<name>.csv so
 perf trajectories land in versionable files.
+--routing POLICY runs every simulation-backed module (fig8, table4,
+table3, sched_stream, collective_sim_bench, ...) under that routing
+policy (any name registered in ``repro.route``; default omniwar).  Two
+modules are pinned by design: ``fig7_min_escalation`` is the paper's
+MIN artifact, and ``routing_grid`` always sweeps all policies.
 """
 
 import argparse
@@ -26,6 +32,7 @@ MODULES = [
     "table3_escalation",
     "table4_interference",
     "fig11_fabric_partitioning",
+    "routing_grid",
     "sched_stream",
     "collective_sim_bench",
     "roofline_bench",
@@ -33,6 +40,8 @@ MODULES = [
 
 
 def main(argv=None):
+    from repro.route import available_policies
+
     p = argparse.ArgumentParser()
     p.add_argument("--quick", action="store_true",
                    help="CI-sized grids (the default; --full overrides)")
@@ -42,6 +51,9 @@ def main(argv=None):
                    help="seeds per scenario, fanned through run_batch")
     p.add_argument("--csv", default=None, metavar="DIR",
                    help="also write each table to DIR/<name>.csv")
+    p.add_argument("--routing", default="omniwar",
+                   choices=available_policies(),
+                   help="routing policy for the simulation-backed modules")
     args = p.parse_args(argv)
     if args.quick and args.full:
         p.error("--quick and --full are mutually exclusive")
@@ -51,6 +63,7 @@ def main(argv=None):
     common.NUM_SEEDS = max(1, args.seeds)
     common.CSV_DIR = args.csv
     common.QUICK = quick
+    common.ROUTING = args.routing
 
     mods = [m for m in MODULES if args.only is None or args.only in m]
     t00 = time.time()

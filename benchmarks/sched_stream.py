@@ -31,6 +31,7 @@ from repro.sched import (
     FailureEvent,
     OnlineScheduler,
     evaluate_snapshots,
+    evaluate_snapshots_by_routing,
     heavy_tailed_stream,
     poisson_stream,
     snapshot_workload,
@@ -97,6 +98,7 @@ def run(quick=None):
 
     rows = []
     poisson_snaps = {}
+    churn_snaps = {}
     for scen, (stream, failures) in streams.items():
         for strat in STRATEGIES:
             sched = OnlineScheduler(topo, strategy=strat, policy="first_fit")
@@ -104,6 +106,8 @@ def run(quick=None):
             rows.append({"scenario": scen, **res.summary()})
             if scen == "poisson":
                 poisson_snaps[strat] = res.snapshots
+            elif scen == "churn":
+                churn_snaps[strat] = res.snapshots
     emit(rows, "sched_stream_summary (online scheduling, 7 strategies)")
 
     # scheduling-policy ablation: placement policy x backfilling (the
@@ -128,6 +132,7 @@ def run(quick=None):
     seeds = list(range(common.NUM_SEEDS))
     snap_rows, stats = evaluate_snapshots(
         topo, selected, seeds=seeds, horizon=30_000 if quick else 60_000,
+        mode=common.ROUTING,
     )
     emit(snap_rows, "sched_snapshots_interference (co-resident jobs, batched)")
     if stats["engine"] is not None:
@@ -139,6 +144,30 @@ def run(quick=None):
             "traces": stats["traces"],
             "device_calls": stats["device_calls"],
         }], "sched_compile_stats (one compile + call per bucket)")
+
+    # routing x churn-fault grid: snapshots taken while endpoints were
+    # failed lower to link-fault masks (failure domains are co-packaged);
+    # each routing policy then runs the SAME degraded machine.  Quick mode
+    # keeps two policies / two strategies so CI pays for ~one extra
+    # compile (the omniwar engine + bucket is shared with the table above).
+    faulty = {
+        k: [s for s in snaps if s.failed_endpoints]
+        for k, snaps in churn_snaps.items()
+    }
+    if quick:
+        faulty = {k: faulty.get(k, []) for k in ("diagonal", "rectangular")}
+    modes = ("omniwar", "ugal") if quick else ("min", "omniwar", "val", "ugal")
+    selected_f = _select_snapshots(topo, faulty, 1 if quick else 3, quick)
+    churn_rows, stats_by_mode = evaluate_snapshots_by_routing(
+        topo, selected_f, modes=modes, seeds=seeds,
+        horizon=30_000 if quick else 60_000, churn_faults=True,
+    )
+    emit(churn_rows, "sched_routing_churn (routing x strategy x churn faults)")
+    emit([
+        {"routing": m, "traces": st["traces"],
+         "device_calls": st["device_calls"]}
+        for m, st in stats_by_mode.items() if st["engine"] is not None
+    ], "sched_routing_compile_stats (one compile set per policy)")
     return rows
 
 

@@ -1,5 +1,6 @@
-"""Paper Fig. 9 / Table 3: kernel escalation under Omni-WAR, normalized to
-Diagonal (values > 1 mean faster than Diagonal, as in the paper).
+"""Paper Fig. 9 / Table 3: kernel escalation, normalized to Diagonal
+(values > 1 mean faster than Diagonal, as in the paper; the paper uses
+Omni-WAR — the suite default — and ``--routing`` swaps the policy).
 
 Each (kernel, load) strategy grid is built as workloads first and executed
 through ``sweep`` — one vmapped device call per shape bucket instead of the
@@ -24,7 +25,7 @@ def run(quick=False):
     for kind in kernels:
         for r in loads:
             wls = [escalation_workload(s, kind, r) for s in STRATEGIES]
-            per_wl = sweep(wls, mode="omniwar", horizon=60000)
+            per_wl = sweep(wls, horizon=60000)
             for strat, per_seed in zip(STRATEGIES, per_wl):
                 row = {"strategy": strat, "kernel": kind, "replicas": r,
                        "k": 64}

@@ -38,6 +38,7 @@ from repro.core.engine.workload_tables import (
 )
 from repro.core.hyperx import HyperX
 from repro.core.traffic import Workload
+from repro.route import get_policy
 
 PACKET_FLITS = 16  # paper Table 2: packet size 16 flits
 
@@ -51,14 +52,20 @@ class SimResult:
     avg_latency: float        # packet-times, target packets
     avg_hops: float           # network hops per delivered target packet
     completed: bool           # all target ranks finished within horizon
+    max_hops: int = 0         # max hops over all ejected packets — must stay
+                              # below the policy's VC budget (deadlock bound)
 
 
 class SimEngine:
     """Pytree-parameterized simulator for one static configuration.
 
     One engine == one ``(topo, mode, num_pools, max_deroutes, cap,
-    penalty)`` tuple.  All workloads run through the same jitted core;
-    re-tracing happens only when a workload's shape *bucket* is new.
+    penalty)`` tuple; ``mode`` resolves through the :mod:`repro.route`
+    policy registry (``available_policies()`` lists valid names).  All
+    workloads run through the same jitted core; re-tracing happens only
+    when a workload's shape *bucket* is new — fault masks and Valiant
+    intermediate pools are per-workload device data, so routing x
+    strategy x fault grids batch like any other scenario axis.
     """
 
     def __init__(
@@ -73,6 +80,7 @@ class SimEngine:
     ):
         self.topo = topo
         self.mode = mode
+        self.policy = get_policy(mode)  # registry: unknown modes raise here
         self.num_pools = num_pools
         self.bucket = bucket
         self.static = build_static_tables(
@@ -97,6 +105,7 @@ class SimEngine:
             return (
                 final.t, all_done(wt, final), final.n_delivered,
                 final.n_injected, final.lat_sum, final.hop_sum,
+                final.hop_max,
             )
 
         self._run1 = jax.jit(core)
@@ -247,7 +256,7 @@ class SimEngine:
 
     # ------------------------------------------------------------ private
     def _to_result(self, out, prep: PreparedWorkload) -> SimResult:
-        t, done, ndel, ninj, lat, hops = (np.asarray(x) for x in out)
+        t, done, ndel, ninj, lat, hops, hmax = (np.asarray(x) for x in out)
         ndel = int(ndel)
         return SimResult(
             makespan=int(t) - prep.warmup,
@@ -257,6 +266,7 @@ class SimEngine:
             avg_latency=float(lat) / max(ndel, 1),
             avg_hops=float(hops) / max(ndel, 1),
             completed=bool(done),
+            max_hops=int(hmax),
         )
 
 

@@ -8,9 +8,19 @@ compiled step is shared by all workloads whose tables land in the same shape
 bucket, and the surrounding while-loop can be ``jax.vmap``-ed over stacked
 tables.
 
+Routing is policy-driven: the ``mode`` string in the static tables resolves
+through the :mod:`repro.route` registry, and the policy's static predicates
+(candidate-set shape, Valiant intermediates, UGAL injection) specialize the
+kernel at trace time.  Per-workload fault masks (``wt.link_ok``) exclude
+dead links from every candidate set; minimal-only policies escalate to
+budget-bounded deroutes when all minimal ports of a switch are dead, which
+keeps worst-case hops inside the policy's declared hop-indexed VC budget
+(deadlock freedom under faults).  With an all-healthy mask, ``min`` and
+``omniwar`` are bit-identical to the seed simulator (regression-pinned).
+
 The physics is unchanged from the seed simulator (see DESIGN.md §6 for the
 CAMINOS fidelity deviations): packet-time granularity, input-queued FIFOs
-with hop-indexed VCs per pool, MIN / Omni-WAR routing with an occupancy +
+with hop-indexed VCs per pool, table-driven routing with an occupancy +
 deroute-penalty cost, two-round random separable allocation with a 2x
 internal speedup token bucket, and the step/dependency engine that walks
 the Workload step tables.
@@ -25,6 +35,7 @@ import jax.numpy as jnp
 
 from repro.core.engine.tables import StaticTables
 from repro.core.engine.workload_tables import WorkloadTables
+from repro.route import get_policy
 
 I32 = jnp.int32
 U32 = jnp.uint32
@@ -40,6 +51,8 @@ class SimState(NamedTuple):
     f_rank: jnp.ndarray       # source rank
     f_step: jnp.ndarray       # source step index
     f_birth: jnp.ndarray      # injection time
+    f_imd: jnp.ndarray        # Valiant intermediate switch (S = none);
+                              # shape (1,) for policies without intermediates
     qhead: jnp.ndarray        # (NQ,) ring head
     qlen: jnp.ndarray         # (NQ,) occupancy
     busy: jnp.ndarray         # (S*OUT,) output-buffer tokens (2x speedup)
@@ -55,11 +68,13 @@ class SimState(NamedTuple):
     n_delivered: jnp.ndarray  # () target packets delivered
     n_injected: jnp.ndarray   # () packets injected (all sources)
     hop_sum: jnp.ndarray      # () network hops of delivered target packets
+    hop_max: jnp.ndarray      # () max hops over ALL ejected packets (VC bound)
 
 
 def init_state(st: StaticTables, wt: WorkloadTables, seed) -> SimState:
     """Fresh simulation state for one workload (R/T taken from ``wt``)."""
     R, T = wt.R, wt.T
+    use_imd = get_policy(st.mode).uses_intermediate
 
     def z(n):
         return jnp.zeros(n, dtype=I32)
@@ -69,12 +84,13 @@ def init_state(st: StaticTables, wt: WorkloadTables, seed) -> SimState:
         f_dst=z(st.NQ * st.CAP), f_der=z(st.NQ * st.CAP),
         f_hop=z(st.NQ * st.CAP), f_rank=z(st.NQ * st.CAP),
         f_step=z(st.NQ * st.CAP), f_birth=z(st.NQ * st.CAP),
+        f_imd=z(st.NQ * st.CAP) if use_imd else z(1),
         qhead=z(st.NQ), qlen=z(st.NQ), busy=z(st.S * st.OUT),
         cur_step=z(R), dst_i=z(R), pkt_i=z(R), completed=z(R),
         sent=z((R + 1) * T), got=z((R + 1) * T),
         lat_sum=jnp.float32(0.0),
         n_delivered=jnp.int32(0), n_injected=jnp.int32(0),
-        hop_sum=jnp.int32(0),
+        hop_sum=jnp.int32(0), hop_max=jnp.int32(0),
     )
 
 
@@ -90,19 +106,26 @@ def build_step(
     S, E, IN, OUT = st.S, st.E, st.IN, st.OUT
     P, V, NQ, H, CAP = st.P, st.V, st.NQ, st.H, st.CAP
     q, n, conc, m, PEN = st.q, st.n, st.conc, st.m, st.PEN
-    use_min = st.use_min
+    policy = get_policy(st.mode)
+    use_imd = policy.uses_intermediate
     coords, nbr, in_port_at_nb = st.coords, st.nbr, st.in_port_at_nb
     port_dim, port_val = st.port_dim, st.port_val
-    h_pool, h_sw, inj_base = st.h_pool, st.h_sw, st.inj_base
+    h_pool, h_sw, inj_base, ep_sw = st.h_pool, st.h_sw, st.inj_base, st.ep_sw
     BIGCOST = jnp.int32(1 << 28)
     OOB = jnp.int32(NQ * CAP + 5)  # safely out of bounds => dropped scatters
+    NOMID = jnp.int32(S)           # f_imd sentinel: no (remaining) intermediate
 
     def step(state: SimState, wt: WorkloadTables) -> SimState:
         R, T = wt.R, wt.T
         MAXD = wt.D
         t = state.t
         key = jax.random.fold_in(state.key, t)
-        k_arb, k_jit, k_smp = jax.random.split(key, 3)
+        # policies without intermediates split 3 keys exactly like the seed
+        # engine, preserving bit-identical min/omniwar trajectories
+        if use_imd:
+            k_arb, k_jit, k_smp, k_mid = jax.random.split(key, 4)
+        else:
+            k_arb, k_jit, k_smp = jax.random.split(key, 3)
 
         qlen, qhead = state.qlen, state.qhead
         # per-(switch, in-port) total occupancy (packets over all pools+VCs):
@@ -122,15 +145,25 @@ def build_step(
         cur = h_sw
         at_dst = cur == dsw
 
+        # Valiant phase 1 routes toward the packet's intermediate switch;
+        # reaching it (or the final destination early) flips to phase 2.
+        if use_imd:
+            imd = state.f_imd[slot]
+            in_phase1 = (imd < S) & (imd != cur) & ~at_dst
+            route_dsw = jnp.where(in_phase1, imd, dsw)
+        else:
+            route_dsw = dsw
+
         # ---------------- routing: candidate network ports -----------------
         ccur = coords[cur]                                  # (H, q)
-        cdst = coords[dsw]                                  # (H, q)
+        cdst = coords[route_dsw]                            # (H, q)
         pv = port_val[None, :]                              # (1, q*n)
         cur_d = ccur[:, port_dim]                           # (H, q*n)
         dst_d = cdst[:, port_dim]
         unaligned = cur_d != dst_d                          # (H, q*n)
         not_self = pv != cur_d
         is_min = (pv == dst_d) & unaligned
+        healthy = wt.link_ok[cur]                           # (H, q*n) faults
         nb = nbr[cur]                                       # (H, q*n)
         ipnb = in_port_at_nb[cur]                           # (H, q*n)
         vc_next = jnp.minimum(hop + 1, V - 1)[:, None]      # (H, 1)
@@ -139,13 +172,38 @@ def build_step(
         occ = port_occ[nb * IN + ipnb]                      # congestion signal
         busy = jnp.maximum(state.busy - 1, 0)               # link served 1 pkt
         avail_net = busy[cur[:, None] * OUT + jnp.arange(q * n)[None, :]] < 2
-        if use_min:
-            legal = is_min & room & avail_net
-        else:
+        if policy.adaptive_deroutes:
+            # Omni-WAR: deroutes in any unaligned dimension while budget
+            # lasts; dead links drop out of the candidate set.  Under
+            # faults, voluntary deroutes must keep a *reserve* (one unit
+            # per dead cable) so the budget can't be spent before a
+            # forced escape is needed — a packet stranded at a dead
+            # minimal link with der == 0 would wait forever.  The cap at
+            # m - 1 keeps one voluntary deroute alive at any fault count
+            # (a full-budget reserve would silently collapse omniwar
+            # into min-with-escalation machine-wide); the escalation
+            # term covers forced escapes below the reserve, exactly
+            # like the minimal-only policies.
+            reserve = jnp.minimum(wt.n_dead, max(m - 1, 0))
+            base = unaligned & not_self & healthy
+            escalate = (
+                ~(is_min & healthy).any(axis=1, keepdims=True)
+                & base & (der[:, None] > 0)
+            )
             legal = (
-                unaligned & not_self & (is_min | (der[:, None] > 0))
+                (base & (is_min | (der[:, None] > reserve)) | escalate)
                 & room & avail_net
             )
+        else:
+            # minimal-only (min / val / ugal): when every minimal port of
+            # this switch is dead, escalate to budget-bounded deroutes so
+            # packets can round the fault (hops stay inside the VC budget)
+            is_min_h = is_min & healthy
+            escalate = (
+                ~is_min_h.any(axis=1, keepdims=True)
+                & unaligned & not_self & healthy & (der[:, None] > 0)
+            )
+            legal = (is_min_h | escalate) & room & avail_net
         jitter = jax.random.randint(k_jit, (H, q * n), 0, 8, dtype=I32)
         cost = occ * 8 + PEN * (~is_min) + jitter
         cost = jnp.where(legal, cost, BIGCOST)
@@ -246,6 +304,10 @@ def build_step(
         )
         hop_sum = state.hop_sum + jnp.sum(jnp.where(tgt_del, hop, 0))
         n_delivered = state.n_delivered + jnp.sum(tgt_del)
+        # every ejection bounds the VC invariant, background included
+        hop_max = jnp.maximum(
+            state.hop_max, jnp.max(jnp.where(eject, hop, 0))
+        )
 
         # ---------------- network moves (enqueue downstream) ---------------
         net = won & ~at_dst
@@ -263,6 +325,13 @@ def build_step(
         f_rank = state.f_rank.at[tgt_flat].set(rank, mode="drop")
         f_step = state.f_step.at[tgt_flat].set(pstep, mode="drop")
         f_birth = state.f_birth.at[tgt_flat].set(state.f_birth[slot], mode="drop")
+        if use_imd:
+            # a packet leaving its intermediate switch enters phase 2
+            f_imd = state.f_imd.at[tgt_flat].set(
+                jnp.where(imd == cur, NOMID, imd), mode="drop"
+            )
+        else:
+            f_imd = state.f_imd
         dlen = dlen.at[jnp.where(net, tgt_qi, NQ + 1)].add(1, mode="drop")
 
         # ---------------- step-engine: completion pointers ------------------
@@ -321,6 +390,44 @@ def build_step(
         f_rank = f_rank.at[inj_flat].set(r_safe, mode="drop")
         f_step = f_step.at[inj_flat].set(jnp.where(e_fin, e_cs, 0), mode="drop")
         f_birth = f_birth.at[inj_flat].set(t, mode="drop")
+        if use_imd:
+            # Valiant intermediate: one uniform draw per packet from the
+            # healthy pool carried in the workload tables (mid_pool/n_mid
+            # are device data — seeds and fault grids vmap, no retracing)
+            rmid = jax.random.bits(k_mid, (E,), dtype=U32)
+            span = jnp.maximum(wt.n_mid, 1).astype(U32)
+            mid = wt.mid_pool[(rmid % span).astype(I32)]
+            if policy.adaptive_injection:
+                # UGAL-L: best minimal port vs best port toward the
+                # sampled intermediate, weighted by path length, using
+                # the same port_occ congestion signal as in-network cost
+                csrc = coords[ep_sw]                        # (E, q)
+                cde = coords[d_ep // conc]
+                cme = coords[mid]
+                src_d = csrc[:, port_dim]                   # (E, q*n)
+                unal_d = src_d != cde[:, port_dim]
+                unal_m = src_d != cme[:, port_dim]
+                min_d = (port_val[None, :] == cde[:, port_dim]) & unal_d
+                min_m = (port_val[None, :] == cme[:, port_dim]) & unal_m
+                occ_e = port_occ[nbr[ep_sw] * IN + in_port_at_nb[ep_sw]]
+                ok_e = wt.link_ok[ep_sw]
+                # a dead/empty candidate set prices as BIGOCC, small enough
+                # that BIGOCC * h_val stays inside int32 for any q
+                BIGOCC = jnp.int32(1 << 24)
+                occ_min = jnp.min(
+                    jnp.where(min_d & ok_e, occ_e, BIGOCC), axis=1
+                )
+                occ_val = jnp.min(
+                    jnp.where(min_m & ok_e, occ_e, BIGOCC), axis=1
+                )
+                h_min = jnp.sum(csrc != cde, axis=1)
+                h_val = (
+                    jnp.sum(csrc != cme, axis=1)
+                    + jnp.sum(cme != cde, axis=1)
+                )
+                take_val = occ_val * h_val < occ_min * h_min
+                mid = jnp.where(take_val, mid, NOMID)
+            f_imd = f_imd.at[inj_flat].set(mid, mode="drop")
         dlen = dlen.at[jnp.where(do_inj, inj_qi, NQ + 1)].add(1, mode="drop")
         n_injected = state.n_injected + jnp.sum(do_inj)
 
@@ -342,12 +449,12 @@ def build_step(
         return SimState(
             t=t + 1, key=state.key,
             f_dst=f_dst, f_der=f_der, f_hop=f_hop, f_rank=f_rank,
-            f_step=f_step, f_birth=f_birth,
+            f_step=f_step, f_birth=f_birth, f_imd=f_imd,
             qhead=qhead, qlen=qlen + dlen, busy=busy,
             cur_step=cur_step, dst_i=dst_i, pkt_i=pkt_i, completed=completed,
             sent=sent, got=got,
             lat_sum=lat_sum, n_delivered=n_delivered, n_injected=n_injected,
-            hop_sum=hop_sum,
+            hop_sum=hop_sum, hop_max=hop_max,
         )
 
     return step

@@ -1,11 +1,17 @@
 """Static compile-time structure of the simulator.
 
 Everything here depends only on the *configuration* of a simulation — the
-topology, routing mode, VC-pool count, deroute budget, and queue capacity —
-never on the workload.  The tables are baked into the jit closure as trace
-constants (they are genuinely constant across a sweep), while everything
-per-workload lives in :mod:`repro.core.engine.workload_tables` and is passed
+topology, routing policy, VC-pool count, deroute budget, and queue capacity
+— never on the workload.  The tables are baked into the jit closure as
+trace constants (they are genuinely constant across a sweep), while
+everything per-workload lives in :mod:`repro.core.engine.workload_tables`
+(including link-fault masks and Valiant intermediate pools) and is passed
 to the compiled step function as device *arguments*.
+
+The routing ``mode`` string resolves through the :mod:`repro.route`
+registry: the policy declares its hop-indexed VC budget (which sizes the
+queue space — deadlock freedom) and the static predicates the step kernel
+specializes on.  Unknown modes raise with the registered policy names.
 
 ``build_static_tables`` is memoised on its full key, so every simulator /
 engine construction for the same ``(topo, mode, P, m, cap, penalty)``
@@ -22,6 +28,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.hyperx import HyperX
+from repro.route import get_policy, neighbor_tables, port_layout
 
 I32 = jnp.int32
 
@@ -36,9 +43,10 @@ class StaticTables(NamedTuple):
       port_dim/val    (q*n,)     dimension / value addressed by each port
       h_pool, h_sw    (H,)       queue-head index decomposition (H == NQ)
       inj_base        (E,)       injection queue base index (pool 0, VC 0)
+      ep_sw           (E,)       switch hosting each endpoint
     """
 
-    # dimensions (Python ints — static under jit)
+    # dimensions (Python ints / strings — static under jit)
     n: int
     q: int
     conc: int
@@ -53,7 +61,7 @@ class StaticTables(NamedTuple):
     CAP: int
     m: int            # deroute budget
     PEN: int          # deroute penalty on the cost scale
-    use_min: bool
+    mode: str         # registered routing-policy name
     # device constant tables
     coords: jnp.ndarray
     nbr: jnp.ndarray
@@ -63,6 +71,7 @@ class StaticTables(NamedTuple):
     h_pool: jnp.ndarray
     h_sw: jnp.ndarray
     inj_base: jnp.ndarray
+    ep_sw: jnp.ndarray
 
 
 @functools.lru_cache(maxsize=None)
@@ -75,31 +84,21 @@ def build_static_tables(
     penalty_packets: int = 4,
 ) -> StaticTables:
     """Construct (and cache) the constant tables for one configuration."""
-    if mode not in ("min", "omniwar"):
-        raise ValueError(f"unknown routing mode {mode!r}")
+    policy = get_policy(mode)  # raises with registered names when unknown
     n, q, conc = topo.n, topo.q, topo.concentration
     S = topo.num_switches
     E = topo.num_endpoints
     IN = q * n + conc          # network input ports (dense dim*val) + injection
     OUT = q * n + conc         # network output ports + ejection per offset
     P = num_pools
-    m = q if max_deroutes is None else max_deroutes
-    V = q + m + 1              # hop-indexed VCs (deadlock freedom)
+    m = policy.default_deroutes(q) if max_deroutes is None else max_deroutes
+    V = policy.vc_budget(q, m)  # hop-indexed VCs (deadlock freedom)
     NQ = S * IN * P * V
     H = NQ                     # one potential head per queue
 
     coords_np = topo.all_switch_coords()                       # (S, q)
-    nbr = np.empty((S, q * n), dtype=np.int32)                 # dst switch
-    in_port_at_nb = np.empty((S, q * n), dtype=np.int32)       # arrival port
-    for d in range(q):
-        for v in range(n):
-            nc = coords_np.copy()
-            nc[:, d] = v
-            ids = np.zeros(S, dtype=np.int64)
-            for d2 in range(q):
-                ids = ids * n + nc[:, d2]
-            nbr[:, d * n + v] = ids
-            in_port_at_nb[:, d * n + v] = d * n + coords_np[:, d]
+    nbr, in_port_at_nb = neighbor_tables(coords_np, n, q)
+    port_dim, port_val = port_layout(n, q)
 
     h_idx = np.arange(H, dtype=np.int64)
     h_pool = jnp.asarray((h_idx // V) % P, dtype=I32)
@@ -115,13 +114,14 @@ def build_static_tables(
         n=n, q=q, conc=conc, S=S, E=E, IN=IN, OUT=OUT, P=P, V=V,
         NQ=NQ, H=H, CAP=cap, m=m,
         PEN=penalty_packets * 8,  # cost scale: occupancy*8 + jitter(3 bits)
-        use_min=mode == "min",
+        mode=mode,
         coords=jnp.asarray(coords_np, dtype=I32),
-        nbr=jnp.asarray(nbr),
-        in_port_at_nb=jnp.asarray(in_port_at_nb),
-        port_dim=jnp.asarray(np.arange(q * n) // n, dtype=I32),
-        port_val=jnp.asarray(np.arange(q * n) % n, dtype=I32),
+        nbr=jnp.asarray(nbr, dtype=I32),
+        in_port_at_nb=jnp.asarray(in_port_at_nb, dtype=I32),
+        port_dim=jnp.asarray(port_dim, dtype=I32),
+        port_val=jnp.asarray(port_val, dtype=I32),
         h_pool=h_pool,
         h_sw=h_sw,
         inj_base=inj_base,
+        ep_sw=jnp.asarray(e_sw, dtype=I32),
     )

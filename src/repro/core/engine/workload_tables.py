@@ -34,6 +34,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.traffic import Workload
+from repro.route import faults
+from repro.route.topology import self_port_mask
 
 I32 = jnp.int32
 
@@ -42,7 +44,9 @@ class WorkloadTables(NamedTuple):
     """All per-workload arrays the step function consumes (R, T, D padded).
 
     Every leaf is a jnp array so the tuple is a pytree: it can be passed as
-    a jit argument, stacked with ``stack_tables`` and vmapped.
+    a jit argument, stacked with ``stack_tables`` and vmapped.  The fault
+    mask and Valiant intermediate pool have topology-static shapes, so a
+    fault-scenario grid batches exactly like a strategy or seed axis.
     """
 
     rank_ep: jnp.ndarray      # (R,)   endpoint id per rank (pad: 0)
@@ -60,6 +64,11 @@ class WorkloadTables(NamedTuple):
     sampled: jnp.ndarray      # (R, T*D) bool: sample destination?
     smp_lo: jnp.ndarray       # (R, T*D) sample range lo
     smp_hi: jnp.ndarray       # (R, T*D) sample range hi (exclusive)
+    link_ok: jnp.ndarray      # (S, q*n) bool: healthy directed links
+    mid_pool: jnp.ndarray     # (S,) healthy Valiant intermediates (cyclic)
+    n_mid: jnp.ndarray        # ()  count of distinct healthy intermediates
+    n_dead: jnp.ndarray       # ()  dead cables — sizes the deroute reserve
+                              #     adaptive policies keep for fault escapes
 
     @property
     def R(self) -> int:
@@ -138,6 +147,16 @@ def make_workload_tables(
     # pad ranks: infinite (ignored by completion) + no endpoint (never inject)
     infinite = pad_r(wl.infinite, fill=True)
 
+    # fault mask + Valiant intermediate pool: topology-static shapes, so
+    # fault scenarios share the shape bucket of their healthy counterparts
+    link_ok = wl.link_ok if wl.link_ok is not None else faults.no_faults(wl.topo)
+    link_ok = np.asarray(link_ok, dtype=bool)
+    mid_pool, n_mid = faults.intermediate_pool(wl.topo, link_ok)
+    dead_dirs = int((self_port_mask(
+        wl.topo.all_switch_coords(), wl.topo.n, wl.topo.q
+    ) & ~link_ok).sum())
+    n_dead = (dead_dirs + 1) // 2  # cables (directed pairs, ceil)
+
     tables = WorkloadTables(
         rank_ep=jnp.asarray(pad_r(wl.rank_ep), dtype=I32),
         ep_rank=jnp.asarray(ep_rank, dtype=I32),
@@ -158,6 +177,10 @@ def make_workload_tables(
         sampled=jnp.asarray(pad_rtd(wl.sampled.astype(bool)).reshape(R_b, T_b * D_b)),
         smp_lo=jnp.asarray(pad_rtd(wl.lo).reshape(R_b, T_b * D_b), dtype=I32),
         smp_hi=jnp.asarray(pad_rtd(wl.hi).reshape(R_b, T_b * D_b), dtype=I32),
+        link_ok=jnp.asarray(link_ok),
+        mid_pool=jnp.asarray(mid_pool, dtype=I32),
+        n_mid=jnp.int32(n_mid),
+        n_dead=jnp.int32(n_dead),
     )
     return PreparedWorkload(
         tables=tables, warmup=int(wl.start.max()), num_pools=wl.num_pools,

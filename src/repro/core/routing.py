@@ -38,25 +38,19 @@ class LinkSpace:
     """
 
     def __init__(self, topo: HyperX):
+        from repro.route.topology import dst_switch_table, self_port_mask
+
         self.topo = topo
         self.n, self.q = topo.n, topo.q
         self.num_ids = topo.num_switches * topo.q * topo.n
         coords = topo.all_switch_coords()  # (S, q)
         self.switch_coords = coords
-        # dst switch id for every (src, dim, val)
-        s = np.arange(topo.num_switches)
-        self.dst_switch = np.empty((topo.num_switches, topo.q, topo.n), dtype=np.int64)
-        for dim in range(topo.q):
-            for v in range(topo.n):
-                nc = coords.copy()
-                nc[:, dim] = v
-                ids = np.zeros(topo.num_switches, dtype=np.int64)
-                for d2 in range(topo.q):
-                    ids = ids * topo.n + nc[:, d2]
-                self.dst_switch[:, dim, v] = ids
-        self.valid = np.ones((topo.num_switches, topo.q, topo.n), dtype=bool)
-        for dim in range(topo.q):
-            self.valid[s, dim, coords[:, dim]] = False
+        # dst switch id for every (src, dim, val) — broadcast construction,
+        # parity with the seed's nested loops pinned by tests/test_route.py
+        self.dst_switch = dst_switch_table(coords, topo.n, topo.q)
+        self.valid = self_port_mask(coords, topo.n, topo.q).reshape(
+            topo.num_switches, topo.q, topo.n
+        )
 
     def link_id(self, src: np.ndarray, dim: np.ndarray, val: np.ndarray) -> np.ndarray:
         return (np.asarray(src) * self.q + np.asarray(dim)) * self.n + np.asarray(val)

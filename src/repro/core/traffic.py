@@ -284,6 +284,9 @@ class Workload:
     start: np.ndarray        # (R,) injection start time (warmup gating)
     num_pools: int
     names: list[str]
+    # (S, q*n) bool, True = healthy directed link; None = all healthy.
+    # See repro.route.faults for mask constructors and apply_faults().
+    link_ok: np.ndarray | None = None
 
     @property
     def target_ranks(self) -> np.ndarray:
@@ -300,6 +303,7 @@ def compose_workload(
     background: Sequence[tuple[AppTraffic, Partition]] = (),
     fabric_partitioning: str = "shared",
     warmup: int = 0,
+    link_ok: np.ndarray | None = None,
 ) -> Workload:
     """Merge applications (+ background noise) into one machine workload.
 
@@ -311,6 +315,10 @@ def compose_workload(
     ``warmup``: target apps start injecting only at this time, letting the
     (infinite-rate) background reach steady state first; the simulator
     reports makespan relative to the warmup point.
+
+    ``link_ok``: optional (S, q*n) link-fault mask (True = healthy); see
+    :mod:`repro.route.faults`.  Travels with the workload into the
+    engine's device tables, so fault scenarios batch like any other axis.
     """
     all_jobs = list(apps) + list(background)
     n_bg = len(background)
@@ -383,6 +391,7 @@ def compose_workload(
         recv_need=recv_need, total_sends=total_sends, sampled=sampled,
         lo=lo, hi=hi, window=window, start=start, num_pools=num_pools,
         names=names,
+        link_ok=None if link_ok is None else np.asarray(link_ok, dtype=bool),
     )
 
 

@@ -95,11 +95,20 @@ def simulate_axis_collective(
     num_groups: int | None = None,
     seed: int = 0,
     horizon: int = 120_000,
+    mode: str = "omniwar",
+    link_ok=None,
 ) -> dict:
-    """Run ``kind`` concurrently over (a subset of) the axis groups."""
+    """Run ``kind`` concurrently over (a subset of) the axis groups.
+
+    ``mode`` selects any registered routing policy; ``link_ok`` optionally
+    injects a link-fault mask (see :mod:`repro.route.faults`).
+    """
     wl = axis_collective_workload(placement, axis, kind, num_groups)
-    engine = get_engine(placement.topo, mode="omniwar",
-                        num_pools=wl.num_pools)
+    if link_ok is not None:
+        from repro.route import apply_faults
+
+        wl = apply_faults(wl, link_ok)
+    engine = get_engine(placement.topo, mode=mode, num_pools=wl.num_pools)
     res = engine.run(wl, seed=seed, horizon=horizon)
     return _result_row(placement, axis, kind, num_groups, res)
 
@@ -113,11 +122,12 @@ def compare_strategies_simulated(
                 "l_shape", "random_endpoint", "random_switch"),
     num_groups: int | None = 8,
     seed: int = 0,
+    mode: str = "omniwar",
 ) -> list[dict]:
     """Measured makespan of one mesh collective per allocation strategy.
 
     All strategies execute as one batched ``run_batch`` device call (their
-    workloads share a shape bucket).
+    workloads share a shape bucket).  ``mode`` selects the routing policy.
     """
     from repro.fabric.placement import place_job
 
@@ -125,7 +135,7 @@ def compare_strategies_simulated(
                   for s in strategies]
     wls = [axis_collective_workload(p, axis, kind, num_groups)
            for p in placements]
-    engine = get_engine(placements[0].topo, mode="omniwar",
+    engine = get_engine(placements[0].topo, mode=mode,
                         num_pools=wls[0].num_pools)
     results = engine.run_batch(wls, seeds=[seed] * len(wls), horizon=120_000)
     out = [_result_row(p, axis, kind, num_groups, res)

@@ -1,0 +1,72 @@
+"""Pluggable routing-policy subsystem.
+
+Public surface:
+
+  * :class:`RoutingPolicy` — the static policy declaration (candidate-set
+    shape, Valiant intermediates, injection adaptivity, VC budget);
+  * :func:`get_policy` / :func:`register_policy` /
+    :func:`available_policies` — the registry the engine resolves
+    ``mode=`` strings through (unknown modes raise with the registered
+    names);
+  * :mod:`repro.route.policies` — the shipped policies: ``min``,
+    ``omniwar`` (bit-identical migrations of the seed engine's inline
+    modes), ``val`` (Valiant random-intermediate) and ``ugal`` (UGAL-L
+    occupancy-adaptive min-vs-Valiant at injection);
+  * :mod:`repro.route.faults` — per-workload link-fault masks
+    (``Workload.link_ok`` -> ``WorkloadTables``), fault generators, the
+    Valiant intermediate pool, and connectivity checks;
+  * :mod:`repro.route.topology` — vectorized neighbour/port tables shared
+    by the engine and ``LinkSpace``.
+
+Policies compile to the candidate-port/VC tables the vmapped step kernel
+consumes; per-workload fault state travels as device arguments, so a
+routing x strategy x fault grid is still one compilation and one device
+call per shape bucket (trace-counter-pinned in ``tests/test_route.py``).
+"""
+
+from repro.route.base import (
+    RoutingPolicy,
+    available_policies,
+    get_policy,
+    register_policy,
+)
+from repro.route.faults import (
+    apply_faults,
+    fail_links,
+    fail_switches,
+    faults_from_endpoints,
+    intermediate_pool,
+    is_connected,
+    no_faults,
+    random_link_faults,
+)
+from repro.route.policies import MIN, OMNIWAR, UGAL, VAL
+from repro.route.topology import (
+    dst_switch_table,
+    neighbor_tables,
+    port_layout,
+    self_port_mask,
+)
+
+__all__ = [
+    "MIN",
+    "OMNIWAR",
+    "UGAL",
+    "VAL",
+    "RoutingPolicy",
+    "apply_faults",
+    "available_policies",
+    "dst_switch_table",
+    "fail_links",
+    "fail_switches",
+    "faults_from_endpoints",
+    "get_policy",
+    "intermediate_pool",
+    "is_connected",
+    "neighbor_tables",
+    "no_faults",
+    "port_layout",
+    "random_link_faults",
+    "register_policy",
+    "self_port_mask",
+]

@@ -1,0 +1,101 @@
+"""Routing-policy contract + registry.
+
+A :class:`RoutingPolicy` is a *declaration*, not an object with behaviour:
+it names the static predicates the cycle kernel specializes on (candidate
+set shape, Valiant intermediates, injection adaptivity) and declares its
+hop-indexed VC budget.  The engine's :func:`~repro.core.engine.tables.
+build_static_tables` resolves the policy by name through the registry and
+bakes the predicates into the jitted step function as trace constants —
+everything per-workload (fault masks, intermediate pools) still travels in
+``WorkloadTables`` as device arguments, so routing x strategy x fault
+grids batch exactly like any other scenario axis.
+
+Deadlock freedom: every packet occupies VC ``min(hops_taken + 1, V - 1)``,
+so the buffer dependency graph is acyclic as long as no packet ever takes
+more than ``V - 1`` hops.  :meth:`RoutingPolicy.vc_budget` is each
+policy's declaration of that worst case — minimal phases contribute at
+most ``q`` hops each (one per unaligned dimension), Valiant-style
+policies have two phases, and every policy may additionally spend up to
+``m`` deroutes (adaptive Omni-WAR deroutes and fault-escalation deroutes
+decrement the same per-packet budget, the constraint 2404.04315 builds
+its fault-tolerant VC schedule around).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class RoutingPolicy:
+    """Static declaration of one table-driven routing policy.
+
+    Attributes:
+      name: registry key (the engine's ``mode=`` string).
+      adaptive_deroutes: Omni-WAR-style candidate set — non-minimal ports
+        in unaligned dimensions are legal while the per-packet deroute
+        budget lasts.  When False the candidate set is minimal-only, with
+        deroutes *escalated* (still budget-bounded) only when every
+        minimal port of the current switch is dead.
+      uses_intermediate: packets may carry a Valiant intermediate switch;
+        the kernel routes minimally to the intermediate, then minimally
+        to the destination (hop counter and VCs keep increasing across
+        the phase change).
+      adaptive_injection: UGAL — the minimal vs Valiant path is chosen
+        per packet at injection from the local queue-occupancy signal.
+    """
+
+    name: str
+    adaptive_deroutes: bool
+    uses_intermediate: bool
+    adaptive_injection: bool
+    description: str = ""
+
+    def default_deroutes(self, q: int) -> int:
+        """Default per-packet deroute budget m: one per dimension per
+        minimal phase.  min/omniwar keep the seed engine's q; Valiant
+        policies get 2q — their two phases each need escape headroom, or
+        packets strand budget-empty at dead links mid-phase."""
+        return (2 if self.uses_intermediate else 1) * q
+
+    def vc_budget(self, q: int, m: int) -> int:
+        """Hop-indexed VC count V = worst-case hops + 1.
+
+        ``q`` topology dimensions (max minimal hops per phase), ``m``
+        deroute budget.  min/omniwar: q + m + 1 (identical to the seed
+        engine); val/ugal add a second minimal phase: 2q + m + 1.
+        """
+        phases = 2 if self.uses_intermediate else 1
+        return phases * q + m + 1
+
+    def max_hops(self, q: int, m: int) -> int:
+        """Worst-case network hops under this policy (== vc_budget - 1)."""
+        return self.vc_budget(q, m) - 1
+
+
+# --------------------------------------------------------------- registry
+_REGISTRY: dict[str, RoutingPolicy] = {}
+
+
+def register_policy(policy: RoutingPolicy) -> RoutingPolicy:
+    """Add a policy to the registry (returns it, decorator-style)."""
+    if policy.name in _REGISTRY:
+        raise ValueError(f"routing policy {policy.name!r} already registered")
+    _REGISTRY[policy.name] = policy
+    return policy
+
+
+def available_policies() -> tuple[str, ...]:
+    """Registered policy names, sorted."""
+    return tuple(sorted(_REGISTRY))
+
+
+def get_policy(name: str) -> RoutingPolicy:
+    """Look a policy up by name; unknown names list what IS registered."""
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown routing mode {name!r}; registered policies: "
+            f"{', '.join(available_policies()) or '(none)'}"
+        ) from None

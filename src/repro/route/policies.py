@@ -1,0 +1,59 @@
+"""The four shipped routing policies.
+
+``min`` and ``omniwar`` reproduce the seed engine's two inline modes
+bit-identically (regression-pinned by ``tests/test_route.py``); ``val``
+and ``ugal`` add Valiant-style non-minimal load balancing:
+
+  * **min** — minimal only: one candidate port per unaligned dimension
+    (the port whose value matches the destination coordinate).  Under
+    faults, deroutes escalate (budget-bounded) when every minimal port
+    of the current switch is dead.
+  * **omniwar** — Omni-WAR (McDonald et al., SC'19): any port of an
+    unaligned dimension is a candidate while the per-packet deroute
+    budget m lasts; choice by occupancy + deroute-penalty cost.
+  * **val** — Valiant: every packet draws a uniform random intermediate
+    switch from the healthy pool at injection, routes minimally to it,
+    then minimally to the destination.  Classic worst-case load
+    balancing at the price of ~2x hops.
+  * **ugal** — UGAL-L: at injection the packet compares (queue occupancy
+    x path length) of its best minimal port against its best port toward
+    a sampled Valiant intermediate — the same congestion signal the
+    in-network adaptive cost uses — and commits to whichever is cheaper.
+    In flight it behaves like ``val`` (minimal per phase).
+"""
+
+from __future__ import annotations
+
+from repro.route.base import RoutingPolicy, register_policy
+
+MIN = register_policy(RoutingPolicy(
+    name="min",
+    adaptive_deroutes=False,
+    uses_intermediate=False,
+    adaptive_injection=False,
+    description="minimal-only (fault escalation deroutes when cut)",
+))
+
+OMNIWAR = register_policy(RoutingPolicy(
+    name="omniwar",
+    adaptive_deroutes=True,
+    uses_intermediate=False,
+    adaptive_injection=False,
+    description="Omni-WAR adaptive deroutes (budget m)",
+))
+
+VAL = register_policy(RoutingPolicy(
+    name="val",
+    adaptive_deroutes=False,
+    uses_intermediate=True,
+    adaptive_injection=False,
+    description="Valiant random-intermediate, minimal per phase",
+))
+
+UGAL = register_policy(RoutingPolicy(
+    name="ugal",
+    adaptive_deroutes=False,
+    uses_intermediate=True,
+    adaptive_injection=True,
+    description="UGAL-L: min-vs-Valiant chosen at injection by occupancy",
+))

@@ -1,0 +1,63 @@
+"""Vectorized port/neighbour table construction.
+
+The seed engine built its neighbour tables with O(S * q * n) nested Python
+loops (and ``LinkSpace`` repeated the same loops for its ``dst_switch``
+table).  The broadcast form here computes the same tables in a handful of
+numpy ops from the mixed-radix switch id decomposition:
+
+    switch_id = sum_d coords[:, d] * n**(q-1-d)
+
+so the neighbour reached through port (d, v) — "set dimension d to value
+v" — is ``id + (v - coords[:, d]) * n**(q-1-d)``.  Parity with the loop
+construction is pinned by ``tests/test_route.py``.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+def port_layout(n: int, q: int) -> tuple[np.ndarray, np.ndarray]:
+    """(q*n,) dimension and value addressed by each dense network port."""
+    d_idx = np.repeat(np.arange(q), n)
+    v_idx = np.tile(np.arange(n), q)
+    return d_idx, v_idx
+
+
+def neighbor_tables(
+    coords: np.ndarray, n: int, q: int
+) -> tuple[np.ndarray, np.ndarray]:
+    """Neighbour switch + arrival port per dense network port.
+
+    Args:
+      coords: (S, q) switch coordinates, slowest dimension first.
+
+    Returns:
+      nbr:           (S, q*n) switch reached through port d*n + v
+                     (== self when v == coords[s, d]: the invalid
+                     self-loop ports, never legal candidates);
+      in_port_at_nb: (S, q*n) the port of that neighbour the packet
+                     arrives on (dimension d, value = sender's coord).
+    """
+    coords = np.asarray(coords)
+    w = n ** np.arange(q - 1, -1, -1)                  # mixed-radix weights
+    base = coords @ w                                  # (S,) switch ids
+    d_idx, v_idx = port_layout(n, q)
+    wd = w[d_idx]                                      # (q*n,)
+    nbr = base[:, None] + (v_idx[None, :] - coords[:, d_idx]) * wd[None, :]
+    in_port_at_nb = d_idx[None, :] * n + coords[:, d_idx]
+    return nbr.astype(np.int64), in_port_at_nb.astype(np.int64)
+
+
+def dst_switch_table(coords: np.ndarray, n: int, q: int) -> np.ndarray:
+    """(S, q, n) destination switch for every (src, dim, value) link id —
+    the vectorized form of ``LinkSpace.dst_switch``."""
+    nbr, _ = neighbor_tables(coords, n, q)
+    return nbr.reshape(-1, q, n)
+
+
+def self_port_mask(coords: np.ndarray, n: int, q: int) -> np.ndarray:
+    """(S, q*n) bool — True where port (d, v) is a real link (v != own
+    coordinate); the dense layout's self-loop ports are False."""
+    d_idx, v_idx = port_layout(n, q)
+    return v_idx[None, :] != np.asarray(coords)[:, d_idx]

@@ -20,7 +20,11 @@ turns the allocation functions into dynamic placement policies:
     bucket.
 """
 
-from repro.sched.bridge import evaluate_snapshots, snapshot_workload
+from repro.sched.bridge import (
+    evaluate_snapshots,
+    evaluate_snapshots_by_routing,
+    snapshot_workload,
+)
 from repro.sched.jobs import (
     Job,
     heavy_tailed_stream,
@@ -41,6 +45,7 @@ __all__ = [
     "Snapshot",
     "StreamResult",
     "evaluate_snapshots",
+    "evaluate_snapshots_by_routing",
     "heavy_tailed_stream",
     "load_trace",
     "poisson_stream",

@@ -9,6 +9,15 @@ engine groups workloads by shape bucket internally, so the entire grid
 costs **one compilation and one device call per shape bucket** regardless
 of how many strategies, snapshots, or seeds it spans (the trace-counter
 test pins this).
+
+Fault-aware routing closes the loop with the scheduler's failure churn: a
+snapshot records the endpoints the ledger had marked failed, and
+``churn_faults=True`` lowers them to link-fault masks
+(:func:`repro.route.faults.faults_from_endpoints` — failure domains are
+co-packaged, so a dead node takes an adjacent cable with it).  Masks ride
+in the workload tables, so fault scenarios batch like any other axis.
+:func:`evaluate_snapshots_by_routing` runs the same snapshot grid once per
+registered routing policy (one engine — one compile set — per policy).
 """
 
 from __future__ import annotations
@@ -22,6 +31,7 @@ from repro.core.engine import SimResult, get_engine
 from repro.core.engine.workload_tables import shape_bucket
 from repro.core.hyperx import HyperX
 from repro.core.traffic import Workload
+from repro.route import apply_faults, faults_from_endpoints
 from repro.sched.scheduler import Snapshot
 
 _KERNELS = dict(tr.KERNELS)
@@ -33,8 +43,14 @@ def snapshot_workload(
     topo: HyperX,
     snap: Snapshot,
     fabric_partitioning: str = "shared",
+    churn_faults: bool = False,
 ) -> Workload:
-    """Lower one snapshot: every co-resident job's kernel on its partition."""
+    """Lower one snapshot: every co-resident job's kernel on its partition.
+
+    ``churn_faults`` additionally lowers the snapshot's failed endpoints
+    (the scheduler's churn, frozen at snapshot time) into a link-fault
+    mask the routing policies must steer around.
+    """
     apps = []
     for job_id, kernel, part in snap.jobs:
         try:
@@ -45,9 +61,14 @@ def snapshot_workload(
                 f"available: {sorted(_KERNELS)}"
             ) from None
         apps.append((builder(part.size), part))
-    return tr.compose_workload(
+    wl = tr.compose_workload(
         topo, apps, fabric_partitioning=fabric_partitioning
     )
+    if churn_faults and snap.failed_endpoints:
+        wl = apply_faults(
+            wl, faults_from_endpoints(topo, snap.failed_endpoints)
+        )
+    return wl
 
 
 def pick_snapshots(
@@ -70,6 +91,7 @@ def evaluate_snapshots(
     horizon: int = 60_000,
     mode: str = "omniwar",
     fabric_partitioning: str = "shared",
+    churn_faults: bool = False,
 ) -> tuple[list[dict], dict]:
     """Evaluate snapshot grids for many strategies in batched device calls.
 
@@ -87,7 +109,9 @@ def evaluate_snapshots(
     keys, snaps, workloads = [], [], []
     for key, group in snapshots_by_key.items():
         for snap in group:
-            wl = snapshot_workload(topo, snap, fabric_partitioning)
+            wl = snapshot_workload(
+                topo, snap, fabric_partitioning, churn_faults=churn_faults
+            )
             keys.append(key)
             snaps.append(snap)
             workloads.append(wl)
@@ -109,8 +133,10 @@ def evaluate_snapshots(
             assert isinstance(res, SimResult)
             rows.append({
                 "key": key,
+                "routing": mode,
                 "time": round(snap.time, 3),
                 "co_jobs": snap.num_jobs,
+                "failed_eps": len(snap.failed_endpoints) if churn_faults else 0,
                 "ranks": wl.R,
                 "bucket": "x".join(map(str, bucket)),
                 "seed": int(seed),
@@ -124,3 +150,38 @@ def evaluate_snapshots(
         "traces": engine.trace_count - traces0,
         "device_calls": engine.device_calls - calls0,
     }
+
+
+def evaluate_snapshots_by_routing(
+    topo: HyperX,
+    snapshots_by_key: Mapping[str, Sequence[Snapshot]],
+    modes: Sequence[str] = ("min", "omniwar", "val", "ugal"),
+    seeds: Sequence[int] = (0,),
+    horizon: int = 60_000,
+    fabric_partitioning: str = "shared",
+    churn_faults: bool = True,
+) -> tuple[list[dict], dict]:
+    """The snapshot interference grid, once per routing policy.
+
+    Each policy is its own engine (its VC budget changes the queue
+    space), so the cost is one compile set per mode — within a mode the
+    whole strategy x snapshot x seed grid still batches per shape
+    bucket.  ``churn_faults`` (default on) sources link faults from each
+    snapshot's recorded failure churn, making this the
+    routing x strategy x fault grid of DESIGN.md §Routing.
+
+    Returns (rows, stats_by_mode): rows carry a ``routing`` column;
+    ``stats_by_mode[mode]`` is the per-mode stats dict of
+    :func:`evaluate_snapshots`.
+    """
+    rows: list[dict] = []
+    stats_by_mode: dict[str, dict] = {}
+    for mode in modes:
+        mode_rows, stats = evaluate_snapshots(
+            topo, snapshots_by_key, seeds=seeds, horizon=horizon,
+            mode=mode, fabric_partitioning=fabric_partitioning,
+            churn_faults=churn_faults,
+        )
+        rows.extend(mode_rows)
+        stats_by_mode[mode] = stats
+    return rows, stats_by_mode

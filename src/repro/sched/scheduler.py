@@ -59,6 +59,9 @@ class Snapshot:
     time: float
     trigger: int  # job id whose placement produced this snapshot
     jobs: tuple[tuple[int, str, Partition], ...]  # (job_id, kernel, partition)
+    # endpoints marked failed in the ledger when the snapshot was taken —
+    # the bridge lowers these to link-fault masks for fault-aware routing
+    failed_endpoints: tuple[int, ...] = ()
 
     @property
     def num_jobs(self) -> int:
@@ -165,6 +168,9 @@ class OnlineScheduler:
                 jobs=tuple(
                     (jid, running[jid]["job"].kernel, ledger.jobs[jid].partition)
                     for jid in sorted(running)
+                ),
+                failed_endpoints=tuple(
+                    int(e) for e in np.flatnonzero(ledger.failed)
                 ),
             ))
 
