@@ -29,9 +29,16 @@ import numpy as np
 
 from repro.core.hyperx import HyperX
 from repro.core.allocation import allocate_partition, machine_partitions
-from repro.core import traffic as tr
 from repro.core.engine import SimResult, get_engine
-from repro.core.traffic import Workload
+from repro.traffic import (
+    AppSpec,
+    BackgroundSpec,
+    PhaseSpec,
+    ScenarioSpec,
+    Workload,
+    build_workload,
+    get_pattern,
+)
 
 STRATEGIES = [
     "row", "diagonal", "full_spread", "rectangular", "l_shape",
@@ -44,6 +51,7 @@ NUM_SEEDS = 1          # set by benchmarks.run --seeds
 CSV_DIR: str | None = None  # set by benchmarks.run --csv
 QUICK = True           # set by benchmarks.run --quick/--full
 ROUTING = "omniwar"    # set by benchmarks.run --routing (any registered policy)
+PATTERN = "all_to_all"  # set by benchmarks.run --pattern (any registered pattern)
 
 
 def resolve_routing(mode: str | None = None) -> str:
@@ -52,6 +60,14 @@ def resolve_routing(mode: str | None = None) -> str:
     simulation-backed modules resolve through it unless a caller
     overrides explicitly."""
     return ROUTING if mode is None else mode
+
+
+def resolve_pattern(kind: str | None = None) -> str:
+    """Traffic-pattern switch, same contract as :func:`resolve_routing`:
+    ``benchmarks.run --pattern`` sets :data:`PATTERN` once and the
+    pattern-parameterized modules (e.g. ``traffic_grid``) resolve
+    through it unless a caller overrides explicitly."""
+    return PATTERN if kind is None else kind
 
 
 def resolve_quick(quick) -> bool:
@@ -87,25 +103,18 @@ def emit(rows: list[dict], name: str):
 
 
 # ------------------------------------------------------------------ traffic
-def kernel_app(kind: str, k: int, seed: int = 0):
-    if kind == "all_to_all":
-        return tr.all_to_all(k)
-    if kind == "all_reduce":
-        return tr.all_reduce(k, vector_packets=64)
-    if kind == "stencil_von_neumann":
-        return tr.stencil(k, "von_neumann")
-    if kind == "stencil_moore":
-        return tr.stencil(k, "moore")
-    if kind == "random_involution":
-        return tr.random_involution(k, packets=63, seed=seed)
-    if kind == "uniform":
-        return tr.uniform(k, packets=64)
-    if kind == "random_permutation":
-        return tr.random_permutation(k, packets=64, seed=seed)
+def pattern_phase(kind: str) -> PhaseSpec:
+    """Registry phase for ``kind`` with the suite's historical params
+    (switch-permutation groups sized to the paper machine's switches)."""
     if kind == "random_switch_permutation":
-        return tr.random_switch_permutation(k, group=PAPER_TOPO.n,
-                                            packets=64, seed=seed)
-    raise ValueError(kind)
+        return PhaseSpec(kind, {"group": PAPER_TOPO.n})
+    return PhaseSpec(kind)
+
+
+def kernel_app(kind: str, k: int, seed: int = 0):
+    """One registry pattern over ``k`` ranks (kept for spot checks)."""
+    phase = pattern_phase(kind)
+    return get_pattern(kind).build(k, seed=seed, **dict(phase.params))
 
 
 # ------------------------------------------------------- workload builders
@@ -115,8 +124,12 @@ def escalation_workload(strategy: str, kind: str, replicas: int, k: int = 64,
     per_job = k
     parts = machine_partitions(strategy, PAPER_TOPO,
                                num_jobs=512 // per_job, job_size=per_job)
-    apps = [(kernel_app(kind, k, seed + j), parts[j]) for j in range(replicas)]
-    return tr.compose_workload(PAPER_TOPO, apps)
+    spec = ScenarioSpec(apps=tuple(
+        AppSpec(phases=pattern_phase(kind), placement=parts[j], ranks=k,
+                seed=seed + j)
+        for j in range(replicas)
+    ))
+    return build_workload(PAPER_TOPO, spec)
 
 
 def interference_workload(strategy: str, kind: str, k: int = 64,
@@ -124,15 +137,25 @@ def interference_workload(strategy: str, kind: str, k: int = 64,
                           warmup: int = 400, seed: int = 0) -> Workload:
     """One target job (+ optional random-permutation background)."""
     part = allocate_partition(strategy, PAPER_TOPO, 0, size=k)
-    apps = [(kernel_app(kind, k, seed), part)]
-    bgs = []
-    if with_bg:
-        free = np.setdiff1d(np.arange(PAPER_TOPO.num_endpoints),
-                            part.endpoints)
-        bgs = [tr.background_noise(PAPER_TOPO, free, seed=seed + 99)]
-    return tr.compose_workload(PAPER_TOPO, apps, background=bgs,
-                               fabric_partitioning=fabric,
-                               warmup=warmup if with_bg else 0)
+    spec = ScenarioSpec(
+        apps=(AppSpec(phases=pattern_phase(kind), placement=part, ranks=k,
+                      seed=seed),),
+        background=BackgroundSpec(seed=seed + 99) if with_bg else None,
+        fabric_partitioning=fabric,
+        warmup=warmup if with_bg else 0,
+    )
+    return build_workload(PAPER_TOPO, spec)
+
+
+def phased_workload(strategy: str, kinds, k: int = 64, seed: int = 0,
+                    window: int | None = None) -> Workload:
+    """One job running an ordered phase list (e.g. stencil + all-reduce)."""
+    part = allocate_partition(strategy, PAPER_TOPO, 0, size=k)
+    spec = ScenarioSpec(apps=(
+        AppSpec(phases=tuple(pattern_phase(kd) for kd in kinds),
+                placement=part, ranks=k, seed=seed, window=window),
+    ))
+    return build_workload(PAPER_TOPO, spec)
 
 
 # --------------------------------------------------------- batched execution

@@ -17,6 +17,9 @@ table3, sched_stream, collective_sim_bench, ...) under that routing
 policy (any name registered in ``repro.route``; default omniwar).  Two
 modules are pinned by design: ``fig7_min_escalation`` is the paper's
 MIN artifact, and ``routing_grid`` always sweeps all policies.
+--pattern NAME focuses the pattern-parameterized modules (``traffic_grid``)
+on that traffic pattern (any name registered in ``repro.traffic``;
+default all_to_all).
 """
 
 import argparse
@@ -33,6 +36,7 @@ MODULES = [
     "table4_interference",
     "fig11_fabric_partitioning",
     "routing_grid",
+    "traffic_grid",
     "sched_stream",
     "collective_sim_bench",
     "roofline_bench",
@@ -41,6 +45,7 @@ MODULES = [
 
 def main(argv=None):
     from repro.route import available_policies
+    from repro.traffic import available_patterns
 
     p = argparse.ArgumentParser()
     p.add_argument("--quick", action="store_true",
@@ -54,6 +59,9 @@ def main(argv=None):
     p.add_argument("--routing", default="omniwar",
                    choices=available_policies(),
                    help="routing policy for the simulation-backed modules")
+    p.add_argument("--pattern", default="all_to_all",
+                   choices=available_patterns(),
+                   help="focus pattern for the pattern-parameterized modules")
     args = p.parse_args(argv)
     if args.quick and args.full:
         p.error("--quick and --full are mutually exclusive")
@@ -64,6 +72,7 @@ def main(argv=None):
     common.CSV_DIR = args.csv
     common.QUICK = quick
     common.ROUTING = args.routing
+    common.PATTERN = args.pattern
 
     mods = [m for m in MODULES if args.only is None or args.only in m]
     t00 = time.time()

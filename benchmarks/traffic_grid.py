@@ -1,0 +1,75 @@
+"""Pattern x strategy (x routing) grid — the traffic-registry sweep.
+
+Every swept traffic pattern runs the same allocation-strategy grid on the
+paper machine (one 64-rank job, no background, identical seeds), so row
+deltas are pure pattern x placement effects: tornado/transpose punish
+locality-heavy placements under minimal routing, incast is
+placement-insensitive (ejection-bound), collectives reward locality.
+
+Workloads are built through the declarative scenario layer and executed
+through ``sweep`` — every pattern whose padded step table lands in the
+same ``WorkloadTables`` shape bucket shares one compilation and one
+vmapped device call, which is what makes a pattern axis as cheap as a
+strategy or seed axis (trace-counter-pinned in
+``tests/test_traffic_patterns.py``).
+
+Quick mode sweeps the adversarial additions plus the ``--pattern``
+focus; full mode sweeps every registered pattern and adds a routing axis
+over all registered policies.
+"""
+
+from benchmarks.common import (
+    STRATEGIES,
+    emit,
+    interference_workload,
+    resolve_pattern,
+    resolve_quick,
+    resolve_routing,
+    summarize,
+    sweep,
+)
+
+from repro.route import available_policies
+from repro.traffic import available_patterns
+
+QUICK_PATTERNS = ("transpose", "shuffle", "tornado", "incast",
+                  "recursive_doubling", "stencil_3d")
+
+
+def run(quick=None):
+    quick = resolve_quick(quick)
+    focus = resolve_pattern()
+    if quick:
+        patterns = tuple(dict.fromkeys((focus,) + QUICK_PATTERNS))
+        strategies = ("row", "diagonal", "full_spread")
+        modes = (resolve_routing(),)
+    else:
+        patterns = available_patterns()
+        strategies = tuple(STRATEGIES)
+        modes = available_policies()
+    horizon = 30_000
+
+    base = {
+        (strat, pat): interference_workload(strat, pat, with_bg=False)
+        for strat in strategies for pat in patterns
+    }
+    rows = []
+    for mode in modes:
+        grid = list(base)
+        per_wl = sweep([base[g] for g in grid], mode=mode, horizon=horizon)
+        for (strat, pat), per_seed in zip(grid, per_wl):
+            s = summarize(per_seed)
+            rows.append({
+                "pattern": pat, "strategy": strat, "routing": mode,
+                "target_packets": base[(strat, pat)].target_packets,
+                "makespan": s["makespan"],
+                "avg_latency": s["avg_latency"],
+                "avg_hops": s["avg_hops"],
+                "completed": s["completed"],
+            })
+    emit(rows, "traffic_grid (pattern x strategy x routing)")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

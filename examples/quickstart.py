@@ -12,6 +12,7 @@ from repro.fabric.placement import place_job
 from repro.fabric.collective_model import CollectiveModel
 from repro.route import apply_faults, fail_links
 from repro.sched import Job, OnlineScheduler
+from repro.traffic import AppSpec, PhaseSpec, ScenarioSpec, build_workload
 
 
 def main():
@@ -90,6 +91,27 @@ def main():
         print(f"{strat:12s} makespan = {res.makespan_cycles} cycles "
               f"(avg hops {res.avg_hops:.2f}, max hops {res.max_hops} "
               f"< VC budget {ugal.static.V})")
+
+    # 7) declarative phased scenarios: the canonical HPC iteration —
+    # stencil compute-exchange rounds followed by an all-reduce — as ONE
+    # app built through the traffic-pattern registry (repro.traffic).
+    # Both strategies again share one compilation and one device call.
+    print("\nphased stencil+all-reduce job, Diagonal vs Rectangular:")
+    engine = SimEngine(topo, mode="omniwar")
+    phased = [
+        build_workload(topo, ScenarioSpec(apps=(
+            AppSpec(
+                phases=(PhaseSpec("stencil_von_neumann", {"rounds": 8}),
+                        PhaseSpec("all_reduce", {"vector_packets": 64})),
+                placement=strat,
+            ),
+        )))
+        for strat in ("diagonal", "rectangular")
+    ]
+    for strat, res in zip(("diagonal", "rectangular"),
+                          engine.run_batch(phased, horizon=40000)):
+        print(f"{strat:12s} stencil+all_reduce makespan = "
+              f"{res.makespan_cycles} cycles (avg hops {res.avg_hops:.2f})")
 
 
 if __name__ == "__main__":

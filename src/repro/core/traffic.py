@@ -1,420 +1,51 @@
-"""Workload generation (paper Section 6.1).
+"""Compatibility shim — the traffic subsystem lives in :mod:`repro.traffic`.
 
-Static traffic patterns and application communication kernels, expressed in a
-single *step-table* form that the cycle-level simulator executes directly:
+The workload side grew into a registry-driven subsystem mirroring
+``repro/route/`` (see DESIGN.md §Traffic):
 
-  * each rank walks an ordered list of steps; a step sends ``npkts`` packets
-    to each of ``deg`` destinations and (optionally) must receive
-    ``recv_need`` packets tagged with the same step index before the step is
-    complete;
-  * a sliding ``window`` limits how many incomplete steps a rank may have
-    outstanding (1 = fully synchronous, T = fully asynchronous);
-  * destinations are either fixed rank ids or sampled uniformly from a rank
-    range each time a packet is injected (uniform / switch-permutation
-    traffic).
+  * :mod:`repro.traffic.base`     — ``AppTraffic`` step tables, the
+    ``TrafficPattern`` registry, phased composition;
+  * :mod:`repro.traffic.patterns` — the shipped patterns (the paper's
+    Sec. 6.1 set plus the adversarial/collective additions);
+  * :mod:`repro.traffic.workload` — ``Workload`` / ``compose_workload``
+    / ``background_noise`` machine-level merging;
+  * :mod:`repro.traffic.scenario` — declarative ``ScenarioSpec`` layer.
 
-Implemented static patterns (Sec. 6.1.1): uniform, random permutation,
-random switch permutation.  Application kernels (Sec. 6.1.2): All-to-All,
-Rabenseifner All-Reduce, von Neumann / Moore stencils, Random Involution.
-
-``compose_workload`` merges several applications (each placed on a
-Partition) plus optional background noise into one machine-level spec with
-rank -> endpoint maps and per-partition VC pools (fabric partitioning,
-Sec. 6.3.3).
+Every pre-existing name keeps importing from here unchanged; new code
+should import from :mod:`repro.traffic` directly.
 """
 
-from __future__ import annotations
-
-import dataclasses
-import math
-from typing import Sequence
-
-import numpy as np
-
-from repro.core.allocation import Partition
-from repro.core.hyperx import HyperX
-
-
-# --------------------------------------------------------------------------
-# Per-application step tables (rank-local)
-# --------------------------------------------------------------------------
-@dataclasses.dataclass
-class AppTraffic:
-    """Step-table traffic of one application over ranks 0..k-1."""
-
-    name: str
-    k: int
-    sends_dst: np.ndarray  # (k, T, MAXD) destination rank, -1 pad
-    npkts: np.ndarray      # (k, T, MAXD) packets per destination
-    deg: np.ndarray        # (k, T) number of valid destinations
-    recv_need: np.ndarray  # (k, T) packets that must arrive before step done
-    window: int            # max outstanding incomplete steps
-    sampled: np.ndarray | None = None  # (k, T, MAXD) bool: sample dst?
-    lo: np.ndarray | None = None       # (k, T, MAXD) sample range lo
-    hi: np.ndarray | None = None       # (k, T, MAXD) sample range hi (excl)
-
-    @property
-    def T(self) -> int:
-        return self.sends_dst.shape[1]
-
-    @property
-    def maxd(self) -> int:
-        return self.sends_dst.shape[2]
-
-    @property
-    def total_packets(self) -> int:
-        return int(self.npkts[self.sends_dst >= -1].sum())
-
-    def __post_init__(self):
-        if self.sampled is None:
-            self.sampled = np.zeros_like(self.sends_dst, dtype=bool)
-            self.lo = np.zeros_like(self.sends_dst)
-            self.hi = np.zeros_like(self.sends_dst)
-
-
-def _empty(k: int, T: int, maxd: int):
-    return (
-        np.full((k, T, maxd), -1, dtype=np.int64),
-        np.zeros((k, T, maxd), dtype=np.int64),
-        np.zeros((k, T), dtype=np.int64),
-        np.zeros((k, T), dtype=np.int64),
-    )
-
-
-# ----------------------------------------------------------- static patterns
-def uniform(k: int, packets: int = 64) -> AppTraffic:
-    """Uniform random: every packet to a uniform destination in the app."""
-    dst, npk, deg, recv = _empty(k, packets, 1)
-    npk[:, :, 0] = 1
-    deg[:, :] = 1
-    sampled = np.ones((k, packets, 1), dtype=bool)
-    lo = np.zeros((k, packets, 1), dtype=np.int64)
-    hi = np.full((k, packets, 1), k, dtype=np.int64)
-    dst[:, :, 0] = 0  # ignored when sampled
-    return AppTraffic("uniform", k, dst, npk, deg, recv, packets, sampled, lo, hi)
-
-
-def random_permutation(k: int, packets: int = 64, seed: int = 0) -> AppTraffic:
-    """Each rank sends every packet to one fixed random unique destination."""
-    rng = np.random.default_rng(seed)
-    perm = rng.permutation(k)
-    # avoid self-sends: re-draw derangement-ish (swap fixed points)
-    fixed = np.flatnonzero(perm == np.arange(k))
-    for i in fixed:
-        j = (i + 1) % k
-        perm[i], perm[j] = perm[j], perm[i]
-    dst, npk, deg, recv = _empty(k, packets, 1)
-    dst[:, :, 0] = perm[:, None]
-    npk[:, :, 0] = 1
-    deg[:, :] = 1
-    return AppTraffic("random_permutation", k, dst, npk, deg, recv, packets)
-
-
-def random_switch_permutation(
-    k: int, group: int, packets: int = 64, seed: int = 0
-) -> AppTraffic:
-    """Groups of ``group`` ranks send only to one other (permuted) group.
-
-    Adversarial when the allocation maps rank groups onto single switches
-    (locality-aware allocations + linear task mapping): all traffic of a
-    switch targets exactly one other switch.
-    """
-    if k % group:
-        raise ValueError(f"k={k} not a multiple of group={group}")
-    g = k // group
-    rng = np.random.default_rng(seed)
-    gperm = rng.permutation(g)
-    fixed = np.flatnonzero(gperm == np.arange(g))
-    for i in fixed:
-        j = (i + 1) % g
-        gperm[i], gperm[j] = gperm[j], gperm[i]
-    dst, npk, deg, recv = _empty(k, packets, 1)
-    npk[:, :, 0] = 1
-    deg[:, :] = 1
-    sampled = np.ones((k, packets, 1), dtype=bool)
-    my_group = np.arange(k) // group
-    lo = (gperm[my_group] * group)[:, None, None] * np.ones(
-        (1, packets, 1), dtype=np.int64
-    )
-    hi = lo + group
-    return AppTraffic(
-        "random_switch_permutation", k, dst, npk, deg, recv, packets, sampled, lo, hi
-    )
-
-
-# ------------------------------------------------------- application kernels
-def all_to_all(k: int) -> AppTraffic:
-    """MPI All-to-All: k-1 asynchronous steps; step i sends to (r+i+1) mod k."""
-    T = k - 1
-    dst, npk, deg, recv = _empty(k, T, 1)
-    r = np.arange(k)[:, None]
-    i = np.arange(T)[None, :]
-    dst[:, :, 0] = (r + i + 1) % k
-    npk[:, :, 0] = 1
-    deg[:, :] = 1
-    recv[:, :] = 1  # from (r - i - 1) mod k, same step index
-    return AppTraffic("all_to_all", k, dst, npk, deg, recv, window=T)
-
-
-def all_reduce(k: int, vector_packets: int = 64) -> AppTraffic:
-    """Rabenseifner all-reduce: scatter-reduce + all-gather over a hypercube.
-
-    ``vector_packets`` is the reduced vector size in packets; step i of the
-    scatter phase exchanges vector/2^(i+1) packets with partner r XOR 2^i,
-    the gather phase mirrors it.  Synchronous (window=1): a step cannot
-    start before the previous exchange completed (the reduction needs the
-    partner's data).
-    """
-    m = int(math.log2(k))
-    if 2**m != k:
-        raise ValueError(f"Rabenseifner all-reduce requires power-of-two k, got {k}")
-    T = 2 * m
-    dst, npk, deg, recv = _empty(k, T, 1)
-    r = np.arange(k)
-    sizes = []
-    for i in range(m):  # scatter-reduce: halving
-        sizes.append(max(1, vector_packets >> (i + 1)))
-    for i in range(m):  # all-gather: doubling (mirror)
-        sizes.append(max(1, vector_packets >> (m - i)))
-    for t in range(T):
-        i = t if t < m else (2 * m - 1 - t)
-        partner = r ^ (1 << i)
-        dst[:, t, 0] = partner
-        npk[:, t, 0] = sizes[t]
-        deg[:, t] = 1
-        recv[:, t] = sizes[t]
-    return AppTraffic("all_reduce", k, dst, npk, deg, recv, window=1)
-
-
-def _grid_shape(k: int) -> tuple[int, int]:
-    gy = 2 ** (int(math.log2(k)) // 2)
-    gx = k // gy
-    if gy * gx != k:
-        raise ValueError(f"stencil needs k expressible as a 2^a x 2^b grid, got {k}")
-    return gy, gx
-
-
-def stencil(k: int, neighborhood: str = "von_neumann", rounds: int | None = None) -> AppTraffic:
-    """2D periodic stencil; each round exchanges 1 packet with each neighbor."""
-    gy, gx = _grid_shape(k)
-    r = np.arange(k)
-    y, x = r // gx, r % gx
-    if neighborhood == "von_neumann":
-        offs = [(-1, 0), (1, 0), (0, -1), (0, 1)]
-    elif neighborhood == "moore":
-        offs = [
-            (-1, -1), (-1, 0), (-1, 1), (0, -1), (0, 1), (1, -1), (1, 0), (1, 1),
-        ]
-    else:
-        raise ValueError(f"unknown neighborhood {neighborhood!r}")
-    if rounds is None:
-        rounds = max(1, 64 // len(offs))
-    maxd = len(offs)
-    dst, npk, deg, recv = _empty(k, rounds, maxd)
-    for d, (dy, dx) in enumerate(offs):
-        ny, nx = (y + dy) % gy, (x + dx) % gx
-        dst[:, :, d] = (ny * gx + nx)[:, None]
-        npk[:, :, d] = 1
-    deg[:, :] = maxd
-    recv[:, :] = maxd
-    name = f"stencil_{neighborhood}"
-    return AppTraffic(name, k, dst, npk, deg, recv, window=1)
-
-
-def random_involution(k: int, packets: int = 63, seed: int = 0) -> AppTraffic:
-    """Random perfect matching; paired ranks exchange ``packets`` packets."""
-    if k % 2:
-        raise ValueError("random involution requires even k")
-    rng = np.random.default_rng(seed)
-    order = rng.permutation(k)
-    partner = np.empty(k, dtype=np.int64)
-    partner[order[0::2]] = order[1::2]
-    partner[order[1::2]] = order[0::2]
-    dst, npk, deg, recv = _empty(k, packets, 1)
-    dst[:, :, 0] = partner[:, None]
-    npk[:, :, 0] = 1
-    deg[:, :] = 1
-    return AppTraffic("random_involution", k, dst, npk, deg, recv, window=packets)
-
-
-KERNELS = {
-    "all_to_all": all_to_all,
-    "all_reduce": all_reduce,
-    "stencil_von_neumann": lambda k: stencil(k, "von_neumann"),
-    "stencil_moore": lambda k: stencil(k, "moore"),
-    "random_involution": random_involution,
-}
-
-STATIC_PATTERNS = {
-    "uniform": uniform,
-    "random_permutation": random_permutation,
-    "random_switch_permutation": None,  # needs group size; built in compose
-}
-
-
-# --------------------------------------------------------------------------
-# Machine-level composition
-# --------------------------------------------------------------------------
-@dataclasses.dataclass
-class Workload:
-    """A complete machine workload: merged step tables + placement maps.
-
-    Global rank space concatenates all application ranks (targets first,
-    background last).  Background ranks are *infinite* sources: they inject
-    a fixed-rate stream and never complete; completion (makespan) is
-    measured over target ranks only.
-    """
-
-    topo: HyperX
-    R: int
-    T: int
-    maxd: int
-    rank_ep: np.ndarray      # (R,) endpoint id per rank
-    pool: np.ndarray         # (R,) VC pool per rank
-    infinite: np.ndarray     # (R,) bool — background sources
-    sends_dst: np.ndarray    # (R, T, MAXD) GLOBAL rank ids, -1 pad
-    npkts: np.ndarray
-    deg: np.ndarray
-    recv_need: np.ndarray
-    total_sends: np.ndarray  # (R, T)
-    sampled: np.ndarray
-    lo: np.ndarray           # GLOBAL rank space
-    hi: np.ndarray
-    window: np.ndarray       # (R,) per-rank window
-    start: np.ndarray        # (R,) injection start time (warmup gating)
-    num_pools: int
-    names: list[str]
-    # (S, q*n) bool, True = healthy directed link; None = all healthy.
-    # See repro.route.faults for mask constructors and apply_faults().
-    link_ok: np.ndarray | None = None
-
-    @property
-    def target_ranks(self) -> np.ndarray:
-        return np.flatnonzero(~self.infinite)
-
-    @property
-    def target_packets(self) -> int:
-        return int(self.npkts[~self.infinite].sum())
-
-
-def compose_workload(
-    topo: HyperX,
-    apps: Sequence[tuple[AppTraffic, Partition]],
-    background: Sequence[tuple[AppTraffic, Partition]] = (),
-    fabric_partitioning: str = "shared",
-    warmup: int = 0,
-    link_ok: np.ndarray | None = None,
-) -> Workload:
-    """Merge applications (+ background noise) into one machine workload.
-
-    fabric_partitioning:
-      * 'shared'    — every partition shares VC pool 0 (baseline, 4 VCs);
-      * 'background'— targets pool 0, background pool 1 (Figs. 11-12);
-      * 'per_app'   — one pool per application (full fabric partitioning).
-
-    ``warmup``: target apps start injecting only at this time, letting the
-    (infinite-rate) background reach steady state first; the simulator
-    reports makespan relative to the warmup point.
-
-    ``link_ok``: optional (S, q*n) link-fault mask (True = healthy); see
-    :mod:`repro.route.faults`.  Travels with the workload into the
-    engine's device tables, so fault scenarios batch like any other axis.
-    """
-    all_jobs = list(apps) + list(background)
-    n_bg = len(background)
-    R = sum(app.k for app, _ in all_jobs)
-    T = max(app.T for app, _ in all_jobs)
-    maxd = max(app.maxd for app, _ in all_jobs)
-
-    rank_ep = np.empty(R, dtype=np.int64)
-    pool = np.zeros(R, dtype=np.int64)
-    infinite = np.zeros(R, dtype=bool)
-    window = np.ones(R, dtype=np.int64)
-    start = np.zeros(R, dtype=np.int64)
-    sends_dst = np.full((R, T, maxd), -1, dtype=np.int64)
-    npkts = np.zeros((R, T, maxd), dtype=np.int64)
-    deg = np.zeros((R, T), dtype=np.int64)
-    recv_need = np.zeros((R, T), dtype=np.int64)
-    sampled = np.zeros((R, T, maxd), dtype=bool)
-    lo = np.zeros((R, T, maxd), dtype=np.int64)
-    hi = np.zeros((R, T, maxd), dtype=np.int64)
-
-    # endpoint disjointness guard: each endpoint hosts at most one rank
-    used = np.concatenate([p.endpoints[: a.k] for a, p in all_jobs])
-    if len(np.unique(used)) != len(used):
-        uniq, cnt = np.unique(used, return_counts=True)
-        raise ValueError(
-            f"workload maps {int((cnt > 1).sum())} endpoints to multiple ranks "
-            f"(e.g. {uniq[cnt > 1][:8].tolist()}); partitions must be disjoint"
-        )
-
-    off = 0
-    names = []
-    for j, (app, part) in enumerate(all_jobs):
-        k, t, d = app.k, app.T, app.maxd
-        if len(part.endpoints) < k:
-            raise ValueError(
-                f"partition has {len(part.endpoints)} endpoints < {k} ranks"
-            )
-        is_bg = j >= len(apps)
-        sl = slice(off, off + k)
-        rank_ep[sl] = part.endpoints[:k]
-        infinite[sl] = is_bg
-        window[sl] = app.window
-        start[sl] = 0 if is_bg else warmup
-        if fabric_partitioning == "shared":
-            pool[sl] = 0
-        elif fabric_partitioning == "background":
-            pool[sl] = 1 if is_bg else 0
-        elif fabric_partitioning == "per_app":
-            pool[sl] = j
-        else:
-            raise ValueError(f"unknown fabric_partitioning {fabric_partitioning!r}")
-        # shift destinations into the global rank space
-        dstj = app.sends_dst.copy()
-        dstj[dstj >= 0] += off
-        sends_dst[sl, :t, :d] = dstj
-        npkts[sl, :t, :d] = app.npkts
-        deg[sl, :t] = app.deg
-        recv_need[sl, :t] = app.recv_need
-        sampled[sl, :t, :d] = app.sampled
-        lo[sl, :t, :d] = app.lo + off
-        hi[sl, :t, :d] = app.hi + off
-        names.append(("bg:" if is_bg else "") + app.name)
-        off += k
-
-    total_sends = npkts.sum(axis=2)
-    num_pools = int(pool.max()) + 1
-    return Workload(
-        topo=topo, R=R, T=T, maxd=maxd, rank_ep=rank_ep, pool=pool,
-        infinite=infinite, sends_dst=sends_dst, npkts=npkts, deg=deg,
-        recv_need=recv_need, total_sends=total_sends, sampled=sampled,
-        lo=lo, hi=hi, window=window, start=start, num_pools=num_pools,
-        names=names,
-        link_ok=None if link_ok is None else np.asarray(link_ok, dtype=bool),
-    )
-
-
-def background_noise(
-    topo: HyperX,
-    free_endpoints: np.ndarray,
-    packets: int = 1,
-    seed: int = 1234,
-) -> tuple[AppTraffic, Partition]:
-    """Random-permutation background over all currently free endpoints.
-
-    The traffic is *infinite-rate* in the simulator (the ``infinite`` flag in
-    the Workload makes the step table loop), so ``packets`` only shapes the
-    table; 1 is enough.
-    """
-    k = len(free_endpoints)
-    app = random_permutation(k, packets=max(1, packets), seed=seed)
-    part = Partition(
-        strategy="background",
-        topo=topo,
-        job_id=-1,
-        size=k,
-        endpoints=np.asarray(free_endpoints, dtype=np.int64),
-        switches=np.unique(np.asarray(free_endpoints) // topo.concentration),
-    )
-    return app, part
+from repro.traffic.base import (  # noqa: F401
+    AppTraffic,
+    TrafficPattern,
+    available_patterns,
+    build_phases,
+    concat_phases,
+    get_pattern,
+    register_pattern,
+)
+from repro.traffic.base import empty_tables as _empty  # noqa: F401
+from repro.traffic.base import grid_shape as _grid_shape  # noqa: F401
+from repro.traffic.patterns import (  # noqa: F401
+    KERNELS,
+    STATIC_PATTERNS,
+    all_reduce,
+    all_to_all,
+    incast,
+    random_involution,
+    random_permutation,
+    random_switch_permutation,
+    recursive_doubling,
+    ring_allreduce,
+    shuffle,
+    stencil,
+    stencil_3d,
+    tornado,
+    transpose,
+    uniform,
+)
+from repro.traffic.workload import (  # noqa: F401
+    Workload,
+    background_noise,
+    compose_workload,
+)

@@ -19,28 +19,20 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.core import traffic as tr
 from repro.core.allocation import Partition
 from repro.core.engine import get_engine
 from repro.core.hyperx import HyperX
 from repro.fabric.placement import HyperXPlacement
+from repro.traffic import AppSpec, PhaseSpec, ScenarioSpec, build_workload
+from repro.traffic.workload import Workload
 
-
-def _ring_allreduce_app(k: int, packets_per_step: int = 4) -> tr.AppTraffic:
-    """Ring reduce-scatter + all-gather: 2(k-1) steps of neighbour sends."""
-    T = 2 * (k - 1)
-    dst, npk, deg, recv = tr._empty(k, T, 1)
-    r = np.arange(k)
-    for t in range(T):
-        dst[:, t, 0] = (r + 1) % k
-        npk[:, t, 0] = packets_per_step
-        deg[:, t] = 1
-        recv[:, t] = packets_per_step
-    return tr.AppTraffic("ring_allreduce", k, dst, npk, deg, recv, window=1)
-
-
-def _alltoall_app(k: int) -> tr.AppTraffic:
-    return tr.all_to_all(k)
+# registry patterns expressing each mesh-axis collective (the former
+# private _ring_allreduce_app/_alltoall_app builders, deduplicated onto
+# repro.traffic.patterns — parity-pinned in tests/test_traffic_patterns.py)
+COLLECTIVE_PHASES = {
+    "all_reduce": PhaseSpec("ring_allreduce", {"packets_per_step": 4}),
+    "all_to_all": PhaseSpec("all_to_all"),
+}
 
 
 def _axis_groups(placement: HyperXPlacement, axis: str,
@@ -66,17 +58,19 @@ def axis_collective_workload(
     axis: str,
     kind: str = "all_reduce",
     num_groups: int | None = None,
-) -> tr.Workload:
+) -> Workload:
     """Express ``kind`` over (a subset of) the axis groups as one workload.
 
     All groups run simultaneously — exactly how a mesh collective executes —
     so inter-group link contention is captured, which is what
-    distinguishes allocation strategies (the paper's Lesson 2/3).
+    distinguishes allocation strategies (the paper's Lesson 2/3).  The
+    collective itself is a registry pattern (``COLLECTIVE_PHASES``), so
+    any registered kernel can be dropped in per axis.
     """
     topo: HyperX = placement.topo
     groups = _axis_groups(placement, axis, num_groups)
     k = groups.shape[1]
-    app_fn = {"all_reduce": _ring_allreduce_app, "all_to_all": _alltoall_app}[kind]
+    phase = COLLECTIVE_PHASES[kind]
     apps = []
     for g in groups:
         part = Partition(
@@ -84,8 +78,8 @@ def axis_collective_workload(
             endpoints=np.asarray(g, dtype=np.int64),
             switches=np.unique(np.asarray(g) // topo.concentration),
         )
-        apps.append((app_fn(k), part))
-    return tr.compose_workload(topo, apps)
+        apps.append(AppSpec(phases=phase, placement=part, ranks=k))
+    return build_workload(topo, ScenarioSpec(apps=tuple(apps)))
 
 
 def simulate_axis_collective(

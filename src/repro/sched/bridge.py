@@ -1,8 +1,9 @@
 """Interference bridge: co-resident snapshots through the batched SimEngine.
 
 A :class:`~repro.sched.scheduler.Snapshot` freezes the set of jobs sharing
-the machine at one scheduling event.  This module lowers snapshots to
-:class:`~repro.core.traffic.Workload`s (each job runs its communication
+the machine at one scheduling event.  This module lowers snapshots through
+the declarative scenario layer (:mod:`repro.traffic.scenario`) to
+:class:`~repro.traffic.workload.Workload`s (each job runs its registry
 kernel on its *actually placed* partition) and executes the whole
 strategy x snapshot x seed grid through ``SimEngine.run_batch_seeds`` — the
 engine groups workloads by shape bucket internally, so the entire grid
@@ -26,17 +27,13 @@ from typing import Mapping, Sequence
 
 import numpy as np
 
-from repro.core import traffic as tr
 from repro.core.engine import SimResult, get_engine
 from repro.core.engine.workload_tables import shape_bucket
 from repro.core.hyperx import HyperX
-from repro.core.traffic import Workload
 from repro.route import apply_faults, faults_from_endpoints
 from repro.sched.scheduler import Snapshot
-
-_KERNELS = dict(tr.KERNELS)
-_KERNELS["uniform"] = tr.uniform
-_KERNELS["random_permutation"] = tr.random_permutation
+from repro.traffic import AppSpec, ScenarioSpec, build_workload, get_pattern
+from repro.traffic.workload import Workload
 
 
 def snapshot_workload(
@@ -47,23 +44,25 @@ def snapshot_workload(
 ) -> Workload:
     """Lower one snapshot: every co-resident job's kernel on its partition.
 
-    ``churn_faults`` additionally lowers the snapshot's failed endpoints
-    (the scheduler's churn, frozen at snapshot time) into a link-fault
-    mask the routing policies must steer around.
+    Job kernels resolve through the traffic-pattern registry, so any
+    registered pattern name (including phased ``"a+b"`` compositions) is
+    a valid job kernel.  ``churn_faults`` additionally lowers the
+    snapshot's failed endpoints (the scheduler's churn, frozen at
+    snapshot time) into a link-fault mask the routing policies must
+    steer around.
     """
     apps = []
     for job_id, kernel, part in snap.jobs:
-        try:
-            builder = _KERNELS[kernel]
-        except KeyError:
-            raise KeyError(
-                f"job {job_id}: unknown kernel {kernel!r}; "
-                f"available: {sorted(_KERNELS)}"
-            ) from None
-        apps.append((builder(part.size), part))
-    wl = tr.compose_workload(
-        topo, apps, fabric_partitioning=fabric_partitioning
-    )
+        phases = kernel.split("+")
+        for name in phases:
+            try:
+                get_pattern(name)
+            except ValueError as e:
+                raise KeyError(f"job {job_id}: {e}") from None
+        apps.append(AppSpec(phases=tuple(phases), placement=part))
+    wl = build_workload(topo, ScenarioSpec(
+        apps=tuple(apps), fabric_partitioning=fabric_partitioning,
+    ))
     if churn_faults and snap.failed_endpoints:
         wl = apply_faults(
             wl, faults_from_endpoints(topo, snap.failed_endpoints)

@@ -1,0 +1,104 @@
+"""Pluggable traffic subsystem (the workload-side mirror of ``route/``).
+
+Public surface:
+
+  * :class:`TrafficPattern` + :func:`get_pattern` / :func:`register_pattern`
+    / :func:`available_patterns` — the pattern registry (unknown names
+    raise with the registered list);
+  * :mod:`repro.traffic.patterns` — the shipped patterns: the paper's
+    Sec. 6.1 set (migrated bit-identically from the seed builders),
+    ``ring_allreduce`` (migrated from the collective simulator), and the
+    adversarial/collective additions ``transpose``, ``shuffle``,
+    ``tornado``, ``incast``, ``recursive_doubling``, ``stencil_3d``;
+  * :class:`AppTraffic` / :func:`concat_phases` / :func:`build_phases` —
+    step tables and phased (multi-kernel) composition;
+  * :class:`Workload` / :func:`compose_workload` /
+    :func:`background_noise` — machine-level merging;
+  * :class:`ScenarioSpec` (+ :class:`AppSpec`, :class:`PhaseSpec`,
+    :class:`BackgroundSpec`) and :func:`build_workload` — the declarative
+    pattern x placement x background x phases layer every consumer
+    (sched bridge, collective sim, benchmarks) constructs through.
+
+Patterns build plain numpy step tables; the engine pads them into
+power-of-two ``WorkloadTables`` shape buckets, so pattern x strategy x
+seed grids vmap as one compile + one device call per bucket
+(trace-counter-pinned in ``tests/test_traffic_patterns.py``).
+"""
+
+from repro.traffic.base import (
+    AppTraffic,
+    TrafficPattern,
+    available_patterns,
+    build_phases,
+    concat_phases,
+    empty_tables,
+    get_pattern,
+    grid_shape,
+    register_pattern,
+)
+from repro.traffic import patterns
+from repro.traffic.patterns import (
+    all_reduce,
+    all_to_all,
+    incast,
+    random_involution,
+    random_permutation,
+    random_switch_permutation,
+    recursive_doubling,
+    ring_allreduce,
+    shuffle,
+    stencil,
+    stencil_3d,
+    tornado,
+    transpose,
+    uniform,
+)
+from repro.traffic.workload import (
+    Workload,
+    background_noise,
+    compose_workload,
+)
+from repro.traffic.scenario import (
+    AppSpec,
+    BackgroundSpec,
+    PhaseSpec,
+    ScenarioSpec,
+    build_app,
+    build_workload,
+)
+
+__all__ = [
+    "AppSpec",
+    "AppTraffic",
+    "BackgroundSpec",
+    "PhaseSpec",
+    "ScenarioSpec",
+    "TrafficPattern",
+    "Workload",
+    "all_reduce",
+    "all_to_all",
+    "available_patterns",
+    "background_noise",
+    "build_app",
+    "build_phases",
+    "build_workload",
+    "compose_workload",
+    "concat_phases",
+    "empty_tables",
+    "get_pattern",
+    "grid_shape",
+    "incast",
+    "patterns",
+    "random_involution",
+    "random_permutation",
+    "random_switch_permutation",
+    "recursive_doubling",
+    "register_pattern",
+    "ring_allreduce",
+    "shuffle",
+    "stencil",
+    "stencil_3d",
+    "tornado",
+    "transpose",
+    "uniform",
+]

@@ -1,0 +1,267 @@
+"""Traffic-pattern contract + registry (the workload-side mirror of
+:mod:`repro.route`).
+
+A :class:`TrafficPattern` wraps one *builder*: a function producing the
+step-table form the cycle simulator executes directly —
+
+  * each rank walks an ordered list of steps; a step sends ``npkts``
+    packets to each of ``deg`` destinations and (optionally) must receive
+    ``recv_need`` packets tagged with the same step index before the step
+    is complete;
+  * a sliding ``window`` limits how many incomplete steps a rank may have
+    outstanding (1 = fully synchronous, T = fully asynchronous);
+  * destinations are either fixed rank ids or sampled uniformly from a
+    rank range each time a packet is injected (uniform / switch-
+    permutation traffic).
+
+Patterns register by name (:func:`register_pattern`) and are resolved
+through :func:`get_pattern` — unknown names raise with the registered
+list, exactly like routing's ``get_policy``.  Every pattern builds a
+plain :class:`AppTraffic`; nothing here touches the engine, so a new
+pattern is a ~30-line plugin: write a builder, register it, and it is
+reachable from the scenario layer, the sched bridge, the collective
+simulator and the benchmark grids.
+
+Phased applications (:func:`concat_phases`) concatenate several kernels
+into one ordered step table — e.g. stencil exchange rounds followed by an
+all-reduce, the canonical HPC iteration.  The phased table is a normal
+``AppTraffic``; downstream it pads into the engine's power-of-two
+``WorkloadTables`` shape buckets like any other app, so phased
+pattern x strategy x seed grids still vmap as one compile + one device
+call per bucket.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Mapping, Sequence
+
+import numpy as np
+
+
+# --------------------------------------------------------------------------
+# Per-application step tables (rank-local)
+# --------------------------------------------------------------------------
+@dataclasses.dataclass
+class AppTraffic:
+    """Step-table traffic of one application over ranks 0..k-1."""
+
+    name: str
+    k: int
+    sends_dst: np.ndarray  # (k, T, MAXD) destination rank, -1 pad
+    npkts: np.ndarray      # (k, T, MAXD) packets per destination
+    deg: np.ndarray        # (k, T) number of valid destinations
+    recv_need: np.ndarray  # (k, T) packets that must arrive before step done
+    window: int            # max outstanding incomplete steps
+    sampled: np.ndarray | None = None  # (k, T, MAXD) bool: sample dst?
+    lo: np.ndarray | None = None       # (k, T, MAXD) sample range lo
+    hi: np.ndarray | None = None       # (k, T, MAXD) sample range hi (excl)
+
+    @property
+    def T(self) -> int:
+        return self.sends_dst.shape[1]
+
+    @property
+    def maxd(self) -> int:
+        return self.sends_dst.shape[2]
+
+    @property
+    def total_packets(self) -> int:
+        # only valid destination slots count — padded slots carry -1
+        return int(self.npkts[self.sends_dst >= 0].sum())
+
+    def __post_init__(self):
+        if self.sampled is None:
+            self.sampled = np.zeros_like(self.sends_dst, dtype=bool)
+            self.lo = np.zeros_like(self.sends_dst)
+            self.hi = np.zeros_like(self.sends_dst)
+
+
+def empty_tables(k: int, T: int, maxd: int):
+    """Fresh (sends_dst, npkts, deg, recv_need) tables, all-pad."""
+    return (
+        np.full((k, T, maxd), -1, dtype=np.int64),
+        np.zeros((k, T, maxd), dtype=np.int64),
+        np.zeros((k, T), dtype=np.int64),
+        np.zeros((k, T), dtype=np.int64),
+    )
+
+
+def grid_shape(k: int, ndim: int = 2) -> tuple[int, ...]:
+    """Factor ``k`` into an ``ndim``-D near-square grid (powers of two
+    balanced across dims; any odd factor lands in the last dim).
+
+    2D keeps the historical (gy, gx) = (2^(b//2), k / gy) split so every
+    pre-existing stencil grid is unchanged; 3D peels 2^(b//3) first.
+    """
+    if ndim < 2:
+        raise ValueError(f"grid_shape needs ndim >= 2, got {ndim}")
+    dims: list[int] = []
+    rest = k
+    for i in range(ndim - 1, 0, -1):
+        g = 2 ** (int(math.log2(rest)) // (i + 1))
+        dims.append(g)
+        rest //= g
+    dims.append(rest)
+    if math.prod(dims) != k:
+        raise ValueError(
+            f"stencil needs k expressible as a {ndim}D power-of-two-ish "
+            f"grid, got {k}"
+        )
+    return tuple(dims)
+
+
+# --------------------------------------------------------------------------
+# Phased composition
+# --------------------------------------------------------------------------
+def concat_phases(
+    phases: Sequence[AppTraffic],
+    window: int | None = None,
+    name: str | None = None,
+) -> AppTraffic:
+    """Concatenate several kernels into one ordered phased step table.
+
+    All phases must span the same rank count ``k``.  Step tables stack
+    along the step axis (destination slots pad to the widest phase), so a
+    rank finishes phase ``i``'s steps before walking phase ``i+1``'s —
+    subject to the app's sliding window.
+
+    ``window`` defaults to the **minimum** over the phases: the engine
+    carries one window per rank, and the minimum is the only choice that
+    preserves every phase's internal ordering (a synchronous all-reduce
+    after an asynchronous stencil must not start before the exchange
+    completes).  Pass an explicit ``window`` to trade strictness for
+    overlap — e.g. ``window=2`` lets one step of the next phase overlap
+    the tail of the previous one.
+    """
+    if not phases:
+        raise ValueError("concat_phases needs at least one phase")
+    k = phases[0].k
+    if any(p.k != k for p in phases):
+        raise ValueError(
+            f"phases span different rank counts: {[p.k for p in phases]}"
+        )
+    if len(phases) == 1 and window is None and name is None:
+        return phases[0]
+    T = sum(p.T for p in phases)
+    maxd = max(p.maxd for p in phases)
+    dst, npk, deg, recv = empty_tables(k, T, maxd)
+    sampled = np.zeros((k, T, maxd), dtype=bool)
+    lo = np.zeros((k, T, maxd), dtype=np.int64)
+    hi = np.zeros((k, T, maxd), dtype=np.int64)
+    off = 0
+    for p in phases:
+        sl = slice(off, off + p.T)
+        dst[:, sl, : p.maxd] = p.sends_dst
+        npk[:, sl, : p.maxd] = p.npkts
+        deg[:, sl] = p.deg
+        recv[:, sl] = p.recv_need
+        sampled[:, sl, : p.maxd] = p.sampled
+        lo[:, sl, : p.maxd] = p.lo
+        hi[:, sl, : p.maxd] = p.hi
+        off += p.T
+    w = min(p.window for p in phases) if window is None else int(window)
+    return AppTraffic(
+        name or "+".join(p.name for p in phases),
+        k, dst, npk, deg, recv, w, sampled, lo, hi,
+    )
+
+
+# --------------------------------------------------------------------------
+# Pattern contract + registry
+# --------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class TrafficPattern:
+    """One named, parameterized traffic builder.
+
+    Attributes:
+      name: registry key (the scenario layer's ``pattern=`` string).
+      builder: ``builder(k, **params) -> AppTraffic`` over ranks 0..k-1.
+      kind: coarse taxonomy — ``static`` (rate-style synthetic traffic),
+        ``adversarial`` (permutation/offset stressors), ``collective``
+        (communication kernels with recv synchronization), ``stencil``
+        (nearest-neighbour exchanges).
+      seeded: builder accepts a ``seed=`` kwarg; the scenario layer only
+        threads its derived seeds into seeded patterns, so unseeded
+        builders keep exact historical outputs.
+    """
+
+    name: str
+    builder: Callable[..., AppTraffic]
+    kind: str = "static"
+    seeded: bool = False
+    description: str = ""
+
+    def build(
+        self,
+        k: int,
+        seed: int | None = None,
+        **params: Any,
+    ) -> AppTraffic:
+        """Build the pattern over ``k`` ranks.
+
+        ``seed`` is injected only for seeded patterns, and only when the
+        caller did not already fix ``seed`` in ``params``.
+        """
+        if self.seeded and seed is not None:
+            params.setdefault("seed", int(seed))
+        app = self.builder(k, **params)
+        if app.k != k:
+            raise ValueError(
+                f"pattern {self.name!r} built {app.k} ranks for k={k}"
+            )
+        return app
+
+
+_REGISTRY: dict[str, TrafficPattern] = {}
+
+
+def register_pattern(pattern: TrafficPattern) -> TrafficPattern:
+    """Add a pattern to the registry (returns it, decorator-style)."""
+    if pattern.name in _REGISTRY:
+        raise ValueError(f"traffic pattern {pattern.name!r} already registered")
+    _REGISTRY[pattern.name] = pattern
+    return pattern
+
+
+def available_patterns(kind: str | None = None) -> tuple[str, ...]:
+    """Registered pattern names, sorted; optionally filtered by ``kind``."""
+    return tuple(sorted(
+        name for name, p in _REGISTRY.items()
+        if kind is None or p.kind == kind
+    ))
+
+
+def get_pattern(name: str) -> TrafficPattern:
+    """Look a pattern up by name; unknown names list what IS registered."""
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown traffic pattern {name!r}; registered patterns: "
+            f"{', '.join(available_patterns()) or '(none)'}"
+        ) from None
+
+
+def build_phases(
+    phases: Sequence[tuple[str, Mapping[str, Any]] | str],
+    k: int,
+    seed: int | None = None,
+    window: int | None = None,
+) -> AppTraffic:
+    """Resolve an ordered phase list through the registry and concatenate.
+
+    Each phase is a pattern name or a ``(name, params)`` tuple; a single
+    phase with no window override returns the pattern's table unchanged
+    (bit-identical to calling the builder directly).
+    """
+    apps = []
+    for ph in phases:
+        name, params = (ph, {}) if isinstance(ph, str) else ph
+        params = dict(params)
+        use_seed = params.pop("seed", seed)  # explicit phase seed wins
+        apps.append(get_pattern(name).build(k, seed=use_seed, **params))
+    if len(apps) == 1 and window is None:
+        return apps[0]
+    return concat_phases(apps, window=window)

@@ -1,0 +1,429 @@
+"""The shipped traffic patterns (paper Section 6.1 + HyperX adversaries).
+
+Migrated bit-identically from the seed ``core/traffic.py`` (regression-
+pinned in ``tests/test_traffic_patterns.py``): static patterns (Sec.
+6.1.1) ``uniform``, ``random_permutation``, ``random_switch_permutation``;
+application kernels (Sec. 6.1.2) ``all_to_all``, ``all_reduce``
+(Rabenseifner), ``stencil_von_neumann`` / ``stencil_moore``,
+``random_involution``; plus ``ring_allreduce``, migrated from
+``fabric/collective_sim.py``'s former private builder.
+
+New patterns (Multi-Plane HyperX, arXiv 2604.23519, stresses exactly this
+mix of AI-collective and adversarial traffic):
+
+  * ``transpose`` — matrix-transpose permutation over the rank grid, the
+    classic bisection adversary (diagonal ranks idle);
+  * ``shuffle``   — perfect-shuffle (bit-rotation) permutation, the FFT /
+    butterfly exchange adversary;
+  * ``tornado``   — half-machine offset in every grid dimension, the
+    classic HyperX/torus adversary that defeats minimal routing;
+  * ``incast``    — many-to-one convergence onto a few target ranks (the
+    parameter-server / reduction-root hotspot);
+  * ``recursive_doubling`` — full-vector butterfly all-reduce, the
+    latency-optimal contrast to Rabenseifner's halving/doubling;
+  * ``stencil_3d`` — 3D periodic von-Neumann stencil (6 neighbours) over
+    a ``grid_shape(k, ndim=3)`` factorization.
+"""
+
+from __future__ import annotations
+
+import math
+
+import numpy as np
+
+from repro.traffic.base import (
+    AppTraffic,
+    TrafficPattern,
+    empty_tables as _empty,
+    grid_shape,
+    register_pattern,
+)
+
+
+def _grid_shape(k: int) -> tuple[int, int]:
+    return grid_shape(k, ndim=2)  # type: ignore[return-value]
+
+
+# ----------------------------------------------------------- static patterns
+def uniform(k: int, packets: int = 64) -> AppTraffic:
+    """Uniform random: every packet to a uniform destination in the app."""
+    dst, npk, deg, recv = _empty(k, packets, 1)
+    npk[:, :, 0] = 1
+    deg[:, :] = 1
+    sampled = np.ones((k, packets, 1), dtype=bool)
+    lo = np.zeros((k, packets, 1), dtype=np.int64)
+    hi = np.full((k, packets, 1), k, dtype=np.int64)
+    dst[:, :, 0] = 0  # ignored when sampled
+    return AppTraffic("uniform", k, dst, npk, deg, recv, packets, sampled, lo, hi)
+
+
+def random_permutation(k: int, packets: int = 64, seed: int = 0) -> AppTraffic:
+    """Each rank sends every packet to one fixed random unique destination."""
+    rng = np.random.default_rng(seed)
+    perm = rng.permutation(k)
+    # avoid self-sends: re-draw derangement-ish (swap fixed points)
+    fixed = np.flatnonzero(perm == np.arange(k))
+    for i in fixed:
+        j = (i + 1) % k
+        perm[i], perm[j] = perm[j], perm[i]
+    dst, npk, deg, recv = _empty(k, packets, 1)
+    dst[:, :, 0] = perm[:, None]
+    npk[:, :, 0] = 1
+    deg[:, :] = 1
+    return AppTraffic("random_permutation", k, dst, npk, deg, recv, packets)
+
+
+def random_switch_permutation(
+    k: int, group: int = 8, packets: int = 64, seed: int = 0
+) -> AppTraffic:
+    """Groups of ``group`` ranks send only to one other (permuted) group.
+
+    Adversarial when the allocation maps rank groups onto single switches
+    (locality-aware allocations + linear task mapping): all traffic of a
+    switch targets exactly one other switch.
+    """
+    if k % group:
+        raise ValueError(f"k={k} not a multiple of group={group}")
+    g = k // group
+    rng = np.random.default_rng(seed)
+    gperm = rng.permutation(g)
+    fixed = np.flatnonzero(gperm == np.arange(g))
+    for i in fixed:
+        j = (i + 1) % g
+        gperm[i], gperm[j] = gperm[j], gperm[i]
+    dst, npk, deg, recv = _empty(k, packets, 1)
+    npk[:, :, 0] = 1
+    deg[:, :] = 1
+    sampled = np.ones((k, packets, 1), dtype=bool)
+    my_group = np.arange(k) // group
+    lo = (gperm[my_group] * group)[:, None, None] * np.ones(
+        (1, packets, 1), dtype=np.int64
+    )
+    hi = lo + group
+    return AppTraffic(
+        "random_switch_permutation", k, dst, npk, deg, recv, packets, sampled, lo, hi
+    )
+
+
+# ------------------------------------------------------- application kernels
+def all_to_all(k: int) -> AppTraffic:
+    """MPI All-to-All: k-1 asynchronous steps; step i sends to (r+i+1) mod k."""
+    T = k - 1
+    dst, npk, deg, recv = _empty(k, T, 1)
+    r = np.arange(k)[:, None]
+    i = np.arange(T)[None, :]
+    dst[:, :, 0] = (r + i + 1) % k
+    npk[:, :, 0] = 1
+    deg[:, :] = 1
+    recv[:, :] = 1  # from (r - i - 1) mod k, same step index
+    return AppTraffic("all_to_all", k, dst, npk, deg, recv, window=T)
+
+
+def all_reduce(k: int, vector_packets: int = 64) -> AppTraffic:
+    """Rabenseifner all-reduce: scatter-reduce + all-gather over a hypercube.
+
+    ``vector_packets`` is the reduced vector size in packets; step i of the
+    scatter phase exchanges vector/2^(i+1) packets with partner r XOR 2^i,
+    the gather phase mirrors it.  Synchronous (window=1): a step cannot
+    start before the previous exchange completed (the reduction needs the
+    partner's data).
+    """
+    m = int(math.log2(k))
+    if 2**m != k:
+        raise ValueError(f"Rabenseifner all-reduce requires power-of-two k, got {k}")
+    T = 2 * m
+    dst, npk, deg, recv = _empty(k, T, 1)
+    r = np.arange(k)
+    sizes = []
+    for i in range(m):  # scatter-reduce: halving
+        sizes.append(max(1, vector_packets >> (i + 1)))
+    for i in range(m):  # all-gather: doubling (mirror)
+        sizes.append(max(1, vector_packets >> (m - i)))
+    for t in range(T):
+        i = t if t < m else (2 * m - 1 - t)
+        partner = r ^ (1 << i)
+        dst[:, t, 0] = partner
+        npk[:, t, 0] = sizes[t]
+        deg[:, t] = 1
+        recv[:, t] = sizes[t]
+    return AppTraffic("all_reduce", k, dst, npk, deg, recv, window=1)
+
+
+def stencil(k: int, neighborhood: str = "von_neumann", rounds: int | None = None) -> AppTraffic:
+    """2D periodic stencil; each round exchanges 1 packet with each neighbor."""
+    gy, gx = _grid_shape(k)
+    r = np.arange(k)
+    y, x = r // gx, r % gx
+    if neighborhood == "von_neumann":
+        offs = [(-1, 0), (1, 0), (0, -1), (0, 1)]
+    elif neighborhood == "moore":
+        offs = [
+            (-1, -1), (-1, 0), (-1, 1), (0, -1), (0, 1), (1, -1), (1, 0), (1, 1),
+        ]
+    else:
+        raise ValueError(f"unknown neighborhood {neighborhood!r}")
+    if rounds is None:
+        rounds = max(1, 64 // len(offs))
+    maxd = len(offs)
+    dst, npk, deg, recv = _empty(k, rounds, maxd)
+    for d, (dy, dx) in enumerate(offs):
+        ny, nx = (y + dy) % gy, (x + dx) % gx
+        dst[:, :, d] = (ny * gx + nx)[:, None]
+        npk[:, :, d] = 1
+    deg[:, :] = maxd
+    recv[:, :] = maxd
+    name = f"stencil_{neighborhood}"
+    return AppTraffic(name, k, dst, npk, deg, recv, window=1)
+
+
+def random_involution(k: int, packets: int = 63, seed: int = 0) -> AppTraffic:
+    """Random perfect matching; paired ranks exchange ``packets`` packets."""
+    if k % 2:
+        raise ValueError("random involution requires even k")
+    rng = np.random.default_rng(seed)
+    order = rng.permutation(k)
+    partner = np.empty(k, dtype=np.int64)
+    partner[order[0::2]] = order[1::2]
+    partner[order[1::2]] = order[0::2]
+    dst, npk, deg, recv = _empty(k, packets, 1)
+    dst[:, :, 0] = partner[:, None]
+    npk[:, :, 0] = 1
+    deg[:, :] = 1
+    return AppTraffic("random_involution", k, dst, npk, deg, recv, window=packets)
+
+
+def ring_allreduce(k: int, packets_per_step: int = 4) -> AppTraffic:
+    """Ring reduce-scatter + all-gather: 2(k-1) steps of neighbour sends."""
+    T = 2 * (k - 1)
+    dst, npk, deg, recv = _empty(k, T, 1)
+    r = np.arange(k)
+    for t in range(T):
+        dst[:, t, 0] = (r + 1) % k
+        npk[:, t, 0] = packets_per_step
+        deg[:, t] = 1
+        recv[:, t] = packets_per_step
+    return AppTraffic("ring_allreduce", k, dst, npk, deg, recv, window=1)
+
+
+# ----------------------------------------------------- adversarial patterns
+def transpose(k: int, packets: int = 64) -> AppTraffic:
+    """Matrix-transpose permutation: rank (y, x) sends to rank (x, y).
+
+    The destination grid is the source grid transposed (gx rows of gy),
+    so the map is a bijection for any ``grid_shape`` factorization and an
+    involution on square grids.  Diagonal ranks (y == x on square grids)
+    would self-send and instead stay idle — the classic bisection-load
+    adversary.
+    """
+    gy, gx = _grid_shape(k)
+    r = np.arange(k)
+    y, x = r // gx, r % gx
+    target = x * gy + y  # (x, y) in the transposed gx-row-major grid
+    send = target != r
+    dst, npk, deg, recv = _empty(k, packets, 1)
+    dst[send, :, 0] = target[send, None]
+    npk[send, :, 0] = 1
+    deg[send, :] = 1
+    return AppTraffic("transpose", k, dst, npk, deg, recv, window=packets)
+
+
+def shuffle(k: int, packets: int = 64) -> AppTraffic:
+    """Perfect-shuffle permutation: destination = bit-rotate-left(rank).
+
+    The FFT/butterfly exchange adversary; requires power-of-two k.  The
+    all-zeros and all-ones ranks are fixed points and stay idle.
+    """
+    b = int(math.log2(k))
+    if 2**b != k:
+        raise ValueError(f"perfect shuffle requires power-of-two k, got {k}")
+    r = np.arange(k)
+    target = ((r << 1) | (r >> (b - 1))) & (k - 1)
+    send = target != r
+    dst, npk, deg, recv = _empty(k, packets, 1)
+    dst[send, :, 0] = target[send, None]
+    npk[send, :, 0] = 1
+    deg[send, :] = 1
+    return AppTraffic("shuffle", k, dst, npk, deg, recv, window=packets)
+
+
+def tornado(k: int, packets: int = 64, offsets: tuple[int, ...] | None = None) -> AppTraffic:
+    """Tornado: a half-grid offset in every rank-grid dimension.
+
+    The classic HyperX/torus adversary — every rank in a row targets the
+    same distant row/column offset, so minimal routing piles the whole
+    load onto one port per dimension while adaptive/Valiant policies
+    spread it.  ``offsets`` overrides the per-dimension shift (default
+    ``g // 2`` per dimension).
+    """
+    gy, gx = _grid_shape(k)
+    if offsets is None:
+        offsets = (gy // 2, gx // 2)
+    oy, ox = offsets
+    if (oy % gy, ox % gx) == (0, 0):
+        raise ValueError(f"tornado offsets {offsets} are a self-map on {gy}x{gx}")
+    r = np.arange(k)
+    y, x = r // gx, r % gx
+    target = ((y + oy) % gy) * gx + (x + ox) % gx
+    dst, npk, deg, recv = _empty(k, packets, 1)
+    dst[:, :, 0] = target[:, None]
+    npk[:, :, 0] = 1
+    deg[:, :] = 1
+    return AppTraffic("tornado", k, dst, npk, deg, recv, window=packets)
+
+
+def incast(k: int, packets: int = 16, targets: int = 1) -> AppTraffic:
+    """Many-to-one: every source rank streams to one of ``targets`` sinks.
+
+    Source rank r (r >= targets) sends ``packets`` packets — one per step
+    — to sink ``r % targets``; sinks send nothing and complete a step
+    only once every source's packet for that step arrived.  The
+    parameter-server / reduction-root hotspot: ejection bandwidth at the
+    sinks, not bisection, is the bottleneck.
+    """
+    if not 0 < targets < k:
+        raise ValueError(f"incast needs 0 < targets < k, got targets={targets}")
+    dst, npk, deg, recv = _empty(k, packets, 1)
+    r = np.arange(k)
+    src = r >= targets
+    dst[src, :, 0] = (r[src] % targets)[:, None]
+    npk[src, :, 0] = 1
+    deg[src, :] = 1
+    fan_in = np.bincount(r[src] % targets, minlength=targets)
+    recv[:targets, :] = fan_in[:, None]
+    return AppTraffic("incast", k, dst, npk, deg, recv, window=packets)
+
+
+def recursive_doubling(k: int, vector_packets: int = 16) -> AppTraffic:
+    """Recursive-doubling all-reduce: log2(k) full-vector exchanges.
+
+    Step i exchanges the *whole* vector with partner r XOR 2^i — half the
+    steps of Rabenseifner's halving/doubling but log2(k)x the traffic;
+    the latency-optimal variant small reductions actually use.
+    Synchronous (window=1): each exchange needs the partner's reduced
+    vector.
+    """
+    m = int(math.log2(k))
+    if 2**m != k:
+        raise ValueError(
+            f"recursive-doubling all-reduce requires power-of-two k, got {k}"
+        )
+    dst, npk, deg, recv = _empty(k, m, 1)
+    r = np.arange(k)
+    for t in range(m):
+        dst[:, t, 0] = r ^ (1 << t)
+        npk[:, t, 0] = vector_packets
+        deg[:, t] = 1
+        recv[:, t] = vector_packets
+    return AppTraffic("recursive_doubling", k, dst, npk, deg, recv, window=1)
+
+
+def stencil_3d(k: int, rounds: int | None = None) -> AppTraffic:
+    """3D periodic von-Neumann stencil: 6-neighbour exchange rounds.
+
+    Ranks factor into a ``grid_shape(k, ndim=3)`` torus; every dimension
+    must have at least 2 points (a size-1 dimension would make the +/-
+    neighbours self-sends).
+    """
+    gz, gy, gx = grid_shape(k, ndim=3)
+    if min(gz, gy, gx) < 2:
+        raise ValueError(
+            f"3D stencil needs every grid dim >= 2, got {gz}x{gy}x{gx} for k={k}"
+        )
+    r = np.arange(k)
+    z, y, x = r // (gy * gx), (r // gx) % gy, r % gx
+    offs = [(-1, 0, 0), (1, 0, 0), (0, -1, 0), (0, 1, 0), (0, 0, -1), (0, 0, 1)]
+    if rounds is None:
+        rounds = max(1, 64 // len(offs))
+    maxd = len(offs)
+    dst, npk, deg, recv = _empty(k, rounds, maxd)
+    for d, (dz, dy, dx) in enumerate(offs):
+        nz, ny, nx = (z + dz) % gz, (y + dy) % gy, (x + dx) % gx
+        dst[:, :, d] = (nz * gy * gx + ny * gx + nx)[:, None]
+        npk[:, :, d] = 1
+    deg[:, :] = maxd
+    recv[:, :] = maxd
+    return AppTraffic("stencil_3d", k, dst, npk, deg, recv, window=1)
+
+
+# --------------------------------------------------------------- registry
+UNIFORM = register_pattern(TrafficPattern(
+    "uniform", uniform, kind="static",
+    description="every packet to a uniform-random destination",
+))
+RANDOM_PERMUTATION = register_pattern(TrafficPattern(
+    "random_permutation", random_permutation, kind="static", seeded=True,
+    description="fixed random fixed-point-free permutation",
+))
+RANDOM_SWITCH_PERMUTATION = register_pattern(TrafficPattern(
+    "random_switch_permutation", random_switch_permutation,
+    kind="adversarial", seeded=True,
+    description="rank groups target one permuted group (switch adversary)",
+))
+ALL_TO_ALL = register_pattern(TrafficPattern(
+    "all_to_all", all_to_all, kind="collective",
+    description="MPI All-to-All, k-1 asynchronous shifted steps",
+))
+ALL_REDUCE = register_pattern(TrafficPattern(
+    "all_reduce", all_reduce, kind="collective",
+    description="Rabenseifner all-reduce (halving/doubling hypercube)",
+))
+STENCIL_VON_NEUMANN = register_pattern(TrafficPattern(
+    "stencil_von_neumann",
+    lambda k, rounds=None: stencil(k, "von_neumann", rounds),
+    kind="stencil",
+    description="2D periodic 4-neighbour exchange rounds",
+))
+STENCIL_MOORE = register_pattern(TrafficPattern(
+    "stencil_moore",
+    lambda k, rounds=None: stencil(k, "moore", rounds),
+    kind="stencil",
+    description="2D periodic 8-neighbour exchange rounds",
+))
+RANDOM_INVOLUTION = register_pattern(TrafficPattern(
+    "random_involution", random_involution, kind="static", seeded=True,
+    description="random perfect matching, paired ranks exchange",
+))
+RING_ALLREDUCE = register_pattern(TrafficPattern(
+    "ring_allreduce", ring_allreduce, kind="collective",
+    description="ring reduce-scatter + all-gather, 2(k-1) neighbour steps",
+))
+TRANSPOSE = register_pattern(TrafficPattern(
+    "transpose", transpose, kind="adversarial",
+    description="matrix-transpose permutation over the rank grid",
+))
+SHUFFLE = register_pattern(TrafficPattern(
+    "shuffle", shuffle, kind="adversarial",
+    description="perfect-shuffle (bit-rotation) permutation",
+))
+TORNADO = register_pattern(TrafficPattern(
+    "tornado", tornado, kind="adversarial",
+    description="half-grid offset per dimension (HyperX adversary)",
+))
+INCAST = register_pattern(TrafficPattern(
+    "incast", incast, kind="adversarial",
+    description="many-to-one convergence onto few sink ranks",
+))
+RECURSIVE_DOUBLING = register_pattern(TrafficPattern(
+    "recursive_doubling", recursive_doubling, kind="collective",
+    description="recursive-doubling all-reduce, log2(k) full exchanges",
+))
+STENCIL_3D = register_pattern(TrafficPattern(
+    "stencil_3d", stencil_3d, kind="stencil",
+    description="3D periodic 6-neighbour exchange rounds",
+))
+
+
+# Compatibility views of the registry (the seed module's public dicts).
+KERNELS = {
+    "all_to_all": all_to_all,
+    "all_reduce": all_reduce,
+    "stencil_von_neumann": lambda k: stencil(k, "von_neumann"),
+    "stencil_moore": lambda k: stencil(k, "moore"),
+    "random_involution": random_involution,
+}
+
+STATIC_PATTERNS = {
+    "uniform": uniform,
+    "random_permutation": random_permutation,
+    "random_switch_permutation": None,  # needs group size; built in compose
+}

@@ -1,0 +1,186 @@
+"""Machine-level workload composition (paper Sec. 6.1 + 6.3.3).
+
+``compose_workload`` merges several applications (each placed on a
+Partition) plus optional background noise into one machine-level spec with
+rank -> endpoint maps and per-partition VC pools (fabric partitioning).
+This is the low-level merge; the declarative front-end is
+:mod:`repro.traffic.scenario`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import numpy as np
+
+from repro.core.allocation import Partition
+from repro.core.hyperx import HyperX
+from repro.traffic.base import AppTraffic, get_pattern
+
+
+@dataclasses.dataclass
+class Workload:
+    """A complete machine workload: merged step tables + placement maps.
+
+    Global rank space concatenates all application ranks (targets first,
+    background last).  Background ranks are *infinite* sources: they inject
+    a fixed-rate stream and never complete; completion (makespan) is
+    measured over target ranks only.
+    """
+
+    topo: HyperX
+    R: int
+    T: int
+    maxd: int
+    rank_ep: np.ndarray      # (R,) endpoint id per rank
+    pool: np.ndarray         # (R,) VC pool per rank
+    infinite: np.ndarray     # (R,) bool — background sources
+    sends_dst: np.ndarray    # (R, T, MAXD) GLOBAL rank ids, -1 pad
+    npkts: np.ndarray
+    deg: np.ndarray
+    recv_need: np.ndarray
+    total_sends: np.ndarray  # (R, T)
+    sampled: np.ndarray
+    lo: np.ndarray           # GLOBAL rank space
+    hi: np.ndarray
+    window: np.ndarray       # (R,) per-rank window
+    start: np.ndarray        # (R,) injection start time (warmup gating)
+    num_pools: int
+    names: list[str]
+    # (S, q*n) bool, True = healthy directed link; None = all healthy.
+    # See repro.route.faults for mask constructors and apply_faults().
+    link_ok: np.ndarray | None = None
+
+    @property
+    def target_ranks(self) -> np.ndarray:
+        return np.flatnonzero(~self.infinite)
+
+    @property
+    def target_packets(self) -> int:
+        return int(self.npkts[~self.infinite].sum())
+
+
+def compose_workload(
+    topo: HyperX,
+    apps: Sequence[tuple[AppTraffic, Partition]],
+    background: Sequence[tuple[AppTraffic, Partition]] = (),
+    fabric_partitioning: str = "shared",
+    warmup: int = 0,
+    link_ok: np.ndarray | None = None,
+) -> Workload:
+    """Merge applications (+ background noise) into one machine workload.
+
+    fabric_partitioning:
+      * 'shared'    — every partition shares VC pool 0 (baseline, 4 VCs);
+      * 'background'— targets pool 0, background pool 1 (Figs. 11-12);
+      * 'per_app'   — one pool per application (full fabric partitioning).
+
+    ``warmup``: target apps start injecting only at this time, letting the
+    (infinite-rate) background reach steady state first; the simulator
+    reports makespan relative to the warmup point.
+
+    ``link_ok``: optional (S, q*n) link-fault mask (True = healthy); see
+    :mod:`repro.route.faults`.  Travels with the workload into the
+    engine's device tables, so fault scenarios batch like any other axis.
+    """
+    all_jobs = list(apps) + list(background)
+    n_bg = len(background)
+    R = sum(app.k for app, _ in all_jobs)
+    T = max(app.T for app, _ in all_jobs)
+    maxd = max(app.maxd for app, _ in all_jobs)
+
+    rank_ep = np.empty(R, dtype=np.int64)
+    pool = np.zeros(R, dtype=np.int64)
+    infinite = np.zeros(R, dtype=bool)
+    window = np.ones(R, dtype=np.int64)
+    start = np.zeros(R, dtype=np.int64)
+    sends_dst = np.full((R, T, maxd), -1, dtype=np.int64)
+    npkts = np.zeros((R, T, maxd), dtype=np.int64)
+    deg = np.zeros((R, T), dtype=np.int64)
+    recv_need = np.zeros((R, T), dtype=np.int64)
+    sampled = np.zeros((R, T, maxd), dtype=bool)
+    lo = np.zeros((R, T, maxd), dtype=np.int64)
+    hi = np.zeros((R, T, maxd), dtype=np.int64)
+
+    # endpoint disjointness guard: each endpoint hosts at most one rank
+    used = np.concatenate([p.endpoints[: a.k] for a, p in all_jobs])
+    if len(np.unique(used)) != len(used):
+        uniq, cnt = np.unique(used, return_counts=True)
+        raise ValueError(
+            f"workload maps {int((cnt > 1).sum())} endpoints to multiple ranks "
+            f"(e.g. {uniq[cnt > 1][:8].tolist()}); partitions must be disjoint"
+        )
+
+    off = 0
+    names = []
+    for j, (app, part) in enumerate(all_jobs):
+        k, t, d = app.k, app.T, app.maxd
+        if len(part.endpoints) < k:
+            raise ValueError(
+                f"partition has {len(part.endpoints)} endpoints < {k} ranks"
+            )
+        is_bg = j >= len(apps)
+        sl = slice(off, off + k)
+        rank_ep[sl] = part.endpoints[:k]
+        infinite[sl] = is_bg
+        window[sl] = app.window
+        start[sl] = 0 if is_bg else warmup
+        if fabric_partitioning == "shared":
+            pool[sl] = 0
+        elif fabric_partitioning == "background":
+            pool[sl] = 1 if is_bg else 0
+        elif fabric_partitioning == "per_app":
+            pool[sl] = j
+        else:
+            raise ValueError(f"unknown fabric_partitioning {fabric_partitioning!r}")
+        # shift destinations into the global rank space
+        dstj = app.sends_dst.copy()
+        dstj[dstj >= 0] += off
+        sends_dst[sl, :t, :d] = dstj
+        npkts[sl, :t, :d] = app.npkts
+        deg[sl, :t] = app.deg
+        recv_need[sl, :t] = app.recv_need
+        sampled[sl, :t, :d] = app.sampled
+        lo[sl, :t, :d] = app.lo + off
+        hi[sl, :t, :d] = app.hi + off
+        names.append(("bg:" if is_bg else "") + app.name)
+        off += k
+
+    total_sends = npkts.sum(axis=2)
+    num_pools = int(pool.max()) + 1
+    return Workload(
+        topo=topo, R=R, T=T, maxd=maxd, rank_ep=rank_ep, pool=pool,
+        infinite=infinite, sends_dst=sends_dst, npkts=npkts, deg=deg,
+        recv_need=recv_need, total_sends=total_sends, sampled=sampled,
+        lo=lo, hi=hi, window=window, start=start, num_pools=num_pools,
+        names=names,
+        link_ok=None if link_ok is None else np.asarray(link_ok, dtype=bool),
+    )
+
+
+def background_noise(
+    topo: HyperX,
+    free_endpoints: np.ndarray,
+    packets: int = 1,
+    seed: int = 1234,
+    pattern: str = "random_permutation",
+) -> tuple[AppTraffic, Partition]:
+    """Background traffic of any registered pattern over free endpoints.
+
+    The traffic is *infinite-rate* in the simulator (the ``infinite`` flag in
+    the Workload makes the step table loop), so ``packets`` only shapes the
+    table; 1 is enough.  ``pattern`` must accept a ``packets`` parameter
+    (the rate-style patterns do).
+    """
+    k = len(free_endpoints)
+    app = get_pattern(pattern).build(k, seed=seed, packets=max(1, packets))
+    part = Partition(
+        strategy="background",
+        topo=topo,
+        job_id=-1,
+        size=k,
+        endpoints=np.asarray(free_endpoints, dtype=np.int64),
+        switches=np.unique(np.asarray(free_endpoints) // topo.concentration),
+    )
+    return app, part
