@@ -78,28 +78,47 @@ def resolve_quick(quick) -> bool:
     return QUICK if quick is None else bool(quick)
 
 
+def render_csv(rows: list[dict]) -> str:
+    """Render dict rows as CSV text (header from the first row's keys)."""
+    out = io.StringIO()
+    w = csv.DictWriter(out, fieldnames=list(rows[0].keys()))
+    w.writeheader()
+    for r in rows:
+        w.writerow(r)
+    return out.getvalue()
+
+
+def write_grid_csv(rows: list[dict], name: str,
+                   csv_dir: str | None = None) -> str:
+    """The one CSV-writing path for every grid benchmark.
+
+    Prints the table with a '# <name>' header (the harness contract) and,
+    when ``csv_dir`` is set, also writes it to ``<csv_dir>/<slug>.csv``.
+    Returns the rendered CSV text.  ``emit`` delegates here with the
+    suite-wide ``CSV_DIR``; call this directly to target another dir.
+    """
+    if not rows:
+        print(f"# {name}: no rows")
+        return ""
+    text = render_csv(rows)
+    print(f"# {name}")
+    sys.stdout.write(text)
+    sys.stdout.flush()
+    if csv_dir:
+        os.makedirs(csv_dir, exist_ok=True)
+        slug = re.sub(r"[^A-Za-z0-9_.-]+", "_", name.split(" ")[0]).strip("_")
+        with open(os.path.join(csv_dir, f"{slug}.csv"), "w", newline="") as f:
+            f.write(text)
+    return text
+
+
 def emit(rows: list[dict], name: str):
     """Print rows as CSV with a '# <name>' header (the harness contract).
 
     When ``CSV_DIR`` is set the same table is also written to
     ``<CSV_DIR>/<slug>.csv``.
     """
-    if not rows:
-        print(f"# {name}: no rows")
-        return
-    out = io.StringIO()
-    w = csv.DictWriter(out, fieldnames=list(rows[0].keys()))
-    w.writeheader()
-    for r in rows:
-        w.writerow(r)
-    print(f"# {name}")
-    sys.stdout.write(out.getvalue())
-    sys.stdout.flush()
-    if CSV_DIR:
-        os.makedirs(CSV_DIR, exist_ok=True)
-        slug = re.sub(r"[^A-Za-z0-9_.-]+", "_", name.split(" ")[0]).strip("_")
-        with open(os.path.join(CSV_DIR, f"{slug}.csv"), "w", newline="") as f:
-            f.write(out.getvalue())
+    write_grid_csv(rows, name, csv_dir=CSV_DIR)
 
 
 # ------------------------------------------------------------------ traffic
@@ -165,8 +184,11 @@ def sweep(workloads: list[Workload], mode: str | None = None,
     """Run every (workload, seed) pair batched; returns [workload][seed].
 
     Workloads are grouped by engine configuration (pool count) and shape
-    bucket; each group executes as a single vmapped device call.  The
-    routing policy defaults to the suite-wide ``--routing`` choice.
+    bucket; each group executes through ``SimEngine.run_grid``, which
+    flattens the grid into device-sharded lanes (``shard_map``/``pmap``
+    across all local devices; the nested-vmap call on one device) — so
+    every grid benchmark gains multi-device execution with no changes.
+    The routing policy defaults to the suite-wide ``--routing`` choice.
     """
     mode = resolve_routing(mode)
     if seeds is None:
@@ -178,7 +200,7 @@ def sweep(workloads: list[Workload], mode: str | None = None,
     results: list[list[SimResult] | None] = [None] * len(workloads)
     for num_pools, idxs in by_pools.items():
         engine = get_engine(topo, mode=mode, num_pools=num_pools)
-        per_wl = engine.run_batch_seeds(
+        per_wl = engine.run_grid(
             [workloads[i] for i in idxs], seeds=seeds, horizon=horizon
         )
         for i, res in zip(idxs, per_wl):

@@ -1,0 +1,269 @@
+"""Perf trajectory harness — times the engine and gates regressions.
+
+    PYTHONPATH=src python -m benchmarks.perf [--quick|--full]
+                                             [--out PATH] [--rev REV]
+                                             [--compare BASE.json]
+                                             [--threshold 0.10]
+                                             [--grids a,b,...]
+
+Runs the canonical grids (strategy / pattern / fault sweeps on the paper
+machine) through a **fresh** ``SimEngine`` each — so compile time is
+honestly attributed — and records, per grid:
+
+  * ``compile_s``     — first-call wall time minus steady-state run time;
+  * ``device_s``      — steady-state wall time of one full grid dispatch;
+  * ``cycles``        — simulated flit-cycles summed over all lanes
+    (post-warmup; horizon-clamped for incomplete lanes — deterministic,
+    since simulation results are regression-pinned bitwise);
+  * ``cycles_per_s``  — cycles / device_s, the headline throughput;
+  * ``lanes``, ``lanes_per_s``, ``buckets``, ``traces``.
+
+The snapshot lands in ``BENCH_<rev>.json`` at the repo root (``--out``
+overrides) together with host metadata (backend, device count, lane
+dispatch backend, jax version) — the persistent perf trajectory ROADMAP
+calls for.  ``--compare BASE.json`` re-measures and exits nonzero when
+any grid's ``device_s`` regresses more than ``--threshold`` (default
+10%) against the baseline, which is the CI perf gate
+(``BENCH_baseline.json`` is the committed baseline; refresh it with
+``--baseline`` when a speedup lands).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import time
+
+import jax
+
+from benchmarks.common import (
+    PAPER_TOPO,
+    STRATEGIES,
+    escalation_workload,
+    interference_workload,
+    write_grid_csv,
+)
+
+from repro.core.engine import PACKET_FLITS, SimEngine
+from repro.route import apply_faults, random_link_faults
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SCHEMA = 1
+DEFAULT_THRESHOLD = 0.10
+
+
+# ------------------------------------------------------------ canonical grids
+def _grid_escalation(quick: bool):
+    strategies = ("row", "diagonal", "full_spread") if quick else STRATEGIES
+    wls = [escalation_workload(s, "all_to_all", replicas=1)
+           for s in strategies]
+    return wls, (0,), "omniwar", 30_000
+
+
+def _grid_traffic(quick: bool):
+    patterns = ("tornado", "transpose") if quick else (
+        "tornado", "transpose", "shuffle", "stencil_3d")
+    strategies = ("row", "diagonal") if quick else (
+        "row", "diagonal", "full_spread", "rectangular")
+    wls = [interference_workload(s, p, with_bg=False)
+           for p in patterns for s in strategies]
+    return wls, (0,), "omniwar", 30_000
+
+
+def _grid_routing_faults(quick: bool):
+    strategies = ("row", "diagonal") if quick else (
+        "row", "diagonal", "full_spread", "rectangular")
+    mask = random_link_faults(PAPER_TOPO, 0.02, seed=77)
+    wls = []
+    for s in strategies:
+        wl = interference_workload(s, "all_to_all", with_bg=False)
+        wls.append(wl)
+        wls.append(apply_faults(wl, mask))
+    seeds = (0,) if quick else (0, 1)
+    return wls, seeds, "omniwar", 6_000
+
+
+GRIDS = {
+    "escalation_a2a": _grid_escalation,
+    "traffic_adversarial": _grid_traffic,
+    "routing_faults": _grid_routing_faults,
+}
+
+
+# ----------------------------------------------------------------- measuring
+def measure_grid(workloads, seeds, mode, horizon,
+                 topo=PAPER_TOPO, arb: str = "lax") -> dict:
+    """Time one grid through a fresh engine: compile vs steady-state.
+
+    The engine is constructed directly (bypassing the ``get_engine``
+    memo) so the first ``run_grid`` call pays — and therefore measures —
+    the real compilation cost; an identical second call measures the
+    steady-state device time.  ``_to_result`` materialises every output
+    on the host, so the wall clock brackets full device execution.
+    """
+    num_pools = {w.num_pools for w in workloads}
+    if len(num_pools) != 1:
+        raise ValueError(f"grid mixes VC pool counts {sorted(num_pools)}")
+    engine = SimEngine(topo, mode=mode, num_pools=num_pools.pop(), arb=arb)
+    preps = [engine.prepare(w) for w in workloads]
+    buckets = {p.tables.shape_bucket for p in preps}
+
+    t0 = time.perf_counter()
+    results = engine.run_grid(preps, seeds=seeds, horizon=horizon)
+    t1 = time.perf_counter()
+    engine.run_grid(preps, seeds=seeds, horizon=horizon)
+    t2 = time.perf_counter()
+
+    device_s = t2 - t1
+    compile_s = max((t1 - t0) - device_s, 0.0)
+    lanes = len(workloads) * len(seeds)
+    cycles = sum(
+        (r.makespan if r.completed else horizon) * PACKET_FLITS
+        for per_seed in results for r in per_seed
+    )
+    return {
+        "lanes": lanes,
+        "buckets": len(buckets),
+        "traces": engine.trace_count,
+        "lane_backend": engine.lane_backend,
+        "compile_s": round(compile_s, 3),
+        "device_s": round(device_s, 3),
+        "cycles": int(cycles),
+        "cycles_per_s": round(cycles / max(device_s, 1e-9), 1),
+        "lanes_per_s": round(lanes / max(device_s, 1e-9), 2),
+    }
+
+
+def current_rev() -> str:
+    rev = os.environ.get("BENCH_REV")
+    if rev:
+        return rev
+    try:
+        return subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"], cwd=REPO_ROOT,
+            capture_output=True, text=True, check=True,
+        ).stdout.strip()
+    except Exception:
+        return "dev"
+
+
+def run_suite(quick: bool = True, grids=None, arb: str = "lax") -> dict:
+    """Measure every requested grid; returns the BENCH json payload."""
+    names = list(GRIDS) if not grids else [g for g in GRIDS if g in grids]
+    bench = {
+        "schema": SCHEMA,
+        "rev": current_rev(),
+        "quick": quick,
+        "backend": jax.default_backend(),
+        "devices": jax.local_device_count(),
+        "jax": jax.__version__,
+        "arb": arb,
+        "grids": {},
+    }
+    for name in names:
+        wls, seeds, mode, horizon = GRIDS[name](quick)
+        print(f"# measuring {name} ({len(wls)} workloads x "
+              f"{len(seeds)} seeds)...", file=sys.stderr)
+        bench["grids"][name] = measure_grid(wls, seeds, mode, horizon,
+                                            arb=arb)
+    return bench
+
+
+# ------------------------------------------------------------------ comparing
+def compare_benchmarks(new: dict, base: dict,
+                       threshold: float = DEFAULT_THRESHOLD) -> list[dict]:
+    """Per-grid device-time comparison; returns rows with a 'regressed' flag.
+
+    A grid regresses when its steady-state ``device_s`` exceeds the
+    baseline's by more than ``threshold`` (compile time is reported but
+    not gated — it is far noisier and dominated by XLA version churn).
+    Grids present on only one side are reported but never gate.
+    """
+    rows = []
+    for name in sorted(set(new.get("grids", {})) | set(base.get("grids", {}))):
+        g_new = new.get("grids", {}).get(name)
+        g_base = base.get("grids", {}).get(name)
+        if g_new is None or g_base is None:
+            rows.append({
+                "grid": name, "base_device_s": g_base and g_base["device_s"],
+                "new_device_s": g_new and g_new["device_s"],
+                "ratio": "", "regressed": False,
+                "note": "missing on one side",
+            })
+            continue
+        ratio = g_new["device_s"] / max(g_base["device_s"], 1e-9)
+        rows.append({
+            "grid": name,
+            "base_device_s": g_base["device_s"],
+            "new_device_s": g_new["device_s"],
+            "ratio": round(ratio, 3),
+            "regressed": ratio > 1.0 + threshold,
+            "note": "",
+        })
+    return rows
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    p.add_argument("--quick", action="store_true",
+                   help="CI-sized grids (the default; --full overrides)")
+    p.add_argument("--full", action="store_true")
+    p.add_argument("--out", default=None, metavar="PATH",
+                   help="output json (default: <repo>/BENCH_<rev>.json)")
+    p.add_argument("--rev", default=None,
+                   help="revision label (default: git short sha)")
+    p.add_argument("--compare", default=None, metavar="BASE",
+                   help="baseline BENCH json; exit nonzero on regression")
+    p.add_argument("--threshold", type=float, default=DEFAULT_THRESHOLD,
+                   help="regression gate on device_s (default 0.10 = 10%%)")
+    p.add_argument("--grids", default=None,
+                   help=f"comma list from {sorted(GRIDS)}")
+    p.add_argument("--arb", default="lax", choices=("lax", "pallas"),
+                   help="arbitration backend to measure")
+    p.add_argument("--baseline", action="store_true",
+                   help="also refresh <repo>/BENCH_baseline.json")
+    args = p.parse_args(argv)
+    if args.quick and args.full:
+        p.error("--quick and --full are mutually exclusive")
+    if args.rev:
+        os.environ["BENCH_REV"] = args.rev
+    grids = args.grids.split(",") if args.grids else None
+    unknown = set(grids or []) - set(GRIDS)
+    if unknown:
+        p.error(f"unknown grids {sorted(unknown)}; have {sorted(GRIDS)}")
+
+    bench = run_suite(quick=not args.full, grids=grids, arb=args.arb)
+    out = args.out or os.path.join(REPO_ROOT, f"BENCH_{bench['rev']}.json")
+    os.makedirs(os.path.dirname(os.path.abspath(out)), exist_ok=True)
+    with open(out, "w") as f:
+        json.dump(bench, f, indent=2, sort_keys=True)
+        f.write("\n")
+    if args.baseline:
+        with open(os.path.join(REPO_ROOT, "BENCH_baseline.json"), "w") as f:
+            json.dump(bench, f, indent=2, sort_keys=True)
+            f.write("\n")
+    rows = [{"grid": g, **m} for g, m in bench["grids"].items()]
+    write_grid_csv(rows, f"perf ({bench['rev']}, {bench['backend']} x "
+                         f"{bench['devices']} dev) -> {out}")
+
+    if args.compare:
+        with open(args.compare) as f:
+            base = json.load(f)
+        cmp_rows = compare_benchmarks(bench, base, threshold=args.threshold)
+        write_grid_csv(cmp_rows,
+                       f"perf_compare (vs {args.compare}, "
+                       f"gate +{args.threshold:.0%} device_s)")
+        regressed = [r["grid"] for r in cmp_rows if r["regressed"]]
+        if regressed:
+            print(f"# PERF REGRESSION: {', '.join(regressed)} exceeded the "
+                  f"+{args.threshold:.0%} device-time gate", file=sys.stderr)
+            return 2
+        print("# perf gate passed", file=sys.stderr)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

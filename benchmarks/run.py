@@ -76,12 +76,19 @@ def main(argv=None):
 
     mods = [m for m in MODULES if args.only is None or args.only in m]
     t00 = time.time()
+    timings: list[tuple[str, float]] = []
     for name in mods:
         mod = __import__(f"benchmarks.{name}", fromlist=["run"])
         t0 = time.time()
         mod.run(quick=quick)
-        print(f"# [{name}] {time.time()-t0:.1f}s\n")
-    print(f"# total {time.time()-t00:.1f}s")
+        timings.append((name, time.time() - t0))
+        print(f"# [{name}] {timings[-1][1]:.1f}s\n")
+    total = time.time() - t00
+    # wall-time summary: where the suite's time actually goes, slowest first
+    print("# timing summary (wall s)")
+    for name, t in sorted(timings, key=lambda it: -it[1]):
+        print(f"#   {name:<28s} {t:7.1f}s  {100 * t / max(total, 1e-9):5.1f}%")
+    print(f"# total {total:.1f}s over {len(timings)} modules")
     return 0
 
 

@@ -3,16 +3,22 @@
 Public surface:
 
   * :class:`SimEngine` / :func:`get_engine` — compile-once, run-many
-    execution with ``run`` / ``run_batch`` / ``run_seeds``;
+    execution with ``run`` / ``run_batch`` / ``run_seeds`` and the
+    device-sharded ``run_grid`` (lane axis over shard_map / pmap / vmap);
   * :class:`WorkloadTables` / :func:`make_workload_tables` — per-workload
-    device data as a padded pytree of jit arguments;
+    device data as a padded pytree of jit arguments (packed to
+    int8/int16 by bucket-derived bounds; see :mod:`.packing`);
   * :func:`build_static_tables` — memoised topology/port/VC constants;
+  * :mod:`.arb` — switch-arbitration backends (lax scatter-min
+    reference and the bit-exact per-switch Pallas kernel);
   * :class:`SimState`, :class:`SimResult` — simulation state & summary.
 
 The legacy entry points ``build_simulator`` / ``simulate`` in
 :mod:`repro.core.simulator` are thin facades over this package.
 """
 
+from repro.core.engine.arb import arbitrate_lax, make_arbiter
+from repro.core.engine.packing import pack, pack_dtype
 from repro.core.engine.runner import (
     PACKET_FLITS,
     SimEngine,
@@ -38,11 +44,15 @@ __all__ = [
     "StaticTables",
     "WorkloadTables",
     "all_done",
+    "arbitrate_lax",
     "build_static_tables",
     "build_step",
     "get_engine",
     "init_state",
+    "make_arbiter",
     "make_workload_tables",
+    "pack",
+    "pack_dtype",
     "shape_bucket",
     "stack_tables",
 ]

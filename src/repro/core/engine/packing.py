@@ -1,0 +1,62 @@
+"""Small-range integer table packing (int8/int16) with bound-derived dtypes.
+
+The engine's lookup tables hold small-range values — coordinates (< n),
+ports (< q*n + conc), switch ids (< S), rank ids (< R_b) — yet the seed
+engine stored everything as int32.  Packing them to the narrowest dtype
+that provably fits halves (or quarters) the memory traffic of the gather-
+heavy step kernel and of every host->device table transfer.
+
+Two rules keep the packing *semantics-free* and *bucket-stable*:
+
+  * the dtype is chosen from a **bound** derived from the topology or the
+    shape bucket — never from the data values — so two workloads landing
+    in the same shape bucket always carry identical dtypes (the jit cache
+    keys on dtypes; value-dependent packing would silently fragment
+    compilation buckets and break ``stack_tables``);
+  * the step kernel widens to int32 at a **single point per table — the
+    gather that reads it** — so all arithmetic (port indices, scatter
+    targets, cost terms) stays int32 exactly as before.  Packed and
+    unpacked tables are therefore bit-identical in every ``SimResult``
+    (hypothesis-pinned in ``tests/test_packing.py``).
+
+``pack_dtype`` also covers the ``-1`` sentinels (destination "none", rank
+"none"): every signed dtype that fits ``bound`` fits ``-1``.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+# inclusive maximum magnitude representable per packed dtype
+I8_MAX = np.iinfo(np.int8).max    # 127
+I16_MAX = np.iinfo(np.int16).max  # 32767
+
+
+def pack_dtype(bound: int) -> np.dtype:
+    """Narrowest signed dtype holding every value in ``[-bound-1, bound]``.
+
+    ``bound`` is the largest value the table can possibly contain, derived
+    from topology / bucket dimensions (NOT from the data).  The extra -1
+    of headroom on the negative side covers the engine's sentinels.  Falls
+    back to int32 above the int16 range — the overflow guard for
+    large-``k`` machines (``S`` or ``R_b`` beyond 32767).
+    """
+    if bound < 0:
+        raise ValueError(f"pack bound must be non-negative, got {bound}")
+    if bound <= I8_MAX:
+        return np.dtype(np.int8)
+    if bound <= I16_MAX:
+        return np.dtype(np.int16)
+    return np.dtype(np.int32)
+
+
+def pack(arr: np.ndarray, bound: int) -> np.ndarray:
+    """Cast ``arr`` to the bound-derived dtype (checked in debug builds)."""
+    dt = pack_dtype(bound)
+    a = np.asarray(arr)
+    if a.size and (a.max(initial=0) > bound or a.min(initial=0) < -bound - 1):
+        raise OverflowError(
+            f"table value range [{a.min()}, {a.max()}] exceeds declared "
+            f"pack bound {bound}"
+        )
+    return a.astype(dt)

@@ -11,7 +11,11 @@ The engine splits a simulation into
 ``jax.vmap``-s the entire ``lax.while_loop``, so a whole strategy x seed
 sweep is **one compilation and one device call** (per shape bucket).
 ``run_seeds`` fans one scenario across many seeds without replicating its
-tables.
+tables.  ``run_grid`` flattens a workload x seed cross product into a
+*lane* axis and shards it across every local device (``jax.shard_map``
+over a 1-D mesh, ``jax.pmap`` fallback, the nested-vmap path on a single
+device) — lanes are embarrassingly parallel, so an N-device host runs an
+N-times-wider grid at the same wall-clock per bucket.
 
 Engines are memoised by :func:`get_engine`; ``trace_count`` /
 ``device_calls`` expose how many XLA traces and dispatches actually
@@ -77,15 +81,19 @@ class SimEngine:
         cap: int = 8,
         penalty_packets: int = 4,
         bucket: bool = True,
+        arb: str = "lax",
+        pack: bool = True,
     ):
         self.topo = topo
         self.mode = mode
         self.policy = get_policy(mode)  # registry: unknown modes raise here
         self.num_pools = num_pools
         self.bucket = bucket
+        self.pack = pack
         self.static = build_static_tables(
             topo, mode=mode, num_pools=num_pools, max_deroutes=max_deroutes,
-            cap=cap, penalty_packets=penalty_packets,
+            cap=cap, penalty_packets=penalty_packets, arb=arb,
+            pack_tables=pack,
         )
         self._step = build_step(self.static)
         self.trace_count = 0   # XLA traces of the core (any batching)
@@ -108,6 +116,7 @@ class SimEngine:
                 final.hop_max,
             )
 
+        self._core = core
         self._run1 = jax.jit(core)
         self._runN = jax.jit(jax.vmap(core, in_axes=(0, 0, None)))
         self._runS = jax.jit(jax.vmap(core, in_axes=(None, 0, None)))
@@ -117,6 +126,8 @@ class SimEngine:
             jax.vmap(core, in_axes=(None, 0, None)),
             in_axes=(0, None, None),
         ))
+        self._lane_runner = None       # built lazily (multi-device only)
+        self.lane_backend = "vmap" if jax.local_device_count() == 1 else None
 
     # ------------------------------------------------------------- prepare
     def prepare(self, wl: Workload | PreparedWorkload) -> PreparedWorkload:
@@ -129,7 +140,9 @@ class SimEngine:
                     f"workload was composed on {wl.topo} but engine was "
                     f"built for {self.topo}"
                 )
-            prep = make_workload_tables(wl, bucket=self.bucket)
+            prep = make_workload_tables(
+                wl, bucket=self.bucket, pack_tables=self.pack
+            )
         if prep.num_pools != self.num_pools:
             raise ValueError(
                 f"workload uses {prep.num_pools} VC pools but engine was "
@@ -214,6 +227,125 @@ class SimEngine:
                 ]
         return results  # type: ignore[return-value]
 
+    # ------------------------------------------------- device-sharded lanes
+    def _make_lane_runner(self):
+        """Build the multi-device lane dispatcher (shard_map, else pmap).
+
+        Lanes — flattened (workload, seed) pairs with stacked tables — are
+        embarrassingly parallel, so the dispatcher just splits the lane
+        axis across devices and vmaps within each shard.  Tracing still
+        happens once per shape bucket (SPMD), which the trace-counter
+        tests pin.
+        """
+        ndev = jax.local_device_count()
+        try:
+            try:  # jax >= 0.6 exports shard_map at top level
+                shard_map = jax.shard_map  # type: ignore[attr-defined]
+            except AttributeError:
+                from jax.experimental.shard_map import shard_map
+            from jax.sharding import Mesh, PartitionSpec as P
+
+            mesh = Mesh(np.asarray(jax.devices()), ("lanes",))
+            fn = jax.jit(shard_map(
+                jax.vmap(self._core, in_axes=(0, 0, None)),
+                mesh=mesh,
+                in_specs=(P("lanes"), P("lanes"), None),
+                out_specs=P("lanes"),
+                check_rep=False,
+            ))
+            self.lane_backend = "shard_map"
+
+            def dispatch(stacked, seed_arr, horizon):
+                return fn(stacked, seed_arr, horizon)
+
+        except Exception:  # pragma: no cover - depends on jax build
+            pfn = jax.pmap(
+                jax.vmap(self._core, in_axes=(0, 0, None)),
+                in_axes=(0, 0, None),
+            )
+            self.lane_backend = "pmap"
+
+            def dispatch(stacked, seed_arr, horizon):
+                L = seed_arr.shape[0]
+                per = L // ndev
+                split = jax.tree_util.tree_map(
+                    lambda x: x.reshape((ndev, per) + x.shape[1:]), stacked
+                )
+                outs = pfn(split, seed_arr.reshape(ndev, per), horizon)
+                return tuple(
+                    o.reshape((L,) + o.shape[2:]) for o in outs
+                )
+
+        return dispatch
+
+    def run_grid(
+        self,
+        workloads: Sequence[Workload | PreparedWorkload],
+        seeds: Sequence[int] | None = None,
+        horizon: int = 60_000,
+    ) -> list[list[SimResult]]:
+        """Run the workload x seed cross product sharded across devices.
+
+        The grid is flattened into a *lane* axis (one lane per
+        (workload, seed) pair, grouped by shape bucket) and dispatched
+
+          * via ``jax.shard_map`` over a 1-D device mesh when the host has
+            more than one device (``jax.pmap`` when shard_map is
+            unavailable) — lanes are padded round-robin to a multiple of
+            the device count so uneven grids still compile once per
+            (bucket, lane-count) and every device receives equal work;
+          * via the existing nested-vmap path (``run_batch_seeds``'s
+            dispatch — seeds broadcast, tables never replicated) on a
+            single device.
+
+        Results are bitwise identical to ``run_batch_seeds`` on every
+        backend (lane flattening only re-associates the batch axes) and
+        come back as ``results[workload][seed]`` in input order.
+        ``self.lane_backend`` records which dispatcher ran.
+        """
+        preps = [self.prepare(w) for w in workloads]
+        seeds = [0] if seeds is None else list(seeds)
+        ndev = jax.local_device_count()
+        groups: dict[tuple[int, int, int], list[int]] = {}
+        for i, p in enumerate(preps):
+            groups.setdefault(p.tables.shape_bucket, []).append(i)
+        results: list[list[SimResult] | None] = [None] * len(preps)
+        if ndev == 1:
+            # single device: the nested-vmap cross product is already the
+            # fastest layout (no table replication across the seed axis)
+            seed_arr = jnp.asarray([int(s) for s in seeds], dtype=jnp.int32)
+            for idxs in groups.values():
+                stacked = stack_tables([preps[i].tables for i in idxs])
+                self.device_calls += 1
+                outs = self._runNS(stacked, seed_arr, jnp.int32(horizon))
+                for j, i in enumerate(idxs):
+                    results[i] = [
+                        self._to_result(tuple(o[j][k] for o in outs), preps[i])
+                        for k in range(len(seeds))
+                    ]
+            return results  # type: ignore[return-value]
+
+        if self._lane_runner is None:
+            self._lane_runner = self._make_lane_runner()
+        for idxs in groups.values():
+            lanes = [(i, k) for i in idxs for k in range(len(seeds))]
+            pad = (-len(lanes)) % ndev
+            # round-robin padding: repeat existing lanes so every device
+            # shard is full; padded lanes are computed and discarded
+            lanes_p = lanes + [lanes[k % len(lanes)] for k in range(pad)]
+            stacked = stack_tables([preps[i].tables for i, _ in lanes_p])
+            seed_arr = jnp.asarray([int(seeds[k]) for _, k in lanes_p],
+                                   dtype=jnp.int32)
+            self.device_calls += 1
+            outs = self._lane_runner(stacked, seed_arr, jnp.int32(horizon))
+            for lane, (i, k) in enumerate(lanes):
+                if results[i] is None:
+                    results[i] = [None] * len(seeds)  # type: ignore[list-item]
+                results[i][k] = self._to_result(
+                    tuple(o[lane] for o in outs), preps[i]
+                )
+        return results  # type: ignore[return-value]
+
     def run_seeds(
         self,
         wl: Workload | PreparedWorkload,
@@ -271,10 +403,12 @@ class SimEngine:
 
 
 @functools.lru_cache(maxsize=None)
-def _engine_for(topo, mode, num_pools, max_deroutes, cap, penalty_packets, bucket):
+def _engine_for(topo, mode, num_pools, max_deroutes, cap, penalty_packets,
+                bucket, arb, pack):
     return SimEngine(
         topo, mode=mode, num_pools=num_pools, max_deroutes=max_deroutes,
-        cap=cap, penalty_packets=penalty_packets, bucket=bucket,
+        cap=cap, penalty_packets=penalty_packets, bucket=bucket, arb=arb,
+        pack=pack,
     )
 
 
@@ -286,12 +420,18 @@ def get_engine(
     cap: int = 8,
     penalty_packets: int = 4,
     bucket: bool = True,
+    arb: str = "lax",
+    pack: bool = True,
 ) -> SimEngine:
     """Memoised engine lookup: one engine (and one compile) per config.
 
     Arguments are normalised into one positional cache key, so calls that
     spell defaults explicitly share the engine with calls that omit them.
+    ``arb`` selects the switch-arbitration backend ("lax" | "pallas", bit
+    identical); ``pack`` controls int8/int16 table packing (default on —
+    ``False`` is the int32 reference layout for parity tests).
     """
     return _engine_for(
-        topo, mode, num_pools, max_deroutes, cap, penalty_packets, bucket
+        topo, mode, num_pools, max_deroutes, cap, penalty_packets, bucket,
+        arb, pack,
     )

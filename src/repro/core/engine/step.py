@@ -33,6 +33,7 @@ from typing import Callable, NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro.core.engine.arb import make_arbiter
 from repro.core.engine.tables import StaticTables
 from repro.core.engine.workload_tables import WorkloadTables
 from repro.route import get_policy
@@ -110,7 +111,15 @@ def build_step(
     use_imd = policy.uses_intermediate
     coords, nbr, in_port_at_nb = st.coords, st.nbr, st.in_port_at_nb
     port_dim, port_val = st.port_dim, st.port_val
-    h_pool, h_sw, inj_base, ep_sw = st.h_pool, st.h_sw, st.inj_base, st.ep_sw
+    h_pool, ep_sw = st.h_pool, st.ep_sw
+    # tables may be packed to int8/int16 (bounds in tables.py); every value
+    # that enters index arithmetic is widened to int32 exactly once — head
+    # constants here (trace-time, folded), workload tables at their gather
+    h_sw = st.h_sw.astype(I32)
+    inj_base = st.inj_base.astype(I32)
+    # per-round arbitration primitive: "lax" scatter-min or "pallas"
+    # per-switch kernel (bit-exact — see repro.core.engine.arb)
+    arbitrate = make_arbiter(st.S, st.OUT, st.H, st.arb)
     BIGCOST = jnp.int32(1 << 28)
     OOB = jnp.int32(NQ * CAP + 5)  # safely out of bounds => dropped scatters
     NOMID = jnp.int32(S)           # f_imd sentinel: no (remaining) intermediate
@@ -164,8 +173,8 @@ def build_step(
         not_self = pv != cur_d
         is_min = (pv == dst_d) & unaligned
         healthy = wt.link_ok[cur]                           # (H, q*n) faults
-        nb = nbr[cur]                                       # (H, q*n)
-        ipnb = in_port_at_nb[cur]                           # (H, q*n)
+        nb = nbr[cur].astype(I32)                           # (H, q*n)
+        ipnb = in_port_at_nb[cur].astype(I32)               # (H, q*n)
         vc_next = jnp.minimum(hop + 1, V - 1)[:, None]      # (H, 1)
         qi_down = ((nb * IN + ipnb) * P + h_pool[:, None]) * V + vc_next
         room = qlen[qi_down] < CAP                          # own queue has space
@@ -219,7 +228,6 @@ def build_step(
         # negative indices wrap NumPy-style in jnp .at[] even with mode='drop'.
         OOB_OUT = jnp.int32(S * OUT + 1)
         req_out = jnp.where(requesting, cur * OUT + out_port, OOB_OUT)
-        req_out_safe = jnp.minimum(req_out, S * OUT - 1)
 
         # ------------- iterative random arbitration (2x internal speedup) --
         # Round 1: every head requests its best port; one random winner per
@@ -227,19 +235,15 @@ def build_step(
         # crossbar speedup): losers re-route to their best port that still
         # has output tokens, enabling a second grant per cycle per output.
         # The `busy` token bucket keeps sustained link rate at 1 pkt/time.
+        # Each round runs through the configured arbiter backend (lax
+        # scatter-min or the per-switch Pallas kernel — bit-exact).
         arb_key = jax.random.bits(k_arb, (H,), dtype=U32) >> 17  # 15 bits
         packed = (arb_key << 17) | jnp.arange(H, dtype=U32)
-        INVALID = jnp.uint32(0xFFFFFFFF)
-        grant1 = jnp.full(S * OUT, INVALID)
-        grant1 = grant1.at[req_out].min(packed, mode="drop")
-        won1 = requesting & (grant1[req_out_safe] == packed)
+        won1, g1 = arbitrate(req_out, packed)
 
         qi_best1 = jnp.take_along_axis(qi_down, best[:, None], 1)[:, 0]
         arr1 = jnp.zeros(NQ, dtype=I32).at[
             jnp.where(won1 & ~at_dst, qi_best1, NQ + 1)
-        ].add(1, mode="drop")
-        g1 = jnp.zeros(S * OUT, dtype=I32).at[
-            jnp.where(won1, req_out, OOB_OUT)
         ].add(1, mode="drop")
         tokens = (2 - busy) - g1                            # remaining slots
 
@@ -255,10 +259,7 @@ def build_step(
         out2 = jnp.where(at_dst, q * n + dof, best2)
         req2 = loser & jnp.where(at_dst, ej_ok, has2)
         req_out2 = jnp.where(req2, cur * OUT + out2, OOB_OUT)
-        req_out2_safe = jnp.minimum(req_out2, S * OUT - 1)
-        grant2 = jnp.full(S * OUT, INVALID)
-        grant2 = grant2.at[req_out2].min(packed, mode="drop")
-        won2 = req2 & (grant2[req_out2_safe] == packed)
+        won2, g2 = arbitrate(req_out2, packed)
         won = won1 | won2
 
         # final chosen queue / minimality per winner
@@ -274,8 +275,7 @@ def build_step(
         )
 
         # output token update: +1 per grant (burst absorbed by 2x speedup)
-        gcount = g1.at[jnp.where(won2, req_out2, OOB_OUT)].add(1, mode="drop")
-        busy = busy + gcount
+        busy = busy + g1 + g2
 
         # ---------------- dequeue winners ----------------------------------
         qhead = jnp.where(won, (qhead + 1) % CAP, qhead)
@@ -292,7 +292,7 @@ def build_step(
         sent = state.sent.at[
             jnp.where(eject, send_row * T + pstep, OOB_RT)
         ].add(1, mode="drop")
-        drank = wt.ep_rank[dst]
+        drank = wt.ep_rank[dst].astype(I32)
         drank_ok = (drank >= 0) & wt.finite[jnp.maximum(drank, 0)]
         recv_row = jnp.where(drank_ok, drank, R)
         got = state.got.at[
@@ -353,7 +353,7 @@ def build_step(
         cs = cs + (wt.finite & (cs < wt.n_steps) & (cs_deg == 0))
 
         # ---------------- injection ----------------------------------------
-        r_of_e = wt.ep_rank                                 # (E,)
+        r_of_e = wt.ep_rank.astype(I32)                     # (E,)
         r_safe = jnp.maximum(r_of_e, 0)
         e_fin = wt.finite[r_safe]
         e_cs = jnp.where(e_fin, cs[r_safe], 0)
@@ -368,17 +368,17 @@ def build_step(
             e_fin, (e_cs < e_ns) & (e_di < e_deg) & in_window, True
         )
         has_work = has_work & (t >= wt.start_t[r_safe])
-        inj_qi = inj_base + wt.pool[r_safe] * V
+        inj_qi = inj_base + wt.pool[r_safe].astype(I32) * V
         has_room = qlen[inj_qi] + dlen[inj_qi] < CAP  # dlen: arrivals this cycle
         do_inj = (r_of_e >= 0) & has_work & has_room
 
-        d_fixed = wt.sends_dst[r_safe, flat_td]
+        d_fixed = wt.sends_dst[r_safe, flat_td].astype(I32)
         rspan = jnp.maximum(wt.smp_hi[r_safe, flat_td] - wt.smp_lo[r_safe, flat_td], 1)
         rnd = jax.random.bits(k_smp, (E,), dtype=U32)
         d_smp = wt.smp_lo[r_safe, flat_td] + (rnd % rspan.astype(U32)).astype(I32)
         d_rank = jnp.where(wt.sampled[r_safe, flat_td], d_smp, d_fixed)
         d_rank = jnp.clip(d_rank, 0, R - 1)
-        d_ep = wt.rank_ep[d_rank]
+        d_ep = wt.rank_ep[d_rank].astype(I32)
 
         inj_flat = jnp.where(
             do_inj, inj_qi * CAP + (state.qhead[inj_qi] + qlen[inj_qi]) % CAP,
@@ -396,7 +396,7 @@ def build_step(
             # are device data — seeds and fault grids vmap, no retracing)
             rmid = jax.random.bits(k_mid, (E,), dtype=U32)
             span = jnp.maximum(wt.n_mid, 1).astype(U32)
-            mid = wt.mid_pool[(rmid % span).astype(I32)]
+            mid = wt.mid_pool[(rmid % span).astype(I32)].astype(I32)
             if policy.adaptive_injection:
                 # UGAL-L: best minimal port vs best port toward the
                 # sampled intermediate, weighted by path length, using
@@ -409,7 +409,9 @@ def build_step(
                 unal_m = src_d != cme[:, port_dim]
                 min_d = (port_val[None, :] == cde[:, port_dim]) & unal_d
                 min_m = (port_val[None, :] == cme[:, port_dim]) & unal_m
-                occ_e = port_occ[nbr[ep_sw] * IN + in_port_at_nb[ep_sw]]
+                occ_e = port_occ[
+                    nbr[ep_sw].astype(I32) * IN + in_port_at_nb[ep_sw]
+                ]
                 ok_e = wt.link_ok[ep_sw]
                 # a dead/empty candidate set prices as BIGOCC, small enough
                 # that BIGOCC * h_val stays inside int32 for any q

@@ -27,6 +27,7 @@ from typing import NamedTuple
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.engine.packing import pack
 from repro.core.hyperx import HyperX
 from repro.route import get_policy, neighbor_tables, port_layout
 
@@ -62,6 +63,7 @@ class StaticTables(NamedTuple):
     m: int            # deroute budget
     PEN: int          # deroute penalty on the cost scale
     mode: str         # registered routing-policy name
+    arb: str          # arbitration backend: "lax" scatter-min | "pallas"
     # device constant tables
     coords: jnp.ndarray
     nbr: jnp.ndarray
@@ -82,8 +84,18 @@ def build_static_tables(
     max_deroutes: int | None = None,
     cap: int = 8,
     penalty_packets: int = 4,
+    arb: str = "lax",
+    pack_tables: bool = True,
 ) -> StaticTables:
-    """Construct (and cache) the constant tables for one configuration."""
+    """Construct (and cache) the constant tables for one configuration.
+
+    ``arb`` selects the arbitration backend the step kernel is built with
+    ("lax" scatter-min reference or the "pallas" per-switch kernel — bit
+    identical, regression-pinned).  ``pack_tables`` packs the small-range
+    lookup tables to int8/int16 with topology-derived bounds (the step
+    kernel widens to int32 at each gather); ``False`` keeps the int32
+    reference layout for the packing parity tests.
+    """
     policy = get_policy(mode)  # raises with registered names when unknown
     n, q, conc = topo.n, topo.q, topo.concentration
     S = topo.num_switches
@@ -101,27 +113,36 @@ def build_static_tables(
     port_dim, port_val = port_layout(n, q)
 
     h_idx = np.arange(H, dtype=np.int64)
-    h_pool = jnp.asarray((h_idx // V) % P, dtype=I32)
-    h_sw = jnp.asarray(h_idx // (V * P * IN), dtype=I32)
+    h_pool_np = (h_idx // V) % P
+    h_sw_np = h_idx // (V * P * IN)
 
     # endpoint -> injection queue (pool of its rank added at runtime, VC 0)
     e_ids = np.arange(E)
     e_sw = e_ids // conc
     e_port = q * n + (e_ids % conc)
-    inj_base = jnp.asarray(((e_sw * IN + e_port) * P) * V, dtype=I32)
+    inj_base_np = ((e_sw * IN + e_port) * P) * V
+
+    if pack_tables:
+        # bounds are topology-derived (never data-derived): same config =>
+        # same dtypes => one jit cache entry, regardless of workload values
+        def lower(a, bound):
+            return jnp.asarray(pack(a, bound))
+    else:
+        def lower(a, bound):
+            return jnp.asarray(a, dtype=I32)
 
     return StaticTables(
         n=n, q=q, conc=conc, S=S, E=E, IN=IN, OUT=OUT, P=P, V=V,
         NQ=NQ, H=H, CAP=cap, m=m,
         PEN=penalty_packets * 8,  # cost scale: occupancy*8 + jitter(3 bits)
-        mode=mode,
-        coords=jnp.asarray(coords_np, dtype=I32),
-        nbr=jnp.asarray(nbr, dtype=I32),
-        in_port_at_nb=jnp.asarray(in_port_at_nb, dtype=I32),
-        port_dim=jnp.asarray(port_dim, dtype=I32),
-        port_val=jnp.asarray(port_val, dtype=I32),
-        h_pool=h_pool,
-        h_sw=h_sw,
-        inj_base=inj_base,
-        ep_sw=jnp.asarray(e_sw, dtype=I32),
+        mode=mode, arb=arb,
+        coords=lower(coords_np, n - 1),
+        nbr=lower(nbr, S - 1),
+        in_port_at_nb=lower(in_port_at_nb, IN - 1),
+        port_dim=lower(port_dim, q - 1),
+        port_val=lower(port_val, n - 1),
+        h_pool=lower(h_pool_np, P - 1),
+        h_sw=lower(h_sw_np, S - 1),
+        inj_base=lower(inj_base_np, NQ - 1),
+        ep_sw=lower(e_sw, S - 1),
     )

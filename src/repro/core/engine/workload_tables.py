@@ -33,6 +33,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.engine.packing import pack
 from repro.core.traffic import Workload
 from repro.route import faults
 from repro.route.topology import self_port_mask
@@ -115,8 +116,19 @@ def shape_bucket(R: int, T: int, maxd: int) -> tuple[int, int, int]:
 def make_workload_tables(
     wl: Workload,
     bucket: bool = True,
+    pack_tables: bool = True,
 ) -> PreparedWorkload:
-    """Lower a :class:`Workload` into padded device tables."""
+    """Lower a :class:`Workload` into padded device tables.
+
+    ``pack_tables`` (default) stores every small-range table in the
+    narrowest dtype its **bucket-derived** bound admits (rank ids bound by
+    R_b, endpoint ids by E, step counts by T_b, ...), so dtypes are a
+    function of the shape bucket alone — packed tables stack and share
+    compilations exactly like the int32 reference layout, and the step
+    kernel widens at each gather, keeping results bit-identical
+    (hypothesis-pinned).  ``pack_tables=False`` produces the int32
+    reference used by the parity tests.
+    """
     R, T, D = wl.R, wl.T, wl.maxd
     R_b, T_b, D_b = shape_bucket(R, T, D) if bucket else (R, T, D)
     E = wl.topo.num_endpoints
@@ -157,28 +169,43 @@ def make_workload_tables(
     ) & ~link_ok).sum())
     n_dead = (dead_dirs + 1) // 2  # cables (directed pairs, ceil)
 
+    if pack_tables:
+        # bucket-derived bounds only (R_b/T_b/D_b/E/S) — two same-bucket
+        # workloads always pack to identical dtypes, so packed tables
+        # stack and share compilations exactly like the int32 layout
+        def lower(a, bound):
+            return jnp.asarray(pack(a, bound))
+    else:
+        def lower(a, bound):
+            return jnp.asarray(a, dtype=I32)
+
+    # the window only acts through min(n_steps, completed + window) with
+    # n_steps <= T_b, so clamping to T_b is semantics-free and gives the
+    # field a bucket-derived bound (applied to both layouts for parity)
+    window = np.minimum(pad_r(wl.window, fill=1), T_b)
+
     tables = WorkloadTables(
-        rank_ep=jnp.asarray(pad_r(wl.rank_ep), dtype=I32),
-        ep_rank=jnp.asarray(ep_rank, dtype=I32),
-        pool=jnp.asarray(pad_r(wl.pool), dtype=I32),
+        rank_ep=lower(pad_r(wl.rank_ep), E - 1),
+        ep_rank=lower(ep_rank, R_b),
+        pool=lower(pad_r(wl.pool), max(wl.num_pools - 1, 0)),
         finite=jnp.asarray(~infinite),
-        window=jnp.asarray(pad_r(wl.window, fill=1), dtype=I32),
+        window=lower(window, T_b),
         start_t=jnp.asarray(pad_r(wl.start), dtype=I32),
-        n_steps=jnp.asarray(n_steps, dtype=I32),
-        sends_dst=jnp.asarray(
-            pad_rtd(wl.sends_dst, fill=-1).reshape(R_b, T_b * D_b), dtype=I32
+        n_steps=lower(n_steps, T_b),
+        sends_dst=lower(
+            pad_rtd(wl.sends_dst, fill=-1).reshape(R_b, T_b * D_b), R_b
         ),
         npkts=jnp.asarray(pad_rtd(wl.npkts).reshape(R_b, T_b * D_b), dtype=I32),
-        deg=jnp.asarray(pad_rt(wl.deg), dtype=I32),
+        deg=lower(pad_rt(wl.deg), D_b),
         recv_need=jnp.asarray(pad_rt(wl.recv_need).reshape(R_b * T_b), dtype=I32),
         total_sends=jnp.asarray(
             pad_rt(wl.total_sends).reshape(R_b * T_b), dtype=I32
         ),
         sampled=jnp.asarray(pad_rtd(wl.sampled.astype(bool)).reshape(R_b, T_b * D_b)),
-        smp_lo=jnp.asarray(pad_rtd(wl.lo).reshape(R_b, T_b * D_b), dtype=I32),
-        smp_hi=jnp.asarray(pad_rtd(wl.hi).reshape(R_b, T_b * D_b), dtype=I32),
+        smp_lo=lower(pad_rtd(wl.lo).reshape(R_b, T_b * D_b), R_b),
+        smp_hi=lower(pad_rtd(wl.hi).reshape(R_b, T_b * D_b), R_b),
         link_ok=jnp.asarray(link_ok),
-        mid_pool=jnp.asarray(mid_pool, dtype=I32),
+        mid_pool=lower(mid_pool, wl.topo.num_switches - 1),
         n_mid=jnp.int32(n_mid),
         n_dead=jnp.int32(n_dead),
     )

@@ -10,9 +10,10 @@ analytic vs simulated ordering across allocation strategies — closing the
 loop between the paper's simulator evidence and the framework's launcher
 policy.
 
-Strategy comparisons run through ``SimEngine.run_batch``: every strategy's
+Strategy comparisons run through ``SimEngine.run_grid``: every strategy's
 workload shares one shape bucket, so the whole comparison is a single
-compilation and one vmapped device call.
+compilation and one device call — sharded across all local devices when
+the host has more than one.
 """
 
 from __future__ import annotations
@@ -131,8 +132,9 @@ def compare_strategies_simulated(
            for p in placements]
     engine = get_engine(placements[0].topo, mode=mode,
                         num_pools=wls[0].num_pools)
-    results = engine.run_batch(wls, seeds=[seed] * len(wls), horizon=120_000)
-    out = [_result_row(p, axis, kind, num_groups, res)
-           for p, res in zip(placements, results)]
+    # run_grid: strategy lanes shard across devices when the host has them
+    per_wl = engine.run_grid(wls, seeds=[seed], horizon=120_000)
+    out = [_result_row(p, axis, kind, num_groups, res[0])
+           for p, res in zip(placements, per_wl)]
     out.sort(key=lambda d: d["makespan"] if d["makespan"] > 0 else 10**9)
     return out

@@ -124,7 +124,9 @@ def evaluate_snapshots(
         )
     engine = get_engine(topo, mode=mode, num_pools=num_pools.pop())
     traces0, calls0 = engine.trace_count, engine.device_calls
-    per_wl = engine.run_batch_seeds(workloads, seeds=seeds, horizon=horizon)
+    # device-sharded lanes: on a multi-device host the snapshot x seed grid
+    # splits across devices; on one device this is the nested-vmap call
+    per_wl = engine.run_grid(workloads, seeds=seeds, horizon=horizon)
     rows = []
     for key, snap, wl, per_seed in zip(keys, snaps, workloads, per_wl):
         bucket = shape_bucket(wl.R, wl.T, wl.maxd)

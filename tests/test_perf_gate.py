@@ -1,0 +1,88 @@
+"""Perf-gate tests: BENCH json comparison logic and the nonzero exit on a
+synthetic >10% device-time regression (no measurement is run — run_suite
+is stubbed; the measuring path is covered by the CI perf-smoke job)."""
+
+import json
+import os
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+if REPO not in sys.path:  # benchmarks/ is a namespace package at repo root
+    sys.path.insert(0, REPO)
+
+from benchmarks import perf  # noqa: E402
+
+
+def _bench(device_s_by_grid, rev="test"):
+    return {
+        "schema": perf.SCHEMA, "rev": rev, "quick": True, "backend": "cpu",
+        "devices": 1, "jax": "x", "arb": "lax",
+        "grids": {
+            g: {"lanes": 4, "buckets": 1, "traces": 1, "lane_backend": "vmap",
+                "compile_s": 1.0, "device_s": d, "cycles": 1000,
+                "cycles_per_s": 1000 / d, "lanes_per_s": 4 / d}
+            for g, d in device_s_by_grid.items()
+        },
+    }
+
+
+def test_compare_flags_only_past_threshold():
+    base = _bench({"a": 1.0, "b": 2.0, "c": 3.0})
+    new = _bench({"a": 1.05, "b": 2.3, "c": 2.0})  # +5%, +15%, -33%
+    rows = perf.compare_benchmarks(new, base, threshold=0.10)
+    flagged = {r["grid"]: r["regressed"] for r in rows}
+    assert flagged == {"a": False, "b": True, "c": False}
+
+
+def test_compare_tolerates_missing_grids():
+    rows = perf.compare_benchmarks(
+        _bench({"a": 1.0}), _bench({"b": 1.0}), threshold=0.10)
+    assert all(not r["regressed"] for r in rows)
+    assert {r["grid"] for r in rows} == {"a", "b"}
+
+
+def test_main_exits_nonzero_on_synthetic_regression(tmp_path, monkeypatch):
+    """The acceptance pin: a synthetic 10%+ slowdown vs the baseline makes
+    `perf.py --compare` return nonzero; an equal run returns zero."""
+    base_path = tmp_path / "BENCH_base.json"
+    base_path.write_text(json.dumps(_bench({"g": 1.0}, rev="base")))
+
+    def fake_suite(slow):
+        def run_suite(quick=True, grids=None, arb="lax"):
+            return _bench({"g": 1.1 * 1.001 if slow else 1.0}, rev="new")
+        return run_suite
+
+    out = tmp_path / "BENCH_new.json"
+    monkeypatch.setattr(perf, "run_suite", fake_suite(slow=True))
+    rc = perf.main(["--quick", "--out", str(out), "--compare",
+                    str(base_path)])
+    assert rc != 0
+    assert json.loads(out.read_text())["rev"] == "new"  # snapshot still lands
+
+    monkeypatch.setattr(perf, "run_suite", fake_suite(slow=False))
+    rc = perf.main(["--quick", "--out", str(out), "--compare",
+                    str(base_path)])
+    assert rc == 0
+
+
+def test_main_writes_bench_json_and_baseline(tmp_path, monkeypatch):
+    monkeypatch.setattr(perf, "run_suite",
+                        lambda quick=True, grids=None, arb="lax":
+                        _bench({"g": 1.0}, rev="abc123"))
+    out = tmp_path / "BENCH_abc123.json"
+    rc = perf.main(["--quick", "--out", str(out)])
+    assert rc == 0
+    payload = json.loads(out.read_text())
+    assert payload["grids"]["g"]["device_s"] == 1.0
+    assert payload["schema"] == perf.SCHEMA
+
+
+def test_grid_builders_produce_workloads():
+    """Every canonical grid lowers to nonempty same-pool workloads (cheap
+    structural check; actual measurement runs in CI perf-smoke)."""
+    for name, build in perf.GRIDS.items():
+        wls, seeds, mode, horizon = build(quick=True)
+        assert wls and seeds and horizon > 0, name
+        assert len({w.num_pools for w in wls}) == 1, name

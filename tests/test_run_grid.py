@@ -1,0 +1,113 @@
+"""Device-sharded lane dispatch: run_grid parity, trace counting, and the
+multi-device path (emulated via XLA host-device splitting in a subprocess).
+"""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+from repro.core import traffic as tr
+from repro.core.allocation import allocate_partition
+from repro.core.engine import SimEngine
+from repro.core.hyperx import HyperX
+
+SMALL = HyperX(n=4, q=2)
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _a2a_workload(strategy: str):
+    part = allocate_partition(strategy, SMALL, 0)
+    return tr.compose_workload(SMALL, [(tr.all_to_all(16), part)])
+
+
+def _uniform_workload(strategy: str):
+    part = allocate_partition(strategy, SMALL, 0)
+    return tr.compose_workload(SMALL, [(tr.uniform(4, packets=4), part)])
+
+
+def test_run_grid_matches_run_batch_seeds_bitwise():
+    """On one device run_grid IS the nested-vmap cross product — results
+    must be equal field-for-field, including with duplicate seeds."""
+    engine = SimEngine(SMALL, mode="omniwar")
+    wls = [_a2a_workload(s) for s in ("row", "diagonal", "full_spread")]
+    seeds = (0, 7, 7)  # duplicate seed: lane indexing must not collapse it
+    assert engine.run_grid(wls, seeds=seeds, horizon=5000) == \
+        engine.run_batch_seeds(wls, seeds=seeds, horizon=5000)
+    assert engine.lane_backend == "vmap"
+
+
+def test_run_grid_default_seed_zero():
+    engine = SimEngine(SMALL, mode="omniwar")
+    wl = _a2a_workload("row")
+    assert engine.run_grid([wl], horizon=5000) == [
+        [engine.run(wl, seed=0, horizon=5000)]
+    ]
+
+
+def test_run_grid_compiles_once_per_shape_bucket():
+    """The trace-counter pin: a grid compiles once per shape bucket, and a
+    second grid of the same buckets re-traces nothing."""
+    engine = SimEngine(SMALL, mode="omniwar")
+    a2a = [_a2a_workload(s) for s in ("row", "diagonal")]
+    uni = [_uniform_workload(s) for s in ("row", "diagonal")]
+    engine.run_grid(a2a + uni, seeds=(0, 1), horizon=5000)
+    assert engine.trace_count == 2    # exactly one trace per bucket
+    assert engine.device_calls == 2   # one dispatch per bucket
+    engine.run_grid(
+        [_a2a_workload("full_spread"), _a2a_workload("l_shape"),
+         _uniform_workload("full_spread"), _uniform_workload("l_shape")],
+        seeds=(4, 5), horizon=5000,
+    )
+    assert engine.trace_count == 2    # same buckets -> compilations reused
+    assert engine.device_calls == 4
+
+
+_SHARDED_SCRIPT = """
+import json
+import jax
+from repro.core import traffic as tr
+from repro.core.allocation import allocate_partition
+from repro.core.engine import SimEngine
+from repro.core.hyperx import HyperX
+
+assert jax.local_device_count() == 4, jax.local_device_count()
+SMALL = HyperX(n=4, q=2)
+wls = [
+    tr.compose_workload(
+        SMALL, [(tr.all_to_all(16), allocate_partition(s, SMALL, 0))]
+    )
+    for s in ("row", "diagonal", "full_spread")  # 3 x 2 lanes: needs padding
+]
+engine = SimEngine(SMALL, mode="omniwar")
+grid = engine.run_grid(wls, seeds=(0, 7), horizon=5000)
+print(json.dumps({
+    "backend": engine.lane_backend,
+    "traces": engine.trace_count,
+    "grid": [[r.__dict__ for r in per_seed] for per_seed in grid],
+}))
+"""
+
+
+@pytest.mark.slow
+def test_run_grid_sharded_matches_single_device():
+    """4 emulated devices (lane padding exercised: 6 lanes -> 8) must give
+    bitwise the same grid as this process's single-device reference."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "") +
+                        " --xla_force_host_platform_device_count=4").strip()
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    r = subprocess.run([sys.executable, "-c", _SHARDED_SCRIPT],
+                       capture_output=True, text=True, env=env, timeout=600)
+    assert r.returncode == 0, r.stderr
+    payload = json.loads(r.stdout.strip().splitlines()[-1])
+    assert payload["backend"] in ("shard_map", "pmap")
+    assert payload["traces"] == 1  # SPMD: still one trace for the bucket
+
+    engine = SimEngine(SMALL, mode="omniwar")
+    wls = [_a2a_workload(s) for s in ("row", "diagonal", "full_spread")]
+    ref = engine.run_grid(wls, seeds=(0, 7), horizon=5000)
+    assert payload["grid"] == [[r.__dict__ for r in per_seed]
+                               for per_seed in ref]
