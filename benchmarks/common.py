@@ -30,6 +30,8 @@ import numpy as np
 from repro.core.hyperx import HyperX
 from repro.core.allocation import allocate_partition, machine_partitions
 from repro.core.engine import SimResult, get_engine
+from repro.obs import TelemetrySpec
+from repro.obs import trace as obs_trace
 from repro.traffic import (
     AppSpec,
     BackgroundSpec,
@@ -198,14 +200,46 @@ def sweep(workloads: list[Workload], mode: str | None = None,
     for i, wl in enumerate(workloads):
         by_pools.setdefault(wl.num_pools, []).append(i)
     results: list[list[SimResult] | None] = [None] * len(workloads)
-    for num_pools, idxs in by_pools.items():
-        engine = get_engine(topo, mode=mode, num_pools=num_pools)
-        per_wl = engine.run_grid(
-            [workloads[i] for i in idxs], seeds=seeds, horizon=horizon
-        )
-        for i, res in zip(idxs, per_wl):
-            results[i] = res
+    with obs_trace.span("bench.sweep", mode=mode,
+                        workloads=len(workloads), seeds=len(seeds)):
+        for num_pools, idxs in by_pools.items():
+            engine = get_engine(topo, mode=mode, num_pools=num_pools)
+            per_wl = engine.run_grid(
+                [workloads[i] for i in idxs], seeds=seeds, horizon=horizon
+            )
+            for i, res in zip(idxs, per_wl):
+                results[i] = res
     return results  # type: ignore[return-value]
+
+
+def telemetry_probe(strategies=("diagonal", "rectangular"),
+                    kind: str | None = None, k: int = 64,
+                    horizon: int = 60_000, seed: int = 0,
+                    spec: TelemetrySpec | None = None) -> dict:
+    """Run a small telemetry-enabled grid and log one ``sim.telemetry``
+    event per strategy.
+
+    This is the suite's traced-run payload (``benchmarks.run --trace``):
+    the per-link utilization / occupancy / latency series behind the
+    report generator's heatmap and latency tables.  Telemetry joins the
+    engine compile key, so these engines are separate cache entries from
+    the untraced sweeps and leave their compile counts untouched.
+    Returns ``{strategy: Telemetry}``.
+    """
+    kind = resolve_pattern(kind)
+    spec = spec or TelemetrySpec()
+    out = {}
+    for strategy in strategies:
+        wl = interference_workload(strategy, kind, k=k, with_bg=False,
+                                   warmup=0, seed=seed)
+        engine = get_engine(PAPER_TOPO, mode=resolve_routing(None),
+                            num_pools=wl.num_pools, telemetry=spec)
+        with obs_trace.span("bench.telemetry_probe", strategy=strategy,
+                            kernel=kind):
+            res = engine.run(wl, seed=seed, horizon=horizon)
+        obs_trace.log_telemetry(strategy, res.telemetry, kernel=kind, k=k)
+        out[strategy] = res.telemetry
+    return out
 
 
 def summarize(per_seed: list[SimResult]) -> dict:

@@ -20,12 +20,16 @@ honestly attributed — and records, per grid:
 
 The snapshot lands in ``BENCH_<rev>.json`` at the repo root (``--out``
 overrides) together with host metadata (backend, device count, lane
-dispatch backend, jax version) — the persistent perf trajectory ROADMAP
-calls for.  ``--compare BASE.json`` re-measures and exits nonzero when
-any grid's ``device_s`` regresses more than ``--threshold`` (default
-10%) against the baseline, which is the CI perf gate
-(``BENCH_baseline.json`` is the committed baseline; refresh it with
-``--baseline`` when a speedup lands).
+dispatch backend, jax version) and a full ``manifest`` provenance block
+(:func:`repro.obs.trace.manifest_dict` — the same schema trace
+directories carry, so BENCH files and traces join on ``config_hash``) —
+the persistent perf trajectory ROADMAP calls for.  ``--compare
+BASE.json`` re-measures and exits nonzero when any grid's ``device_s``
+regresses more than ``--threshold`` (default 10%) against the baseline,
+which is the CI perf gate (``BENCH_baseline.json`` is the committed
+baseline; refresh it with ``--baseline`` when a speedup lands).  Exit
+codes: 2 = regression past the gate; 3 = the baseline file is missing or
+corrupt (validated *before* any measurement runs).
 """
 
 from __future__ import annotations
@@ -48,11 +52,14 @@ from benchmarks.common import (
 )
 
 from repro.core.engine import PACKET_FLITS, SimEngine
+from repro.obs.trace import manifest_dict
 from repro.route import apply_faults, random_link_faults
 
 REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 SCHEMA = 1
 DEFAULT_THRESHOLD = 0.10
+EXIT_REGRESSION = 2
+EXIT_BAD_BASELINE = 3
 
 
 # ------------------------------------------------------------ canonical grids
@@ -161,6 +168,9 @@ def run_suite(quick: bool = True, grids=None, arb: str = "lax") -> dict:
         "devices": jax.local_device_count(),
         "jax": jax.__version__,
         "arb": arb,
+        # full provenance block — same shape as a trace dir's manifest.json,
+        # so BENCH snapshots and traces join on config_hash
+        "manifest": manifest_dict(rev=current_rev(), quick=quick, arb=arb),
         "grids": {},
     }
     for name in names:
@@ -235,6 +245,24 @@ def main(argv=None) -> int:
     if unknown:
         p.error(f"unknown grids {sorted(unknown)}; have {sorted(GRIDS)}")
 
+    base = None
+    if args.compare:
+        # validate the baseline BEFORE measuring: a missing or corrupt
+        # file should fail in milliseconds with a distinct exit code, not
+        # after minutes of measurement with a traceback
+        try:
+            with open(args.compare) as f:
+                base = json.load(f)
+        except (OSError, json.JSONDecodeError) as e:
+            print(f"# perf: cannot read baseline {args.compare}: {e}",
+                  file=sys.stderr)
+            return EXIT_BAD_BASELINE
+        if not isinstance(base, dict) or not isinstance(
+                base.get("grids"), dict):
+            print(f"# perf: baseline {args.compare} is not a BENCH "
+                  "snapshot (missing 'grids' table)", file=sys.stderr)
+            return EXIT_BAD_BASELINE
+
     bench = run_suite(quick=not args.full, grids=grids, arb=args.arb)
     out = args.out or os.path.join(REPO_ROOT, f"BENCH_{bench['rev']}.json")
     os.makedirs(os.path.dirname(os.path.abspath(out)), exist_ok=True)
@@ -249,9 +277,7 @@ def main(argv=None) -> int:
     write_grid_csv(rows, f"perf ({bench['rev']}, {bench['backend']} x "
                          f"{bench['devices']} dev) -> {out}")
 
-    if args.compare:
-        with open(args.compare) as f:
-            base = json.load(f)
+    if base is not None:
         cmp_rows = compare_benchmarks(bench, base, threshold=args.threshold)
         write_grid_csv(cmp_rows,
                        f"perf_compare (vs {args.compare}, "
@@ -260,7 +286,7 @@ def main(argv=None) -> int:
         if regressed:
             print(f"# PERF REGRESSION: {', '.join(regressed)} exceeded the "
                   f"+{args.threshold:.0%} device-time gate", file=sys.stderr)
-            return 2
+            return EXIT_REGRESSION
         print("# perf gate passed", file=sys.stderr)
     return 0
 

@@ -4,6 +4,7 @@
                                             [--seeds N] [--csv DIR]
                                             [--only NAME]
                                             [--routing POLICY]
+                                            [--trace DIR]
 
 --quick trims replica counts / kernel sets (1-core CPU friendly); --full
 runs the complete paper grids.  Default: quick.
@@ -20,6 +21,12 @@ MIN artifact, and ``routing_grid`` always sweeps all policies.
 --pattern NAME focuses the pattern-parameterized modules (``traffic_grid``)
 on that traffic pattern (any name registered in ``repro.traffic``;
 default all_to_all).
+--trace DIR activates the :mod:`repro.obs` tracer for the whole run:
+every module executes inside a ``bench.<name>`` span, engine dispatches
+and scheduler events land in ``DIR/events.jsonl`` next to the run
+manifest, a telemetry-enabled probe grid records per-link utilization
+series, and the fleet report (``DIR/report/report.md`` + CSVs) is
+rendered at the end.
 """
 
 import argparse
@@ -62,6 +69,9 @@ def main(argv=None):
     p.add_argument("--pattern", default="all_to_all",
                    choices=available_patterns(),
                    help="focus pattern for the pattern-parameterized modules")
+    p.add_argument("--trace", default=None, metavar="DIR",
+                   help="write a JSONL event trace + run manifest to DIR "
+                        "and render the fleet report there")
     args = p.parse_args(argv)
     if args.quick and args.full:
         p.error("--quick and --full are mutually exclusive")
@@ -74,15 +84,39 @@ def main(argv=None):
     common.ROUTING = args.routing
     common.PATTERN = args.pattern
 
+    from repro.obs import report as obs_report
+    from repro.obs import trace as obs_trace
+
+    if args.trace:
+        obs_trace.configure(
+            args.trace, quick=quick, seeds=common.NUM_SEEDS,
+            routing=args.routing, pattern=args.pattern,
+            only=args.only or "all",
+        )
+
     mods = [m for m in MODULES if args.only is None or args.only in m]
     t00 = time.time()
     timings: list[tuple[str, float]] = []
-    for name in mods:
-        mod = __import__(f"benchmarks.{name}", fromlist=["run"])
-        t0 = time.time()
-        mod.run(quick=quick)
-        timings.append((name, time.time() - t0))
-        print(f"# [{name}] {timings[-1][1]:.1f}s\n")
+    try:
+        for name in mods:
+            mod = __import__(f"benchmarks.{name}", fromlist=["run"])
+            t0 = time.time()
+            with obs_trace.span(f"bench.{name}"):
+                mod.run(quick=quick)
+            timings.append((name, time.time() - t0))
+            print(f"# [{name}] {timings[-1][1]:.1f}s\n")
+        if args.trace:
+            # telemetry-enabled probe grid: the per-link utilization /
+            # latency series the fleet report renders into heatmap tables
+            with obs_trace.span("bench.telemetry"):
+                common.telemetry_probe(
+                    horizon=20_000 if quick else 60_000)
+    finally:
+        if args.trace:
+            obs_trace.disable()
+    if args.trace:
+        paths = obs_report.write_report(args.trace)
+        print(f"# trace report: {paths['report']}")
     total = time.time() - t00
     # wall-time summary: where the suite's time actually goes, slowest first
     print("# timing summary (wall s)")

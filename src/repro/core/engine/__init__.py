@@ -23,6 +23,7 @@ from repro.core.engine.runner import (
     PACKET_FLITS,
     SimEngine,
     SimResult,
+    default_lane_backend,
     get_engine,
 )
 from repro.core.engine.step import SimState, all_done, build_step, init_state
@@ -47,6 +48,7 @@ __all__ = [
     "arbitrate_lax",
     "build_static_tables",
     "build_step",
+    "default_lane_backend",
     "get_engine",
     "init_state",
     "make_arbiter",

@@ -24,6 +24,7 @@ happened (the benchmark suite and the trace-counter tests assert on them).
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import functools
 from typing import Sequence
@@ -42,9 +43,43 @@ from repro.core.engine.workload_tables import (
 )
 from repro.core.hyperx import HyperX
 from repro.core.traffic import Workload
+from repro.obs import probes as obs_probes
+from repro.obs import trace as obs_trace
+from repro.obs.probes import Telemetry, TelemetrySpec, init_telemetry
 from repro.route import get_policy
 
 PACKET_FLITS = 16  # paper Table 2: packet size 16 flits
+
+
+def default_lane_backend(ndev: int | None = None) -> str:
+    """The lane dispatcher :meth:`SimEngine.run_grid` will use on this host.
+
+    Resolved at engine construction (and by the run manifest), not lazily
+    at the first grid call: ``"vmap"`` on a single device, else
+    ``"shard_map"`` when the jax build exports it, else ``"pmap"``.
+    """
+    if ndev is None:
+        ndev = jax.local_device_count()
+    if ndev == 1:
+        return "vmap"
+    try:
+        try:
+            jax.shard_map  # type: ignore[attr-defined]
+        except AttributeError:
+            from jax.experimental.shard_map import shard_map  # noqa: F401
+        return "shard_map"
+    except Exception:  # pragma: no cover - depends on jax build
+        return "pmap"
+
+
+def _index_outs(outs, idx):
+    """Index every leaf of a core-output pytree along the leading axis.
+
+    Outputs are a tuple of arrays plus, for telemetry-enabled engines, a
+    trailing :class:`TelemetryState` — tree indexing keeps both shapes
+    uniform across the vmap/shard_map batching layouts.
+    """
+    return jax.tree_util.tree_map(lambda x: x[idx], outs)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -58,6 +93,12 @@ class SimResult:
     completed: bool           # all target ranks finished within horizon
     max_hops: int = 0         # max hops over all ejected packets — must stay
                               # below the policy's VC budget (deadlock bound)
+    # windowed in-sim time series (engines built with a TelemetrySpec
+    # only); excluded from equality so telemetry-on results still compare
+    # against telemetry-off results on the simulated fields
+    telemetry: Telemetry | None = dataclasses.field(
+        default=None, compare=False, repr=False,
+    )
 
 
 class SimEngine:
@@ -83,6 +124,7 @@ class SimEngine:
         bucket: bool = True,
         arb: str = "lax",
         pack: bool = True,
+        telemetry: TelemetrySpec | None = None,
     ):
         self.topo = topo
         self.mode = mode
@@ -90,31 +132,58 @@ class SimEngine:
         self.num_pools = num_pools
         self.bucket = bucket
         self.pack = pack
+        self.telemetry = telemetry
         self.static = build_static_tables(
             topo, mode=mode, num_pools=num_pools, max_deroutes=max_deroutes,
             cap=cap, penalty_packets=penalty_packets, arb=arb,
             pack_tables=pack,
         )
-        self._step = build_step(self.static)
+        self._step = build_step(self.static, telemetry=telemetry)
         self.trace_count = 0   # XLA traces of the core (any batching)
         self.device_calls = 0  # jitted dispatches issued
 
-        def core(wt: WorkloadTables, seed, horizon):
-            # Python side effect: runs once per trace, never per call.
-            self.trace_count += 1
+        if telemetry is None:
+            def core(wt: WorkloadTables, seed, horizon):
+                # Python side effect: runs once per trace, never per call.
+                self.trace_count += 1
 
-            def cond(state: SimState):
-                return (state.t < horizon) & ~all_done(wt, state)
+                def cond(state: SimState):
+                    return (state.t < horizon) & ~all_done(wt, state)
 
-            def body(state: SimState):
-                return self._step(state, wt)
+                def body(state: SimState):
+                    return self._step(state, wt)
 
-            final = jax.lax.while_loop(cond, body, init_state(self.static, wt, seed))
-            return (
-                final.t, all_done(wt, final), final.n_delivered,
-                final.n_injected, final.lat_sum, final.hop_sum,
-                final.hop_max,
-            )
+                final = jax.lax.while_loop(
+                    cond, body, init_state(self.static, wt, seed)
+                )
+                return (
+                    final.t, all_done(wt, final), final.n_delivered,
+                    final.n_injected, final.lat_sum, final.hop_sum,
+                    final.hop_max,
+                )
+        else:
+            st = self.static
+
+            def core(wt: WorkloadTables, seed, horizon):
+                self.trace_count += 1
+
+                def cond(carry):
+                    state, _ = carry
+                    return (state.t < horizon) & ~all_done(wt, state)
+
+                def body(carry):
+                    return self._step(carry, wt)
+
+                init = (
+                    init_state(st, wt, seed),
+                    init_telemetry(telemetry, st.S, st.OUT, st.P, st.CAP),
+                )
+                final, tel = jax.lax.while_loop(cond, body, init)
+                return (
+                    final.t, all_done(wt, final), final.n_delivered,
+                    final.n_injected, final.lat_sum, final.hop_sum,
+                    final.hop_max, tel,
+                )
 
         self._core = core
         self._run1 = jax.jit(core)
@@ -127,7 +196,10 @@ class SimEngine:
             in_axes=(0, None, None),
         ))
         self._lane_runner = None       # built lazily (multi-device only)
-        self.lane_backend = "vmap" if jax.local_device_count() == 1 else None
+        # resolved at construction on every host shape (the run manifest
+        # records it); _make_lane_runner can still downgrade shard_map ->
+        # pmap if the mesh build fails at dispatch time
+        self.lane_backend = default_lane_backend()
 
     # ------------------------------------------------------------- prepare
     def prepare(self, wl: Workload | PreparedWorkload) -> PreparedWorkload:
@@ -159,7 +231,8 @@ class SimEngine:
     ) -> SimResult:
         prep = self.prepare(wl)
         self.device_calls += 1
-        out = self._run1(prep.tables, jnp.int32(seed), jnp.int32(horizon))
+        with self._dispatch_span("run", lanes=1):
+            out = self._run1(prep.tables, jnp.int32(seed), jnp.int32(horizon))
         return self._to_result(out, prep)
 
     def run_batch(
@@ -192,11 +265,10 @@ class SimEngine:
             stacked = stack_tables([preps[i].tables for i in idxs])
             seed_arr = jnp.asarray([int(seeds[i]) for i in idxs], dtype=jnp.int32)
             self.device_calls += 1
-            outs = self._runN(stacked, seed_arr, jnp.int32(horizon))
+            with self._dispatch_span("run_batch", lanes=len(idxs)):
+                outs = self._runN(stacked, seed_arr, jnp.int32(horizon))
             for j, i in enumerate(idxs):
-                results[i] = self._to_result(
-                    tuple(o[j] for o in outs), preps[i]
-                )
+                results[i] = self._to_result(_index_outs(outs, j), preps[i])
         return results  # type: ignore[return-value]
 
     def run_batch_seeds(
@@ -219,10 +291,12 @@ class SimEngine:
         for idxs in groups.values():
             stacked = stack_tables([preps[i].tables for i in idxs])
             self.device_calls += 1
-            outs = self._runNS(stacked, seed_arr, jnp.int32(horizon))
+            with self._dispatch_span("run_batch_seeds",
+                                     lanes=len(idxs) * len(seeds)):
+                outs = self._runNS(stacked, seed_arr, jnp.int32(horizon))
             for j, i in enumerate(idxs):
                 results[i] = [
-                    self._to_result(tuple(o[j][k] for o in outs), preps[i])
+                    self._to_result(_index_outs(outs, (j, k)), preps[i])
                     for k in range(len(seeds))
                 ]
         return results  # type: ignore[return-value]
@@ -272,8 +346,8 @@ class SimEngine:
                     lambda x: x.reshape((ndev, per) + x.shape[1:]), stacked
                 )
                 outs = pfn(split, seed_arr.reshape(ndev, per), horizon)
-                return tuple(
-                    o.reshape((L,) + o.shape[2:]) for o in outs
+                return jax.tree_util.tree_map(
+                    lambda o: o.reshape((L,) + o.shape[2:]), outs
                 )
 
         return dispatch
@@ -317,10 +391,12 @@ class SimEngine:
             for idxs in groups.values():
                 stacked = stack_tables([preps[i].tables for i in idxs])
                 self.device_calls += 1
-                outs = self._runNS(stacked, seed_arr, jnp.int32(horizon))
+                with self._dispatch_span("run_grid",
+                                         lanes=len(idxs) * len(seeds)):
+                    outs = self._runNS(stacked, seed_arr, jnp.int32(horizon))
                 for j, i in enumerate(idxs):
                     results[i] = [
-                        self._to_result(tuple(o[j][k] for o in outs), preps[i])
+                        self._to_result(_index_outs(outs, (j, k)), preps[i])
                         for k in range(len(seeds))
                     ]
             return results  # type: ignore[return-value]
@@ -337,12 +413,13 @@ class SimEngine:
             seed_arr = jnp.asarray([int(seeds[k]) for _, k in lanes_p],
                                    dtype=jnp.int32)
             self.device_calls += 1
-            outs = self._lane_runner(stacked, seed_arr, jnp.int32(horizon))
+            with self._dispatch_span("run_grid", lanes=len(lanes_p)):
+                outs = self._lane_runner(stacked, seed_arr, jnp.int32(horizon))
             for lane, (i, k) in enumerate(lanes):
                 if results[i] is None:
                     results[i] = [None] * len(seeds)  # type: ignore[list-item]
                 results[i][k] = self._to_result(
-                    tuple(o[lane] for o in outs), preps[i]
+                    _index_outs(outs, lane), preps[i]
                 )
         return results  # type: ignore[return-value]
 
@@ -356,9 +433,10 @@ class SimEngine:
         prep = self.prepare(wl)
         seed_arr = jnp.asarray([int(s) for s in seeds], dtype=jnp.int32)
         self.device_calls += 1
-        outs = self._runS(prep.tables, seed_arr, jnp.int32(horizon))
+        with self._dispatch_span("run_seeds", lanes=len(seeds)):
+            outs = self._runS(prep.tables, seed_arr, jnp.int32(horizon))
         return [
-            self._to_result(tuple(o[j] for o in outs), prep)
+            self._to_result(_index_outs(outs, j), prep)
             for j in range(len(seeds))
         ]
 
@@ -387,7 +465,28 @@ class SimEngine:
         )
 
     # ------------------------------------------------------------ private
+    @contextlib.contextmanager
+    def _dispatch_span(self, api: str, lanes: int):
+        """Span one device dispatch (and flag fresh compiles) when a
+        tracer is active; a bare yield — no timing, no allocation — when
+        tracing is off."""
+        tracer = obs_trace.active()
+        if tracer is None:
+            yield
+            return
+        traces0 = self.trace_count
+        with tracer.span("engine.dispatch", api=api, mode=self.mode,
+                         lanes=lanes, backend=self.lane_backend):
+            yield
+        if self.trace_count > traces0:
+            tracer.event("engine.compile", api=api, mode=self.mode,
+                         traces=self.trace_count - traces0)
+
     def _to_result(self, out, prep: PreparedWorkload) -> SimResult:
+        tel = None
+        if self.telemetry is not None:
+            out, tel_state = out[:7], out[7]
+            tel = obs_probes.to_host(tel_state, self.telemetry, self.static)
         t, done, ndel, ninj, lat, hops, hmax = (np.asarray(x) for x in out)
         ndel = int(ndel)
         return SimResult(
@@ -399,16 +498,17 @@ class SimEngine:
             avg_hops=float(hops) / max(ndel, 1),
             completed=bool(done),
             max_hops=int(hmax),
+            telemetry=tel,
         )
 
 
 @functools.lru_cache(maxsize=None)
 def _engine_for(topo, mode, num_pools, max_deroutes, cap, penalty_packets,
-                bucket, arb, pack):
+                bucket, arb, pack, telemetry):
     return SimEngine(
         topo, mode=mode, num_pools=num_pools, max_deroutes=max_deroutes,
         cap=cap, penalty_packets=penalty_packets, bucket=bucket, arb=arb,
-        pack=pack,
+        pack=pack, telemetry=telemetry,
     )
 
 
@@ -422,6 +522,7 @@ def get_engine(
     bucket: bool = True,
     arb: str = "lax",
     pack: bool = True,
+    telemetry: TelemetrySpec | None = None,
 ) -> SimEngine:
     """Memoised engine lookup: one engine (and one compile) per config.
 
@@ -430,8 +531,11 @@ def get_engine(
     ``arb`` selects the switch-arbitration backend ("lax" | "pallas", bit
     identical); ``pack`` controls int8/int16 table packing (default on —
     ``False`` is the int32 reference layout for parity tests).
+    ``telemetry`` (a hashable :class:`~repro.obs.probes.TelemetrySpec`)
+    is part of the key: enabling probes builds a separate engine, leaving
+    every default-keyed consumer on the untouched kernel.
     """
     return _engine_for(
         topo, mode, num_pools, max_deroutes, cap, penalty_packets, bucket,
-        arb, pack,
+        arb, pack, telemetry,
     )

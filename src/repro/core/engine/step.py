@@ -36,6 +36,7 @@ import jax.numpy as jnp
 from repro.core.engine.arb import make_arbiter
 from repro.core.engine.tables import StaticTables
 from repro.core.engine.workload_tables import WorkloadTables
+from repro.obs.probes import TelemetrySpec, TelemetryState
 from repro.route import get_policy
 
 I32 = jnp.int32
@@ -102,8 +103,20 @@ def all_done(wt: WorkloadTables, state: SimState) -> jnp.ndarray:
 
 def build_step(
     st: StaticTables,
+    telemetry: TelemetrySpec | None = None,
 ) -> Callable[[SimState, WorkloadTables], SimState]:
-    """Return the cycle kernel for one static configuration."""
+    """Return the cycle kernel for one static configuration.
+
+    With ``telemetry=None`` (the default) the kernel is byte-for-byte the
+    pre-telemetry step: ``step(state, wt) -> state``.  With a
+    :class:`~repro.obs.probes.TelemetrySpec` the kernel operates on a
+    ``(SimState, TelemetryState)`` carry and additionally accumulates the
+    spec's windowed probes from the cycle's internal signals — grant
+    counts per output port, queue-occupancy samples, deroute/escalation
+    grants, and delivery latencies.  The probe updates are pure extra
+    scatters appended after the physics; the simulated trajectory is
+    bit-identical either way (pinned in ``tests/test_obs.py``).
+    """
     S, E, IN, OUT = st.S, st.E, st.IN, st.OUT
     P, V, NQ, H, CAP = st.P, st.V, st.NQ, st.H, st.CAP
     q, n, conc, m, PEN = st.q, st.n, st.conc, st.m, st.PEN
@@ -123,8 +136,13 @@ def build_step(
     BIGCOST = jnp.int32(1 << 28)
     OOB = jnp.int32(NQ * CAP + 5)  # safely out of bounds => dropped scatters
     NOMID = jnp.int32(S)           # f_imd sentinel: no (remaining) intermediate
+    spec = telemetry
 
-    def step(state: SimState, wt: WorkloadTables) -> SimState:
+    def step(carry, wt: WorkloadTables):
+        if spec is None:
+            state: SimState = carry
+        else:
+            state, tel = carry
         R, T = wt.R, wt.T
         MAXD = wt.D
         t = state.t
@@ -299,9 +317,9 @@ def build_step(
             jnp.where(eject, recv_row * T + pstep, OOB_RT)
         ].add(1, mode="drop")
         tgt_del = eject & src_finite
-        lat_sum = state.lat_sum + jnp.sum(
-            jnp.where(tgt_del, (t - state.f_birth[slot]).astype(jnp.float32), 0.0)
-        )
+        lat_pkt = (t - state.f_birth[slot]).astype(jnp.float32)
+        lat_add = jnp.sum(jnp.where(tgt_del, lat_pkt, 0.0))
+        lat_sum = state.lat_sum + lat_add
         hop_sum = state.hop_sum + jnp.sum(jnp.where(tgt_del, hop, 0))
         n_delivered = state.n_delivered + jnp.sum(tgt_del)
         # every ejection bounds the VC invariant, background included
@@ -448,7 +466,7 @@ def build_step(
         dst_i = state.dst_i.at[upd].set(di2, mode="drop")
         pkt_i = state.pkt_i.at[upd].set(pk2, mode="drop")
 
-        return SimState(
+        new_state = SimState(
             t=t + 1, key=state.key,
             f_dst=f_dst, f_der=f_der, f_hop=f_hop, f_rank=f_rank,
             f_step=f_step, f_birth=f_birth, f_imd=f_imd,
@@ -458,5 +476,47 @@ def build_step(
             lat_sum=lat_sum, n_delivered=n_delivered, n_injected=n_injected,
             hop_sum=hop_sum, hop_max=hop_max,
         )
+        if spec is None:
+            return new_state
+
+        # ------------- telemetry probes (enabled engines only) -------------
+        # Pure extra accumulation from this cycle's internal signals; none
+        # of it feeds back into the physics above.  Window index clamps so
+        # cycles past n_windows * window accumulate into the last window.
+        wi = jnp.minimum(t // spec.window, spec.n_windows - 1)
+        net_move = won & ~at_dst
+        # non-minimal moves actually granted, and the subset that were
+        # forced fault-escapes (the escalation candidate set at the port
+        # the winner took)
+        chosen = jnp.minimum(jnp.where(won2, best2, best), q * n - 1)
+        esc_chosen = jnp.take_along_axis(escalate, chosen[:, None], 1)[:, 0]
+        # per-pool occupancy histogram: one sample of every queue per cycle
+        occ_hist = jnp.zeros(P * (CAP + 1), dtype=I32).at[
+            h_pool.astype(I32) * (CAP + 1) + qlen
+        ].add(1)
+        # log2 ejection-latency bin per delivered target packet
+        lat_bin = jnp.clip(
+            jnp.floor(jnp.log2(jnp.maximum(lat_pkt, 1.0))).astype(I32),
+            0, spec.lat_bins - 1,
+        )
+        tel = TelemetryState(
+            link_util=tel.link_util.at[wi].add((g1 + g2).reshape(S, OUT)),
+            vc_occ=tel.vc_occ.at[wi].add(occ_hist),
+            deroutes=tel.deroutes.at[wi].add(
+                jnp.sum(net_move & ~best_min)
+            ),
+            escalations=tel.escalations.at[wi].add(
+                jnp.sum(net_move & esc_chosen)
+            ),
+            inflight=tel.inflight.at[wi].add(jnp.sum(qlen)),
+            cycles=tel.cycles.at[wi].add(1),
+            injected=tel.injected.at[wi].add(jnp.sum(do_inj)),
+            delivered=tel.delivered.at[wi].add(jnp.sum(tgt_del)),
+            lat_sum=tel.lat_sum.at[wi].add(lat_add),
+            lat_hist=tel.lat_hist.at[
+                jnp.where(tgt_del, lat_bin, spec.lat_bins + 1)
+            ].add(1, mode="drop"),
+        )
+        return new_state, tel
 
     return step

@@ -1,0 +1,42 @@
+"""Observability subsystem: in-sim telemetry, run tracing, fleet reports.
+
+Three layers (DESIGN.md §Observability):
+
+  * :mod:`.probes` — :class:`TelemetrySpec` / :class:`Telemetry`: static
+    probe specs that join the engine compile key (default off = the
+    bit-identical pre-telemetry kernel) and the windowed time series the
+    enabled kernel accumulates (per-link/per-dimension utilization,
+    per-pool queue-occupancy histograms, deroute/escalation counts,
+    in-flight population, ejection-latency histograms);
+  * :mod:`.trace` — host-side span/event JSONL logging + run manifest,
+    zero-cost when no tracer is configured;
+  * :mod:`.report` — renders a trace directory into CSV tables and a
+    markdown fleet report (``python -m repro.obs.report TRACE_DIR``).
+"""
+
+from repro.obs import trace
+from repro.obs.probes import (
+    Telemetry,
+    TelemetrySpec,
+    TelemetryState,
+    init_telemetry,
+)
+
+
+def __getattr__(name):
+    # lazy: `python -m repro.obs.report` would otherwise warn that the
+    # module is already in sys.modules before runpy executes it
+    if name == "report":
+        import importlib
+
+        return importlib.import_module("repro.obs.report")
+    raise AttributeError(f"module 'repro.obs' has no attribute {name!r}")
+
+__all__ = [
+    "Telemetry",
+    "TelemetrySpec",
+    "TelemetryState",
+    "init_telemetry",
+    "report",
+    "trace",
+]

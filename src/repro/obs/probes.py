@@ -1,0 +1,246 @@
+"""In-sim telemetry probes: static spec, device accumulators, host view.
+
+The probe layer has three pieces, mirroring the engine's static/dynamic
+split:
+
+  * :class:`TelemetrySpec` — a frozen, hashable description of *what* to
+    accumulate (window count / length, latency bins).  It is part of the
+    engine compile key (``SimEngine(..., telemetry=spec)`` /
+    ``get_engine``'s memo key), so enabling telemetry builds a *different*
+    jitted step — the default ``telemetry=None`` engine is byte-for-byte
+    the pre-telemetry kernel: identical trace counts and bit-identical
+    outputs (pinned in ``tests/test_obs.py``).
+  * :class:`TelemetryState` — the device accumulators, a NamedTuple pytree
+    that rides in the ``lax.while_loop`` carry next to ``SimState``.  Every
+    leaf has a static shape derived from the spec + static tables, so
+    telemetry survives ``vmap`` / ``shard_map`` lanes exactly like the
+    base outputs (``run_grid`` just gains extra leading batch axes).
+  * :class:`Telemetry` — the host-side view attached to
+    ``SimResult.telemetry``: numpy arrays plus derived accessors
+    (per-link / per-dimension utilization, hottest links, occupancy
+    histograms, latency series) and a compact JSON-able :meth:`summary`
+    for the trace log.
+
+Window semantics: cycle ``t`` lands in window ``min(t // window,
+n_windows - 1)`` — the last window absorbs any overflow past
+``n_windows * window`` cycles, and the per-window ``cycles`` counter
+records how many cycles actually accumulated there, so normalisation is
+exact even for the partial final window.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax.numpy as jnp
+import numpy as np
+
+I32 = jnp.int32
+
+
+@dataclasses.dataclass(frozen=True)
+class TelemetrySpec:
+    """Static description of the in-sim probes (part of the compile key).
+
+    n_windows — number of time windows in every windowed series;
+    window    — packet-times per window (last window absorbs overflow);
+    lat_bins  — log2 buckets of the ejection-latency histogram
+                (bin b counts latencies in [2^b, 2^(b+1)), clamped).
+    """
+
+    n_windows: int = 64
+    window: int = 256
+    lat_bins: int = 16
+
+    def __post_init__(self):
+        if self.n_windows < 1 or self.window < 1 or self.lat_bins < 1:
+            raise ValueError(f"degenerate TelemetrySpec {self}")
+
+
+class TelemetryState(NamedTuple):
+    """Device accumulators (W = n_windows; all int32 unless noted)."""
+
+    link_util: jnp.ndarray    # (W, S, OUT) grants per output port per window
+    vc_occ: jnp.ndarray       # (W, P*(CAP+1)) per-pool occupancy histogram,
+                              # one sample of every queue per cycle
+    deroutes: jnp.ndarray     # (W,) non-minimal moves granted
+    escalations: jnp.ndarray  # (W,) forced fault-escape deroutes granted
+    inflight: jnp.ndarray     # (W,) sum over cycles of in-network packets
+    cycles: jnp.ndarray       # (W,) cycles accumulated into each window
+    injected: jnp.ndarray     # (W,) packets injected
+    delivered: jnp.ndarray    # (W,) target packets delivered
+    lat_sum: jnp.ndarray      # (W,) float32 latency sum of deliveries
+    lat_hist: jnp.ndarray     # (lat_bins,) log2 ejection-latency histogram
+
+
+def init_telemetry(
+    spec: TelemetrySpec, S: int, OUT: int, P: int, CAP: int
+) -> TelemetryState:
+    """Zeroed accumulators for one run (shapes static under jit)."""
+    W = spec.n_windows
+
+    def z(shape, dtype=I32):
+        return jnp.zeros(shape, dtype=dtype)
+
+    return TelemetryState(
+        link_util=z((W, S, OUT)),
+        vc_occ=z((W, P * (CAP + 1))),
+        deroutes=z(W),
+        escalations=z(W),
+        inflight=z(W),
+        cycles=z(W),
+        injected=z(W),
+        delivered=z(W),
+        lat_sum=z(W, dtype=jnp.float32),
+        lat_hist=z(spec.lat_bins),
+    )
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class Telemetry:
+    """Host-side telemetry view (attached to ``SimResult.telemetry``).
+
+    Arrays are numpy; ``q``/``n``/``conc`` and the ``port_dim``/``port_val``
+    maps come from the engine's static tables so links can be named.
+    Network output ports are ``0 .. q*n-1``; ports ``q*n .. OUT-1`` are
+    ejection ports (utilization accessors exclude them unless asked).
+    """
+
+    spec: TelemetrySpec
+    S: int
+    OUT: int
+    P: int
+    CAP: int
+    q: int
+    n: int
+    conc: int
+    port_dim: np.ndarray      # (q*n,) dimension addressed by each net port
+    port_val: np.ndarray      # (q*n,) coordinate value addressed
+    link_util: np.ndarray     # (W, S, OUT)
+    vc_occ: np.ndarray        # (W, P, CAP+1)
+    deroutes: np.ndarray      # (W,)
+    escalations: np.ndarray   # (W,)
+    inflight: np.ndarray      # (W,)
+    cycles: np.ndarray        # (W,)
+    injected: np.ndarray      # (W,)
+    delivered: np.ndarray     # (W,)
+    lat_sum: np.ndarray       # (W,)
+    lat_hist: np.ndarray      # (lat_bins,)
+
+    # ------------------------------------------------------------- derived
+    @property
+    def total_cycles(self) -> int:
+        return int(self.cycles.sum())
+
+    @property
+    def net_ports(self) -> int:
+        return self.q * self.n
+
+    def link_utilization(self, include_ejection: bool = False) -> np.ndarray:
+        """(S, ports) fraction of cycles each output link carried a packet
+        (sustained rate is 1 pkt/cycle; the 2x crossbar speedup can push
+        individual windows slightly above 1)."""
+        tot = max(self.total_cycles, 1)
+        util = self.link_util.sum(axis=0) / tot
+        return util if include_ejection else util[:, : self.net_ports]
+
+    def link_series(self) -> np.ndarray:
+        """(W, S, net_ports) per-window network-link utilization."""
+        cyc = np.maximum(self.cycles, 1)[:, None, None]
+        return self.link_util[:, :, : self.net_ports] / cyc
+
+    def dim_utilization(self) -> np.ndarray:
+        """(q,) mean network-link utilization per HyperX dimension."""
+        util = self.link_utilization()
+        return np.asarray([
+            util[:, self.port_dim == d].mean() for d in range(self.q)
+        ])
+
+    def hottest_links(self, k: int = 5) -> list[dict]:
+        """Top-k network links by total grants, as labelled rows."""
+        util = self.link_utilization()
+        grants = self.link_util.sum(axis=0)[:, : self.net_ports]
+        flat = np.argsort(util, axis=None)[::-1][:k]
+        rows = []
+        for f in flat:
+            s, p = int(f // self.net_ports), int(f % self.net_ports)
+            rows.append({
+                "switch": s,
+                "port": p,
+                "dim": int(self.port_dim[p]),
+                "val": int(self.port_val[p]),
+                "grants": int(grants[s, p]),
+                "util": round(float(util[s, p]), 4),
+            })
+        return rows
+
+    def queue_occupancy(self) -> np.ndarray:
+        """(P, CAP+1) occupancy histogram summed over all windows."""
+        return self.vc_occ.sum(axis=0)
+
+    def mean_inflight(self) -> np.ndarray:
+        """(W,) mean in-network packet population per window."""
+        return self.inflight / np.maximum(self.cycles, 1)
+
+    def mean_latency(self) -> np.ndarray:
+        """(W,) mean delivery latency per window (NaN where idle)."""
+        with np.errstate(invalid="ignore", divide="ignore"):
+            return np.where(
+                self.delivered > 0, self.lat_sum / np.maximum(self.delivered, 1),
+                np.nan,
+            )
+
+    # ------------------------------------------------------------- summary
+    def summary(self, label: str = "", top_links: int = 32) -> dict:
+        """Compact JSON-able digest for the trace event log."""
+        util = self.link_utilization()
+        series = self.link_series().mean(axis=(1, 2))
+        occ = self.queue_occupancy()
+        return {
+            "label": label,
+            "cycles": self.total_cycles,
+            "windows": int((self.cycles > 0).sum()),
+            "window_len": self.spec.window,
+            "util_mean": round(float(util.mean()), 5),
+            "util_max": round(float(util.max()), 5),
+            "dim_util": [round(float(u), 5) for u in self.dim_utilization()],
+            "util_series": [round(float(u), 5) for u in series],
+            "top_links": self.hottest_links(top_links),
+            "occ_hist": occ.astype(int).tolist(),
+            "inflight_mean": [round(float(x), 2) for x in self.mean_inflight()],
+            "deroutes": int(self.deroutes.sum()),
+            "escalations": int(self.escalations.sum()),
+            "injected": int(self.injected.sum()),
+            "delivered": int(self.delivered.sum()),
+            "lat_hist": self.lat_hist.astype(int).tolist(),
+            "lat_mean": round(
+                float(self.lat_sum.sum()) / max(int(self.delivered.sum()), 1), 3
+            ),
+        }
+
+
+def to_host(tel: TelemetryState, spec: TelemetrySpec, st) -> Telemetry:
+    """Materialise device accumulators into the host view.
+
+    ``st`` is the engine's :class:`~repro.core.engine.tables.StaticTables`
+    (duck-typed here to avoid an import cycle: obs must not import the
+    engine at module scope)."""
+    return Telemetry(
+        spec=spec, S=st.S, OUT=st.OUT, P=st.P, CAP=st.CAP,
+        q=st.q, n=st.n, conc=st.conc,
+        port_dim=np.asarray(st.port_dim, dtype=np.int64),
+        port_val=np.asarray(st.port_val, dtype=np.int64),
+        link_util=np.asarray(tel.link_util),
+        vc_occ=np.asarray(tel.vc_occ).reshape(
+            spec.n_windows, st.P, st.CAP + 1
+        ),
+        deroutes=np.asarray(tel.deroutes),
+        escalations=np.asarray(tel.escalations),
+        inflight=np.asarray(tel.inflight),
+        cycles=np.asarray(tel.cycles),
+        injected=np.asarray(tel.injected),
+        delivered=np.asarray(tel.delivered),
+        lat_sum=np.asarray(tel.lat_sum),
+        lat_hist=np.asarray(tel.lat_hist),
+    )

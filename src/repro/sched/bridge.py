@@ -30,6 +30,7 @@ import numpy as np
 from repro.core.engine import SimResult, get_engine
 from repro.core.engine.workload_tables import shape_bucket
 from repro.core.hyperx import HyperX
+from repro.obs import trace as obs_trace
 from repro.route import apply_faults, faults_from_endpoints
 from repro.sched.scheduler import Snapshot
 from repro.traffic import AppSpec, ScenarioSpec, build_workload, get_pattern
@@ -126,7 +127,9 @@ def evaluate_snapshots(
     traces0, calls0 = engine.trace_count, engine.device_calls
     # device-sharded lanes: on a multi-device host the snapshot x seed grid
     # splits across devices; on one device this is the nested-vmap call
-    per_wl = engine.run_grid(workloads, seeds=seeds, horizon=horizon)
+    with obs_trace.span("bridge.evaluate_snapshots", mode=mode,
+                        workloads=len(workloads), seeds=len(seeds)):
+        per_wl = engine.run_grid(workloads, seeds=seeds, horizon=horizon)
     rows = []
     for key, snap, wl, per_seed in zip(keys, snaps, workloads, per_wl):
         bucket = shape_bucket(wl.R, wl.T, wl.maxd)

@@ -23,6 +23,13 @@ time (a requeue).
 At every successful placement the scheduler snapshots the co-resident job
 set; :mod:`repro.sched.bridge` turns those snapshots into batched SimEngine
 evaluations.
+
+When a :mod:`repro.obs.trace` tracer is active, the event loop emits
+structured ``sched.*`` events (arrive / start / backfill flag / depart /
+fail / migrate / requeue / repair), fragmentation gauges at every
+scheduling pass, and a final per-stream summary — the fleet report
+generator aggregates these into the fragmentation/churn tables.  With no
+tracer configured the loop pays a single global check per event.
 """
 
 from __future__ import annotations
@@ -36,6 +43,7 @@ import numpy as np
 from repro.core.allocation import Partition
 from repro.core.hyperx import HyperX
 from repro.core.properties import has_switch_locality, partition_bandwidth
+from repro.obs import trace as obs_trace
 from repro.sched.jobs import Job
 from repro.sched.ledger import BlockLedger
 from repro.sched.metrics import JobRecord, StreamResult
@@ -122,6 +130,8 @@ class OnlineScheduler:
                 )
                 seq += 1
 
+        stream = f"{ledger.strategy.name}/{ledger.policy}"
+
         queue: list[Job] = []
         running: dict[int, dict] = {}  # jid -> {job, finish}
         gens: dict[int, int] = {}      # jid -> placement generation
@@ -174,7 +184,7 @@ class OnlineScheduler:
                 ),
             ))
 
-        def start(job: Job, now: float) -> bool:
+        def start(job: Job, now: float, backfilled: bool = False) -> bool:
             try:
                 ledger.place(job.blocks, job_id=job.job_id)
             except RuntimeError:
@@ -183,6 +193,12 @@ class OnlineScheduler:
             if rec.start is None:
                 rec.start = now
                 rec.wait = now - rec.arrival
+            obs_trace.event(
+                "sched.start", stream=stream, job=job.job_id, t_sim=now,
+                blocks=job.blocks, wait=round(now - rec.arrival, 4),
+                backfilled=backfilled,
+                scattered=not ledger.jobs[job.job_id].contiguous,
+            )
             nonlocal seq
             gen = gens.get(job.job_id, 0) + 1
             gens[job.job_id] = gen
@@ -226,7 +242,7 @@ class OnlineScheduler:
                         now + cand.service <= shadow + 1e-9
                         or free_now - cand.blocks + freed_by_shadow >= head.blocks
                     )
-                    if fits_reservation and start(cand, now):
+                    if fits_reservation and start(cand, now, backfilled=True):
                         queue.remove(cand)
                 break
 
@@ -237,6 +253,9 @@ class OnlineScheduler:
                 advance(now)
                 if kind == "arrive":
                     queue.append(payload)
+                    obs_trace.event("sched.arrive", stream=stream,
+                                    job=payload.job_id, t_sim=now,
+                                    blocks=payload.blocks)
                 elif kind == "depart":
                     jid, gen = payload
                     if jid not in running or gens.get(jid) != gen:
@@ -244,8 +263,13 @@ class OnlineScheduler:
                     del running[jid]
                     ledger.release(jid)
                     records[jid].finish = now
+                    obs_trace.event("sched.depart", stream=stream, job=jid,
+                                    t_sim=now)
                 elif kind == "fail":
                     affected = ledger.fail_endpoints(np.asarray(payload.endpoints))
+                    obs_trace.event("sched.fail", stream=stream, t_sim=now,
+                                    endpoints=len(payload.endpoints),
+                                    affected_jobs=len(affected))
                     for jid in affected:
                         if jid not in running:
                             continue
@@ -257,6 +281,8 @@ class OnlineScheduler:
                             # realized metrics and snapshot the machine
                             analyze_placement(jid)
                             take_snapshot(now, jid)
+                            obs_trace.event("sched.migrate", stream=stream,
+                                            job=jid, t_sim=now)
                         except RuntimeError:
                             # evicted: back to the queue head with the
                             # remaining service time
@@ -267,13 +293,29 @@ class OnlineScheduler:
                             queue.insert(0, dataclasses.replace(
                                 info["job"], service=remaining,
                             ))
+                            obs_trace.event("sched.requeue", stream=stream,
+                                            job=jid, t_sim=now)
                 elif kind == "repair":
                     ledger.repair_endpoints(np.asarray(payload.endpoints))
+                    obs_trace.event("sched.repair", stream=stream, t_sim=now,
+                                    endpoints=len(payload.endpoints))
             schedule(now)
+            if obs_trace.active() is not None:
+                obs_trace.gauge("sched.frag", round(ledger.fragmentation(), 6),
+                                stream=stream, t_sim=now,
+                                running=len(running), queued=len(queue))
             if check_invariants:
                 ledger.check_conservation()
 
         span = max(last_t, 1e-9)
+        obs_trace.event(
+            "sched.summary", stream=stream, jobs=len(jobs),
+            snapshots=len(snapshots), span=round(span, 4),
+            utilization=round(busy / (E * span), 6),
+            frag_mean=round(frag_int / span, 6),
+            frag_max=round(frag_max, 6),
+            mean_queue=round(queue_int / span, 6),
+        )
         return StreamResult(
             strategy=ledger.strategy.name,
             policy=ledger.policy,

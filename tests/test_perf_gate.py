@@ -67,6 +67,34 @@ def test_main_exits_nonzero_on_synthetic_regression(tmp_path, monkeypatch):
     assert rc == 0
 
 
+def test_compare_missing_baseline_fails_fast(tmp_path, monkeypatch, capsys):
+    """A missing baseline exits with the distinct bad-baseline code and a
+    one-line error BEFORE any measurement runs."""
+    def boom(*a, **k):
+        raise AssertionError("run_suite must not run with a bad baseline")
+    monkeypatch.setattr(perf, "run_suite", boom)
+    rc = perf.main(["--quick", "--out", str(tmp_path / "o.json"),
+                    "--compare", str(tmp_path / "nope.json")])
+    assert rc == perf.EXIT_BAD_BASELINE
+    assert rc != perf.EXIT_REGRESSION
+    err = capsys.readouterr().err
+    assert "cannot read baseline" in err and len(err.strip().splitlines()) == 1
+
+
+@pytest.mark.parametrize("payload", ["{not json", '{"schema": 1}', '[1,2]'])
+def test_compare_corrupt_baseline_fails_fast(tmp_path, monkeypatch, capsys,
+                                             payload):
+    base = tmp_path / "BENCH_bad.json"
+    base.write_text(payload)
+    monkeypatch.setattr(
+        perf, "run_suite",
+        lambda *a, **k: (_ for _ in ()).throw(AssertionError("measured")))
+    rc = perf.main(["--quick", "--out", str(tmp_path / "o.json"),
+                    "--compare", str(base)])
+    assert rc == perf.EXIT_BAD_BASELINE
+    assert "baseline" in capsys.readouterr().err
+
+
 def test_main_writes_bench_json_and_baseline(tmp_path, monkeypatch):
     monkeypatch.setattr(perf, "run_suite",
                         lambda quick=True, grids=None, arb="lax":

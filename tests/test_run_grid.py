@@ -11,7 +11,7 @@ import pytest
 
 from repro.core import traffic as tr
 from repro.core.allocation import allocate_partition
-from repro.core.engine import SimEngine
+from repro.core.engine import SimEngine, default_lane_backend
 from repro.core.hyperx import HyperX
 
 SMALL = HyperX(n=4, q=2)
@@ -65,6 +65,18 @@ def test_run_grid_compiles_once_per_shape_bucket():
     assert engine.device_calls == 4
 
 
+def test_lane_backend_reported_at_construction():
+    """Regression pin: ``lane_backend`` must be populated from engine
+    construction, not lazily after the first ``run_grid`` — on a
+    single-device host it is "vmap" immediately and stays "vmap"."""
+    engine = SimEngine(SMALL, mode="omniwar")
+    assert engine.lane_backend == default_lane_backend()
+    assert engine.lane_backend is not None
+    before = engine.lane_backend
+    engine.run_grid([_a2a_workload("row")], horizon=5000)
+    assert engine.lane_backend == before
+
+
 _SHARDED_SCRIPT = """
 import json
 import jax
@@ -82,11 +94,14 @@ wls = [
     for s in ("row", "diagonal", "full_spread")  # 3 x 2 lanes: needs padding
 ]
 engine = SimEngine(SMALL, mode="omniwar")
+pre_backend = engine.lane_backend  # populated at construction (no run yet)
 grid = engine.run_grid(wls, seeds=(0, 7), horizon=5000)
 print(json.dumps({
+    "pre_backend": pre_backend,
     "backend": engine.lane_backend,
     "traces": engine.trace_count,
-    "grid": [[r.__dict__ for r in per_seed] for per_seed in grid],
+    "grid": [[{k: v for k, v in r.__dict__.items() if k != "telemetry"}
+              for r in per_seed] for per_seed in grid],
 }))
 """
 
@@ -104,10 +119,14 @@ def test_run_grid_sharded_matches_single_device():
     assert r.returncode == 0, r.stderr
     payload = json.loads(r.stdout.strip().splitlines()[-1])
     assert payload["backend"] in ("shard_map", "pmap")
+    # lane_backend is reported from construction and the first run_grid
+    # must dispatch through that same backend
+    assert payload["pre_backend"] == payload["backend"]
     assert payload["traces"] == 1  # SPMD: still one trace for the bucket
 
     engine = SimEngine(SMALL, mode="omniwar")
     wls = [_a2a_workload(s) for s in ("row", "diagonal", "full_spread")]
     ref = engine.run_grid(wls, seeds=(0, 7), horizon=5000)
-    assert payload["grid"] == [[r.__dict__ for r in per_seed]
-                               for per_seed in ref]
+    assert payload["grid"] == [
+        [{k: v for k, v in r.__dict__.items() if k != "telemetry"}
+         for r in per_seed] for per_seed in ref]
