@@ -1,0 +1,129 @@
+"""Resilience grid: fault-rate x MTTR x strategy x routing under churn.
+
+Unlike ``routing_grid`` (static dead cables), every faulty cell here runs
+a *time-varying* failure-and-repair campaign: seeded exponential
+MTBF/MTTR lifetimes over a sampled cable set, lowered to an engine epoch
+schedule (:mod:`repro.resil`).  Per cell the grid reports
+
+  * ``delivered_frac`` — delivered / offered target packets (1.0 when the
+    run completes; under churn, how much traffic survived the horizon);
+  * ``slowdown``       — makespan vs the same strategy/routing fault-free
+    baseline;
+  * ``blast_radius``   — fraction of fault epochs whose delivered/injected
+    ratio collapsed below half the best epoch's (how far the damage
+    spreads in time);
+  * ``reescalated`` / ``stranded`` — forced fault-escape deroutes granted
+    and packets still queued at the horizon.
+
+Epoch schedules ride in the workload tables, so the whole
+strategy x campaign x seed grid still batches per shape bucket; one
+campaign per (rate, mttr) pair is shared by every strategy and routing,
+making deltas pure placement/routing effects.
+"""
+
+from benchmarks.common import (
+    PAPER_TOPO,
+    STRATEGIES,
+    emit,
+    interference_workload,
+    resolve_quick,
+    summarize,
+    sweep,
+)
+
+from repro.resil import apply_schedule, exponential_lifetimes, sample_components, to_epoch_schedule
+from repro.route import is_connected
+
+CAMPAIGN_SEED = 77
+MTBF = 40.0             # cycles a churning cable stays up (mean)
+
+
+def _campaign(n_links: int, mttr: float, horizon: int):
+    """One seeded fail/repair schedule shared across the whole grid cell."""
+    comps = sample_components(PAPER_TOPO, n_links=n_links, seed=CAMPAIGN_SEED)
+    events = exponential_lifetimes(
+        comps, mtbf=MTBF, mttr=mttr, horizon=horizon, seed=CAMPAIGN_SEED,
+    )
+    sched = to_epoch_schedule(PAPER_TOPO, events, max_epochs=16)
+    for mask in sched.link_ok:
+        assert is_connected(PAPER_TOPO, mask), "campaign disconnected machine"
+    return sched
+
+
+def blast_radius(per_seed) -> float:
+    """Worst-seed fraction of active epochs that collapsed below half the
+    best epoch's delivered/injected ratio."""
+    worst = 0.0
+    for r in per_seed:
+        ratios = [d / i for d, i in zip(r.epoch_delivered, r.epoch_injected)
+                  if i > 0]
+        if len(ratios) <= 1:
+            continue
+        lo = 0.5 * max(ratios)
+        worst = max(worst, sum(x < lo for x in ratios) / len(ratios))
+    return round(worst, 4)
+
+
+def run(quick=None):
+    quick = resolve_quick(quick)
+    strategies = ("diagonal", "rectangular") if quick else STRATEGIES
+    routings = ("min", "omniwar") if quick else ("min", "val", "ugal", "omniwar")
+    n_links = (24,) if quick else (24, 64)       # cables under churn
+    mttrs = (60.0,) if quick else (30.0, 120.0)
+    kind = "all_to_all"
+    horizon = 6_000 if quick else 10_000
+    # campaign horizon tracks the longest baseline makespan, not the sim
+    # horizon: epochs past completion would never be observed
+    span = 800 if quick else 1_500
+
+    base = {s: interference_workload(s, kind, with_bg=False)
+            for s in strategies}
+    # one fault-free baseline cell + one campaign per (rate, mttr) pair
+    cells = [(0, 0.0, None)] + [
+        (nl, mttr, _campaign(nl, mttr, span))
+        for nl in n_links if nl > 0 for mttr in mttrs
+    ]
+
+    rows = []
+    for mode in routings:
+        wls, grid = [], []   # (strategy, nl, mttr) in workload order
+        for strat in strategies:
+            for nl, mttr, sched in cells:
+                wl = base[strat]
+                if sched is not None:
+                    wl = apply_schedule(wl, sched)
+                wls.append(wl)
+                grid.append((strat, nl, mttr))
+        per_wl = sweep(wls, mode=mode, horizon=horizon)
+        baselines = {
+            strat: s["makespan"]
+            for (strat, nl, _), per_seed in zip(grid, per_wl)
+            if nl == 0
+            for s in (summarize(per_seed),)
+        }
+        for (strat, nl, mttr), per_seed in zip(grid, per_wl):
+            s = summarize(per_seed)
+            offered = base[strat].target_packets
+            dfrac = min(r.delivered / max(offered, 1) for r in per_seed)
+            base_ms = baselines.get(strat, -1)
+            slowdown = (
+                round(s["makespan"] / base_ms, 3)
+                if s["makespan"] > 0 and base_ms and base_ms > 0 else -1.0
+            )
+            rows.append({
+                "routing": mode, "strategy": strat,
+                "churn_links": nl, "mttr": mttr if nl else 0.0,
+                "makespan": s["makespan"],
+                "delivered_frac": round(dfrac, 4),
+                "slowdown": slowdown,
+                "blast_radius": blast_radius(per_seed),
+                "reescalated": max(r.reescalated for r in per_seed),
+                "stranded": max(r.stranded for r in per_seed),
+                "completed": s["completed"],
+            })
+    emit(rows, "resilience_grid (routing x strategy x churn x mttr)")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

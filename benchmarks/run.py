@@ -32,6 +32,7 @@ rendered at the end.
 import argparse
 import sys
 import time
+import traceback
 
 
 MODULES = [
@@ -44,6 +45,7 @@ MODULES = [
     "fig11_fabric_partitioning",
     "routing_grid",
     "traffic_grid",
+    "resilience_grid",
     "sched_stream",
     "collective_sim_bench",
     "roofline_bench",
@@ -97,14 +99,24 @@ def main(argv=None):
     mods = [m for m in MODULES if args.only is None or args.only in m]
     t00 = time.time()
     timings: list[tuple[str, float]] = []
+    failures: list[tuple[str, str]] = []
     try:
         for name in mods:
-            mod = __import__(f"benchmarks.{name}", fromlist=["run"])
+            # one raising module must not abort the suite: record it,
+            # keep going, and make the whole run exit nonzero at the end
             t0 = time.time()
-            with obs_trace.span(f"bench.{name}"):
-                mod.run(quick=quick)
+            try:
+                mod = __import__(f"benchmarks.{name}", fromlist=["run"])
+                with obs_trace.span(f"bench.{name}"):
+                    mod.run(quick=quick)
+            except Exception as e:
+                failures.append((name, f"{type(e).__name__}: {e}"))
+                traceback.print_exc()
+                print(f"# [{name}] FAILED: {type(e).__name__}: {e}\n")
+                obs_trace.event("bench.failed", module=name, error=str(e))
             timings.append((name, time.time() - t0))
-            print(f"# [{name}] {timings[-1][1]:.1f}s\n")
+            if not failures or failures[-1][0] != name:
+                print(f"# [{name}] {timings[-1][1]:.1f}s\n")
         if args.trace:
             # telemetry-enabled probe grid: the per-link utilization /
             # latency series the fleet report renders into heatmap tables
@@ -119,11 +131,17 @@ def main(argv=None):
         print(f"# trace report: {paths['report']}")
     total = time.time() - t00
     # wall-time summary: where the suite's time actually goes, slowest first
+    failed = {name for name, _ in failures}
     print("# timing summary (wall s)")
     for name, t in sorted(timings, key=lambda it: -it[1]):
-        print(f"#   {name:<28s} {t:7.1f}s  {100 * t / max(total, 1e-9):5.1f}%")
-    print(f"# total {total:.1f}s over {len(timings)} modules")
-    return 0
+        flag = "  FAILED" if name in failed else ""
+        print(f"#   {name:<28s} {t:7.1f}s  "
+              f"{100 * t / max(total, 1e-9):5.1f}%{flag}")
+    print(f"# total {total:.1f}s over {len(timings)} modules"
+          + (f", {len(failures)} FAILED" if failures else ""))
+    for name, err in failures:
+        print(f"# FAILED {name}: {err}")
+    return 1 if failures else 0
 
 
 if __name__ == "__main__":

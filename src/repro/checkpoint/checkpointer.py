@@ -64,6 +64,7 @@ class Checkpointer:
         self.keep_n = keep_n
         self.async_save = async_save
         self._thread: threading.Thread | None = None
+        self._error: BaseException | None = None
         os.makedirs(directory, exist_ok=True)
 
     # ------------------------------------------------------------- save
@@ -71,13 +72,23 @@ class Checkpointer:
         flat = _flatten(tree)
         host = {k: np.asarray(jax.device_get(v)) for k, v in flat.items()}
         if self.async_save:
+            # joins the previous save AND surfaces its failure here — a
+            # background _write that died must not stay silent (the train
+            # loop would keep believing checkpoints exist)
             self.wait()
             self._thread = threading.Thread(
-                target=self._write, args=(step, host, extra or {}), daemon=True
+                target=self._guarded_write, args=(step, host, extra or {}),
+                daemon=True,
             )
             self._thread.start()
         else:
             self._write(step, host, extra or {})
+
+    def _guarded_write(self, step: int, host: dict, extra: dict):
+        try:
+            self._write(step, host, extra)
+        except BaseException as e:  # re-raised on wait() / next save()
+            self._error = e
 
     def _write(self, step: int, host: dict, extra: dict):
         path = self._path(step)
@@ -106,6 +117,9 @@ class Checkpointer:
         if self._thread is not None:
             self._thread.join()
             self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise RuntimeError(f"async checkpoint save failed: {err!r}") from err
 
     # ---------------------------------------------------------- restore
     def latest_step(self) -> int | None:

@@ -93,6 +93,12 @@ class SimResult:
     completed: bool           # all target ranks finished within horizon
     max_hops: int = 0         # max hops over all ejected packets — must stay
                               # below the policy's VC budget (deadlock bound)
+    # resilience accounting (defaults keep pre-epoch pickles comparable)
+    reescalated: int = 0      # moves granted via forced fault-escape deroutes
+    stranded: int = 0         # packets still queued in-network at the horizon
+    ejected: int = 0          # packets ejected anywhere (injected - stranded)
+    epoch_delivered: tuple = ()   # (NE,) target deliveries per fault epoch
+    epoch_injected: tuple = ()    # (NE,) injections per fault epoch
     # windowed in-sim time series (engines built with a TelemetrySpec
     # only); excluded from equality so telemetry-on results still compare
     # against telemetry-off results on the simulated fields
@@ -159,7 +165,8 @@ class SimEngine:
                 return (
                     final.t, all_done(wt, final), final.n_delivered,
                     final.n_injected, final.lat_sum, final.hop_sum,
-                    final.hop_max,
+                    final.hop_max, final.esc_count, jnp.sum(final.qlen),
+                    final.epoch_delivered, final.epoch_injected,
                 )
         else:
             st = self.static
@@ -182,7 +189,8 @@ class SimEngine:
                 return (
                     final.t, all_done(wt, final), final.n_delivered,
                     final.n_injected, final.lat_sum, final.hop_sum,
-                    final.hop_max, tel,
+                    final.hop_max, final.esc_count, jnp.sum(final.qlen),
+                    final.epoch_delivered, final.epoch_injected, tel,
                 )
 
         self._core = core
@@ -257,7 +265,7 @@ class SimEngine:
             raise ValueError(
                 f"{len(seeds)} seeds for {len(preps)} workloads"
             )
-        groups: dict[tuple[int, int, int], list[int]] = {}
+        groups: dict[tuple[int, int, int, int], list[int]] = {}
         for i, p in enumerate(preps):
             groups.setdefault(p.tables.shape_bucket, []).append(i)
         results: list[SimResult | None] = [None] * len(preps)
@@ -284,7 +292,7 @@ class SimEngine:
         """
         preps = [self.prepare(w) for w in workloads]
         seed_arr = jnp.asarray([int(s) for s in seeds], dtype=jnp.int32)
-        groups: dict[tuple[int, int, int], list[int]] = {}
+        groups: dict[tuple[int, int, int, int], list[int]] = {}
         for i, p in enumerate(preps):
             groups.setdefault(p.tables.shape_bucket, []).append(i)
         results: list[list[SimResult] | None] = [None] * len(preps)
@@ -380,7 +388,7 @@ class SimEngine:
         preps = [self.prepare(w) for w in workloads]
         seeds = [0] if seeds is None else list(seeds)
         ndev = jax.local_device_count()
-        groups: dict[tuple[int, int, int], list[int]] = {}
+        groups: dict[tuple[int, int, int, int], list[int]] = {}
         for i, p in enumerate(preps):
             groups.setdefault(p.tables.shape_bucket, []).append(i)
         results: list[list[SimResult] | None] = [None] * len(preps)
@@ -485,9 +493,11 @@ class SimEngine:
     def _to_result(self, out, prep: PreparedWorkload) -> SimResult:
         tel = None
         if self.telemetry is not None:
-            out, tel_state = out[:7], out[7]
+            out, tel_state = out[:11], out[11]
             tel = obs_probes.to_host(tel_state, self.telemetry, self.static)
-        t, done, ndel, ninj, lat, hops, hmax = (np.asarray(x) for x in out)
+        (t, done, ndel, ninj, lat, hops, hmax, esc, qsum, edel, einj) = (
+            np.asarray(x) for x in out
+        )
         ndel = int(ndel)
         return SimResult(
             makespan=int(t) - prep.warmup,
@@ -498,6 +508,13 @@ class SimEngine:
             avg_hops=float(hops) / max(ndel, 1),
             completed=bool(done),
             max_hops=int(hmax),
+            reescalated=int(esc),
+            stranded=int(qsum),
+            ejected=int(ninj) - int(qsum),
+            # pad epochs never start, so their counters are exact zeros;
+            # trim to the real epoch count for the host view
+            epoch_delivered=tuple(int(x) for x in edel[: prep.NE]),
+            epoch_injected=tuple(int(x) for x in einj[: prep.NE]),
             telemetry=tel,
         )
 

@@ -71,6 +71,10 @@ class SimState(NamedTuple):
     n_injected: jnp.ndarray   # () packets injected (all sources)
     hop_sum: jnp.ndarray      # () network hops of delivered target packets
     hop_max: jnp.ndarray      # () max hops over ALL ejected packets (VC bound)
+    # resilience counters (fault epochs; all cheap extra accumulation)
+    esc_count: jnp.ndarray    # () escalation-granted moves (re-escalated pkts)
+    epoch_delivered: jnp.ndarray  # (NE,) target deliveries per fault epoch
+    epoch_injected: jnp.ndarray   # (NE,) injections per fault epoch
 
 
 def init_state(st: StaticTables, wt: WorkloadTables, seed) -> SimState:
@@ -93,6 +97,8 @@ def init_state(st: StaticTables, wt: WorkloadTables, seed) -> SimState:
         lat_sum=jnp.float32(0.0),
         n_delivered=jnp.int32(0), n_injected=jnp.int32(0),
         hop_sum=jnp.int32(0), hop_max=jnp.int32(0),
+        esc_count=jnp.int32(0),
+        epoch_delivered=z(wt.NE), epoch_injected=z(wt.NE),
     )
 
 
@@ -146,6 +152,24 @@ def build_step(
         R, T = wt.R, wt.T
         MAXD = wt.D
         t = state.t
+        # fault epochs: select the mask (and its derived pool/reserve data)
+        # active at cycle t.  NE is a *shape*, so this branch resolves at
+        # trace time: the NE == 1 constant slice is the static-fault path,
+        # bit-identical to the pre-epoch kernel (trace-counter-pinned);
+        # NE > 1 pays exactly one gather on the epoch index per cycle.
+        NE = wt.NE
+        if NE == 1:
+            ei = jnp.int32(0)
+            link_ok_t = wt.link_ok[0]
+            mid_pool_t = wt.mid_pool[0]
+            n_mid_t = wt.n_mid[0]
+            n_dead_t = wt.n_dead[0]
+        else:
+            ei = (jnp.sum(t >= wt.epoch_start.astype(I32)) - 1).astype(I32)
+            link_ok_t = wt.link_ok[ei]
+            mid_pool_t = wt.mid_pool[ei]
+            n_mid_t = wt.n_mid[ei]
+            n_dead_t = wt.n_dead[ei]
         key = jax.random.fold_in(state.key, t)
         # policies without intermediates split 3 keys exactly like the seed
         # engine, preserving bit-identical min/omniwar trajectories
@@ -190,7 +214,7 @@ def build_step(
         unaligned = cur_d != dst_d                          # (H, q*n)
         not_self = pv != cur_d
         is_min = (pv == dst_d) & unaligned
-        healthy = wt.link_ok[cur]                           # (H, q*n) faults
+        healthy = link_ok_t[cur]                            # (H, q*n) faults
         nb = nbr[cur].astype(I32)                           # (H, q*n)
         ipnb = in_port_at_nb[cur].astype(I32)               # (H, q*n)
         vc_next = jnp.minimum(hop + 1, V - 1)[:, None]      # (H, 1)
@@ -211,7 +235,7 @@ def build_step(
             # into min-with-escalation machine-wide); the escalation
             # term covers forced escapes below the reserve, exactly
             # like the minimal-only policies.
-            reserve = jnp.minimum(wt.n_dead, max(m - 1, 0))
+            reserve = jnp.minimum(n_dead_t, max(m - 1, 0))
             base = unaligned & not_self & healthy
             escalate = (
                 ~(is_min & healthy).any(axis=1, keepdims=True)
@@ -329,6 +353,12 @@ def build_step(
 
         # ---------------- network moves (enqueue downstream) ---------------
         net = won & ~at_dst
+        # re-escalation accounting: moves granted through the forced
+        # fault-escape candidate set (the port the winner took was only
+        # legal because every minimal port was dead / reserve was spent)
+        chosen = jnp.minimum(jnp.where(won2, best2, best), q * n - 1)
+        esc_chosen = jnp.take_along_axis(escalate, chosen[:, None], 1)[:, 0]
+        esc_count = state.esc_count + jnp.sum(net & esc_chosen)
         tgt_qi = qi_best
         # ring tail = head_pre + len_pre, invariant under same-cycle dequeue;
         # a round-2 arrival lands one slot behind the round-1 arrival.
@@ -413,8 +443,8 @@ def build_step(
             # healthy pool carried in the workload tables (mid_pool/n_mid
             # are device data — seeds and fault grids vmap, no retracing)
             rmid = jax.random.bits(k_mid, (E,), dtype=U32)
-            span = jnp.maximum(wt.n_mid, 1).astype(U32)
-            mid = wt.mid_pool[(rmid % span).astype(I32)].astype(I32)
+            span = jnp.maximum(n_mid_t, 1).astype(U32)
+            mid = mid_pool_t[(rmid % span).astype(I32)].astype(I32)
             if policy.adaptive_injection:
                 # UGAL-L: best minimal port vs best port toward the
                 # sampled intermediate, weighted by path length, using
@@ -430,7 +460,7 @@ def build_step(
                 occ_e = port_occ[
                     nbr[ep_sw].astype(I32) * IN + in_port_at_nb[ep_sw]
                 ]
-                ok_e = wt.link_ok[ep_sw]
+                ok_e = link_ok_t[ep_sw]
                 # a dead/empty candidate set prices as BIGOCC, small enough
                 # that BIGOCC * h_val stays inside int32 for any q
                 BIGOCC = jnp.int32(1 << 24)
@@ -466,6 +496,10 @@ def build_step(
         dst_i = state.dst_i.at[upd].set(di2, mode="drop")
         pkt_i = state.pkt_i.at[upd].set(pk2, mode="drop")
 
+        # per-epoch delivered / injected counters (epoch 0 on the static path)
+        epoch_delivered = state.epoch_delivered.at[ei].add(jnp.sum(tgt_del))
+        epoch_injected = state.epoch_injected.at[ei].add(jnp.sum(do_inj))
+
         new_state = SimState(
             t=t + 1, key=state.key,
             f_dst=f_dst, f_der=f_der, f_hop=f_hop, f_rank=f_rank,
@@ -475,6 +509,8 @@ def build_step(
             sent=sent, got=got,
             lat_sum=lat_sum, n_delivered=n_delivered, n_injected=n_injected,
             hop_sum=hop_sum, hop_max=hop_max,
+            esc_count=esc_count,
+            epoch_delivered=epoch_delivered, epoch_injected=epoch_injected,
         )
         if spec is None:
             return new_state
@@ -484,12 +520,18 @@ def build_step(
         # of it feeds back into the physics above.  Window index clamps so
         # cycles past n_windows * window accumulate into the last window.
         wi = jnp.minimum(t // spec.window, spec.n_windows - 1)
-        net_move = won & ~at_dst
-        # non-minimal moves actually granted, and the subset that were
-        # forced fault-escapes (the escalation candidate set at the port
-        # the winner took)
-        chosen = jnp.minimum(jnp.where(won2, best2, best), q * n - 1)
-        esc_chosen = jnp.take_along_axis(escalate, chosen[:, None], 1)[:, 0]
+        net_move = net
+        # fault-epoch probes: a flip is a cycle whose active epoch differs
+        # from the previous cycle's; dead_links samples the directed dead
+        # count of the active mask each cycle
+        if NE == 1:
+            flip = jnp.int32(0)
+        else:
+            ei_prev = (jnp.sum(
+                jnp.maximum(t - 1, 0) >= wt.epoch_start.astype(I32)
+            ) - 1).astype(I32)
+            flip = ((t > 0) & (ei != ei_prev)).astype(I32)
+        dead_now = jnp.sum(~link_ok_t)
         # per-pool occupancy histogram: one sample of every queue per cycle
         occ_hist = jnp.zeros(P * (CAP + 1), dtype=I32).at[
             h_pool.astype(I32) * (CAP + 1) + qlen
@@ -516,6 +558,8 @@ def build_step(
             lat_hist=tel.lat_hist.at[
                 jnp.where(tgt_del, lat_bin, spec.lat_bins + 1)
             ].add(1, mode="drop"),
+            epoch_flips=tel.epoch_flips.at[wi].add(flip),
+            dead_links=tel.dead_links.at[wi].add(dead_now),
         )
         return new_state, tel
 

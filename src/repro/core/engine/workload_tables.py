@@ -20,7 +20,9 @@ Padding is semantics-preserving:
   * extra *ranks* (R -> R_b) are flagged ``infinite`` (ignored by the
     completion predicate) and mapped to no endpoint (so they never inject);
   * extra *destination slots* (MAXD -> D_b) sit beyond ``deg`` and are never
-    dereferenced by the send cursor.
+    dereferenced by the send cursor;
+  * extra *fault epochs* (NE -> NE_b) repeat the last real mask at start
+    cycle INT32_MAX, so the epoch index never selects them.
 """
 
 from __future__ import annotations
@@ -65,11 +67,15 @@ class WorkloadTables(NamedTuple):
     sampled: jnp.ndarray      # (R, T*D) bool: sample destination?
     smp_lo: jnp.ndarray       # (R, T*D) sample range lo
     smp_hi: jnp.ndarray       # (R, T*D) sample range hi (exclusive)
-    link_ok: jnp.ndarray      # (S, q*n) bool: healthy directed links
-    mid_pool: jnp.ndarray     # (S,) healthy Valiant intermediates (cyclic)
-    n_mid: jnp.ndarray        # ()  count of distinct healthy intermediates
-    n_dead: jnp.ndarray       # ()  dead cables — sizes the deroute reserve
+    # fault epochs: NE >= 1 time-varying mask epochs (NE = 1 is a static
+    # mask; padded epochs repeat the last mask and never start)
+    link_ok: jnp.ndarray      # (NE, S, q*n) bool: healthy directed links
+    mid_pool: jnp.ndarray     # (NE, S) healthy Valiant intermediates (cyclic)
+    n_mid: jnp.ndarray        # (NE,) count of distinct healthy intermediates
+    n_dead: jnp.ndarray       # (NE,) dead cables — sizes the deroute reserve
                               #     adaptive policies keep for fault escapes
+    epoch_start: jnp.ndarray  # (NE,) int32 cycle each epoch begins; [0] == 0,
+                              #     pad entries are INT32_MAX (never reached)
 
     @property
     def R(self) -> int:
@@ -84,8 +90,12 @@ class WorkloadTables(NamedTuple):
         return self.sends_dst.shape[-1] // self.deg.shape[-1]
 
     @property
-    def shape_bucket(self) -> tuple[int, int, int]:
-        return (self.R, self.T, self.D)
+    def NE(self) -> int:
+        return self.epoch_start.shape[-1]
+
+    @property
+    def shape_bucket(self) -> tuple[int, int, int, int]:
+        return (self.R, self.T, self.D, self.NE)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -98,6 +108,7 @@ class PreparedWorkload:
     num_pools: int     # must match the engine's static pool count
     R: int             # real (unpadded) rank count
     T: int             # real (unpadded) step count
+    NE: int = 1        # real (unpadded) fault-epoch count
 
 
 def _pow2_bucket(x: int, floor: int = 1) -> int:
@@ -160,14 +171,40 @@ def make_workload_tables(
     infinite = pad_r(wl.infinite, fill=True)
 
     # fault mask + Valiant intermediate pool: topology-static shapes, so
-    # fault scenarios share the shape bucket of their healthy counterparts
-    link_ok = wl.link_ok if wl.link_ok is not None else faults.no_faults(wl.topo)
-    link_ok = np.asarray(link_ok, dtype=bool)
-    mid_pool, n_mid = faults.intermediate_pool(wl.topo, link_ok)
-    dead_dirs = int((self_port_mask(
+    # fault scenarios share the shape bucket of their healthy counterparts.
+    # A fault *schedule* stacks NE mask epochs along a leading axis; the
+    # epoch count pads to a power of two (part of the shape bucket), with
+    # pad epochs repeating the last mask at a start cycle no simulation
+    # reaches.  NE = 1 (no schedule) keeps the static path.
+    base_ok = wl.link_ok if wl.link_ok is not None else faults.no_faults(wl.topo)
+    base_ok = np.asarray(base_ok, dtype=bool)
+    sched = getattr(wl, "fault_schedule", None)
+    if sched is None:
+        epoch_start = np.zeros(1, dtype=np.int64)
+        link_ok = base_ok[None]
+    else:
+        epoch_start = np.asarray(sched.epoch_start, dtype=np.int64)
+        link_ok = np.asarray(sched.link_ok, dtype=bool) & base_ok[None]
+    NE = len(epoch_start)
+    NE_b = _pow2_bucket(NE, 1) if bucket else NE
+    if NE_b > NE:
+        _NEVER = np.iinfo(np.int32).max
+        epoch_start = np.concatenate([
+            epoch_start, np.full(NE_b - NE, _NEVER, dtype=np.int64)
+        ])
+        link_ok = np.concatenate([
+            link_ok, np.repeat(link_ok[-1:], NE_b - NE, axis=0)
+        ])
+    valid_ports = self_port_mask(
         wl.topo.all_switch_coords(), wl.topo.n, wl.topo.q
-    ) & ~link_ok).sum())
-    n_dead = (dead_dirs + 1) // 2  # cables (directed pairs, ceil)
+    )
+    mid_pool = np.empty((NE_b, wl.topo.num_switches), dtype=np.int32)
+    n_mid = np.empty(NE_b, dtype=np.int64)
+    n_dead = np.empty(NE_b, dtype=np.int64)
+    for e in range(NE_b):
+        mid_pool[e], n_mid[e] = faults.intermediate_pool(wl.topo, link_ok[e])
+        dead_dirs = int((valid_ports & ~link_ok[e]).sum())
+        n_dead[e] = (dead_dirs + 1) // 2  # cables (directed pairs, ceil)
 
     if pack_tables:
         # bucket-derived bounds only (R_b/T_b/D_b/E/S) — two same-bucket
@@ -206,12 +243,13 @@ def make_workload_tables(
         smp_hi=lower(pad_rtd(wl.hi).reshape(R_b, T_b * D_b), R_b),
         link_ok=jnp.asarray(link_ok),
         mid_pool=lower(mid_pool, wl.topo.num_switches - 1),
-        n_mid=jnp.int32(n_mid),
-        n_dead=jnp.int32(n_dead),
+        n_mid=jnp.asarray(n_mid, dtype=I32),
+        n_dead=jnp.asarray(n_dead, dtype=I32),
+        epoch_start=jnp.asarray(epoch_start, dtype=I32),
     )
     return PreparedWorkload(
         tables=tables, warmup=int(wl.start.max()), num_pools=wl.num_pools,
-        R=R, T=T,
+        R=R, T=T, NE=NE,
     )
 
 

@@ -72,6 +72,8 @@ class TelemetryState(NamedTuple):
     delivered: jnp.ndarray    # (W,) target packets delivered
     lat_sum: jnp.ndarray      # (W,) float32 latency sum of deliveries
     lat_hist: jnp.ndarray     # (lat_bins,) log2 ejection-latency histogram
+    epoch_flips: jnp.ndarray  # (W,) fault-epoch transitions observed
+    dead_links: jnp.ndarray   # (W,) sum over cycles of dead directed links
 
 
 def init_telemetry(
@@ -94,6 +96,8 @@ def init_telemetry(
         delivered=z(W),
         lat_sum=z(W, dtype=jnp.float32),
         lat_hist=z(spec.lat_bins),
+        epoch_flips=z(W),
+        dead_links=z(W),
     )
 
 
@@ -127,6 +131,8 @@ class Telemetry:
     delivered: np.ndarray     # (W,)
     lat_sum: np.ndarray       # (W,)
     lat_hist: np.ndarray      # (lat_bins,)
+    epoch_flips: np.ndarray   # (W,)
+    dead_links: np.ndarray    # (W,)
 
     # ------------------------------------------------------------- derived
     @property
@@ -183,6 +189,10 @@ class Telemetry:
         """(W,) mean in-network packet population per window."""
         return self.inflight / np.maximum(self.cycles, 1)
 
+    def mean_dead_links(self) -> np.ndarray:
+        """(W,) mean dead directed-link count per window."""
+        return self.dead_links / np.maximum(self.cycles, 1)
+
     def mean_latency(self) -> np.ndarray:
         """(W,) mean delivery latency per window (NaN where idle)."""
         with np.errstate(invalid="ignore", divide="ignore"):
@@ -214,6 +224,8 @@ class Telemetry:
             "injected": int(self.injected.sum()),
             "delivered": int(self.delivered.sum()),
             "lat_hist": self.lat_hist.astype(int).tolist(),
+            "epoch_flips": int(self.epoch_flips.sum()),
+            "dead_links_mean": round(float(self.mean_dead_links().mean()), 3),
             "lat_mean": round(
                 float(self.lat_sum.sum()) / max(int(self.delivered.sum()), 1), 3
             ),
@@ -243,4 +255,6 @@ def to_host(tel: TelemetryState, spec: TelemetrySpec, st) -> Telemetry:
         delivered=np.asarray(tel.delivered),
         lat_sum=np.asarray(tel.lat_sum),
         lat_hist=np.asarray(tel.lat_hist),
+        epoch_flips=np.asarray(tel.epoch_flips),
+        dead_links=np.asarray(tel.dead_links),
     )

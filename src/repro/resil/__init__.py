@@ -1,0 +1,50 @@
+"""Fault-injection & resilience subsystem.
+
+Three layers, mirroring the repo's engine / sched split:
+
+  * :mod:`repro.resil.epochs` — the epoch-schedule representation
+    ``(epoch_start[E], link_ok[E, S, q*n])`` that the engine consumes:
+    time-varying fault masks carried in ``WorkloadTables`` and switched
+    mid-flight by one gather per cycle (``E = 1`` is bit-identical to the
+    static path, trace-counter-pinned in ``tests/test_resil.py``).
+  * :mod:`repro.resil.processes` — seeded exponential / Weibull
+    MTBF -> MTTR failure-and-repair timelines over links, switches and
+    endpoints (plus deterministic scripted campaigns and correlated
+    whole-switch / cable-bundle modes), lowered to epoch schedules for
+    the engine and to :class:`~repro.sched.scheduler.FailureEvent`
+    streams for the scheduler.
+  * :mod:`repro.resil.stream` — the crash-safe scheduler-stream driver:
+    ``python -m repro.resil.stream`` periodically checkpoints
+    ``OnlineScheduler.run_stream`` state through
+    :class:`~repro.checkpoint.checkpointer.Checkpointer` and ``--resume``
+    reproduces the uninterrupted run's metrics bit-identically (pinned by
+    a kill-and-resume subprocess test).
+"""
+
+from repro.resil.epochs import (
+    FaultSchedule,
+    apply_schedule,
+    schedule_from_masks,
+    static_schedule,
+)
+from repro.resil.processes import (
+    FaultEvent,
+    exponential_lifetimes,
+    sample_components,
+    scripted_campaign,
+    to_epoch_schedule,
+    to_failure_events,
+)
+
+__all__ = [
+    "FaultSchedule",
+    "apply_schedule",
+    "schedule_from_masks",
+    "static_schedule",
+    "FaultEvent",
+    "exponential_lifetimes",
+    "sample_components",
+    "scripted_campaign",
+    "to_epoch_schedule",
+    "to_failure_events",
+]

@@ -1,0 +1,275 @@
+"""Failure-and-repair processes over network components.
+
+Components fail and repair on seeded timelines; everything lowers to the
+two consumers' native forms:
+
+  * :func:`to_epoch_schedule` — an engine :class:`~repro.resil.epochs.
+    FaultSchedule` (epoch starts + per-epoch link masks, replaying the
+    event stream and coarsening deterministically past ``max_epochs``);
+  * :func:`to_failure_events` — scheduler
+    :class:`~repro.sched.scheduler.FailureEvent` streams (endpoint-kind
+    events only; the scheduler operates on endpoints).
+
+Component kinds and their correlated failure domains:
+
+  * ``("link", (a, b))``     — one cable: BOTH directions die together;
+  * ``("switch", (s,))``     — whole switch: all ``q*n`` outgoing directed
+    ports plus every incoming direction (power-off);
+  * ``("endpoint", (e,))``   — node loss: takes its co-packaged cable
+    (deterministic per endpoint id, via
+    :func:`repro.route.faults.faults_from_endpoints`);
+  * ``("bundle", (s, d))``   — cable bundle: every cable of switch ``s``
+    in dimension ``d`` (the shared-conduit failure mode).
+
+Lifetimes: :func:`exponential_lifetimes` draws alternating
+time-to-failure (mean ``mtbf``) and time-to-repair (mean ``mttr``)
+intervals per component — exponential by default, Weibull when
+``weibull_shape`` is given (scale chosen so the mean stays ``mtbf`` /
+``mttr``).  Each component gets its own ``np.random.default_rng([seed,
+index])`` stream, so adding a component never perturbs the others.
+:func:`scripted_campaign` builds the same event stream from an explicit
+script for deterministic regression scenarios.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Sequence
+
+import numpy as np
+
+from repro.core.hyperx import HyperX
+from repro.resil.epochs import FaultSchedule
+from repro.route import faults
+from repro.route.topology import dst_switch_table, self_port_mask
+
+KINDS = ("link", "switch", "endpoint", "bundle")
+
+Component = tuple  # (kind, ident) — e.g. ("link", (0, 1))
+
+
+@dataclasses.dataclass(frozen=True, order=True)
+class FaultEvent:
+    """One component state change at an integer cycle."""
+
+    time: int
+    kind: str      # one of KINDS
+    ident: tuple   # component identity (see module docstring)
+    up: bool       # True = repair, False = failure
+
+
+def _check_component(comp: Component) -> Component:
+    kind, ident = comp
+    if kind not in KINDS:
+        raise ValueError(f"unknown component kind {kind!r}; one of {KINDS}")
+    return kind, tuple(int(x) for x in np.atleast_1d(np.asarray(ident)))
+
+
+def sample_components(
+    topo: HyperX,
+    n_links: int = 0,
+    n_switches: int = 0,
+    n_endpoints: int = 0,
+    n_bundles: int = 0,
+    seed: int = 0,
+) -> list[Component]:
+    """Draw a deterministic component set to subject to churn."""
+    rng = np.random.default_rng(seed)
+    out: list[Component] = []
+    if n_links:
+        cables = topo.link_array()
+        take = rng.choice(len(cables), size=min(n_links, len(cables)),
+                         replace=False)
+        out += [("link", tuple(int(x) for x in cables[i])) for i in take]
+    if n_switches:
+        take = rng.choice(topo.num_switches,
+                          size=min(n_switches, topo.num_switches),
+                          replace=False)
+        out += [("switch", (int(s),)) for s in take]
+    if n_endpoints:
+        take = rng.choice(topo.num_endpoints,
+                          size=min(n_endpoints, topo.num_endpoints),
+                          replace=False)
+        out += [("endpoint", (int(e),)) for e in take]
+    if n_bundles:
+        pairs = [(s, d) for s in range(topo.num_switches)
+                 for d in range(topo.q)]
+        take = rng.choice(len(pairs), size=min(n_bundles, len(pairs)),
+                          replace=False)
+        out += [("bundle", pairs[i]) for i in take]
+    return out
+
+
+def exponential_lifetimes(
+    components: Sequence[Component],
+    mtbf: float,
+    mttr: float,
+    horizon: int,
+    seed: int = 0,
+    weibull_shape: float | None = None,
+) -> list[FaultEvent]:
+    """Alternating fail/repair timelines per component up to ``horizon``.
+
+    Returns the merged, time-sorted event stream.  ``weibull_shape`` k
+    switches both draws to Weibull(k) with the scale set so means stay
+    ``mtbf``/``mttr`` (k < 1 = infant mortality, k > 1 = wear-out).
+    """
+    if mtbf <= 0 or mttr <= 0 or horizon <= 0:
+        raise ValueError(
+            f"mtbf/mttr/horizon must be positive, got {mtbf}/{mttr}/{horizon}"
+        )
+
+    def draw(rng: np.random.Generator, mean: float) -> float:
+        if weibull_shape is None:
+            return float(rng.exponential(mean))
+        scale = mean / math.gamma(1.0 + 1.0 / weibull_shape)
+        return float(scale * rng.weibull(weibull_shape))
+
+    events: list[FaultEvent] = []
+    for i, comp in enumerate(components):
+        kind, ident = _check_component(comp)
+        rng = np.random.default_rng([seed, i])
+        t = 0.0
+        while True:
+            t += max(draw(rng, mtbf), 1.0)
+            if t >= horizon:
+                break
+            events.append(FaultEvent(int(round(t)), kind, ident, up=False))
+            t += max(draw(rng, mttr), 1.0)
+            if t >= horizon:
+                break
+            events.append(FaultEvent(int(round(t)), kind, ident, up=True))
+    return sorted(events)
+
+
+def scripted_campaign(
+    script: Sequence[tuple[int, str, str, Sequence[int]]],
+) -> list[FaultEvent]:
+    """Deterministic campaign from ``(cycle, action, kind, ident)`` rows,
+    where ``action`` is ``"fail"`` or ``"repair"``."""
+    events = []
+    for cycle, action, kind, ident in script:
+        if action not in ("fail", "repair"):
+            raise ValueError(f"unknown action {action!r} (fail|repair)")
+        kind, ident = _check_component((kind, ident))
+        events.append(FaultEvent(int(cycle), kind, ident,
+                                 up=(action == "repair")))
+    return sorted(events)
+
+
+# ----------------------------------------------------------------- lowering
+def _component_mask(topo: HyperX, kind: str, ident: tuple) -> np.ndarray:
+    """The (S, q*n) healthy mask with exactly this component down."""
+    if kind == "link":
+        return faults.fail_links(topo, [ident])
+    if kind == "switch":
+        return faults.fail_switches(topo, list(ident))
+    if kind == "endpoint":
+        return faults.faults_from_endpoints(topo, list(ident), seed=0)
+    # bundle: every cable of switch s in dimension d
+    s, d = ident
+    coords = topo.all_switch_coords()
+    valid = self_port_mask(coords, topo.n, topo.q)
+    dst = dst_switch_table(coords, topo.n, topo.q).reshape(valid.shape)
+    n = topo.n
+    pairs = [
+        (int(s), int(dst[s, d * n + v]))
+        for v in range(n)
+        if valid[s, d * n + v]
+    ]
+    return faults.fail_links(topo, pairs)
+
+
+def to_epoch_schedule(
+    topo: HyperX,
+    events: Sequence[FaultEvent],
+    max_epochs: int = 16,
+    base_link_ok: np.ndarray | None = None,
+) -> FaultSchedule:
+    """Replay an event stream into an engine epoch schedule.
+
+    Every cycle where the down-component set changes opens a new epoch;
+    when that exceeds ``max_epochs`` the boundary list is coarsened
+    deterministically (epoch 0 always kept, the rest evenly sampled), so
+    the schedule stays bucket-friendly for long campaigns.
+    ``base_link_ok`` ANDs a permanent fault mask under the churn.
+    """
+    if max_epochs < 1:
+        raise ValueError(f"max_epochs must be >= 1, got {max_epochs}")
+    down: dict[tuple[str, tuple], int] = {}
+    boundaries: list[tuple[int, tuple]] = [(0, ())]
+    events = sorted(events)
+    i = 0
+    while i < len(events):
+        t = events[i].time
+        while i < len(events) and events[i].time == t:
+            ev = events[i]
+            key = (ev.kind, ev.ident)
+            c = down.get(key, 0) + (-1 if ev.up else 1)
+            if c <= 0:
+                down.pop(key, None)
+            else:
+                down[key] = c
+            i += 1
+        state = tuple(sorted(down))
+        if t <= 0:
+            boundaries[0] = (0, state)
+        elif state != boundaries[-1][1]:
+            boundaries.append((int(t), state))
+    if len(boundaries) > max_epochs:
+        idx = np.unique(np.round(
+            np.linspace(0, len(boundaries) - 1, max_epochs)
+        ).astype(int))
+        boundaries = [boundaries[j] for j in idx]
+    base = (faults.no_faults(topo) if base_link_ok is None
+            else np.asarray(base_link_ok, dtype=bool))
+    mask_cache: dict[tuple[str, tuple], np.ndarray] = {}
+    masks, starts = [], []
+    for t, state in boundaries:
+        mask = base.copy()
+        for key in state:
+            if key not in mask_cache:
+                mask_cache[key] = _component_mask(topo, *key)
+            mask &= mask_cache[key]
+        starts.append(t)
+        masks.append(mask)
+    return FaultSchedule(
+        epoch_start=np.asarray(starts, dtype=np.int64),
+        link_ok=np.stack(masks),
+    )
+
+
+def to_failure_events(
+    events: Sequence[FaultEvent],
+    time_scale: float = 1.0,
+):
+    """Endpoint-kind events as scheduler ``FailureEvent``s.
+
+    Pairs each endpoint failure with its next repair (``repair_at`` stays
+    None for failures that never repair in-stream); ``time_scale``
+    converts engine cycles to scheduler time units.
+    """
+    from repro.sched.scheduler import FailureEvent as SchedFailure
+
+    out = []
+    open_fail: dict[tuple, int] = {}
+    rows: list[tuple[int, tuple, int | None]] = []
+    for ev in sorted(events):
+        if ev.kind != "endpoint":
+            continue
+        if not ev.up:
+            if ev.ident not in open_fail:
+                open_fail[ev.ident] = len(rows)
+                rows.append((ev.time, ev.ident, None))
+        else:
+            i = open_fail.pop(ev.ident, None)
+            if i is not None:
+                rows[i] = (rows[i][0], rows[i][1], ev.time)
+    for t_down, ident, t_up in rows:
+        out.append(SchedFailure(
+            time=t_down * time_scale,
+            endpoints=ident,
+            repair_at=None if t_up is None else t_up * time_scale,
+        ))
+    return out

@@ -30,6 +30,9 @@ class JobRecord:
     scattered: bool = False          # placed on non-contiguous slots
     migrations: int = 0              # failure-driven re-placements
     requeues: int = 0                # failure evictions back to the queue
+    retries: int = 0                 # eviction count (drives the backoff)
+    degraded: bool = False           # shrunk below its requested blocks
+    failed: bool = False             # gave up after max_retries evictions
     realized_pb: float | None = None
     pb_bound: float | None = None
     switch_local: bool | None = None
@@ -91,6 +94,8 @@ class StreamResult:
             ) if placed else 0.0,
             "migrations": sum(r.migrations for r in self.records),
             "requeues": sum(r.requeues for r in self.records),
+            "degraded": sum(r.degraded for r in self.records),
+            "failed": sum(r.failed for r in self.records),
             "realized_pb_mean": round(float(np.mean(pbs)), 4) if pbs else -1.0,
             "realized_pb_min": round(float(np.min(pbs)), 4) if pbs else -1.0,
             "locality_frac": round(float(np.mean(loc)), 4) if loc else -1.0,

@@ -3,8 +3,8 @@
 Discrete-event simulation of a job stream against one
 :class:`~repro.sched.ledger.BlockLedger`.  Event kinds, in same-time
 processing order: departures free slots first, repairs return endpoints,
-failures take them, arrivals join the queue; after each timestamp the
-scheduling pass runs.
+straggler reports are scored, failures take endpoints, arrivals join the
+queue; after each timestamp the scheduling pass runs.
 
 Scheduling is FCFS with count-based EASY backfilling: when the queue head
 does not fit, its *shadow time* (earliest time enough block slots will be
@@ -17,8 +17,33 @@ assumption.
 Failures route through the ledger's repair path: a job whose slots are hit
 is re-placed on the surviving machine (a migration — same contract as
 ``FleetRuntime``'s checkpoint-restore repair) and, when the survivors
-cannot host it, evicted back to the queue head with its remaining service
-time (a requeue).
+cannot host it, optionally *shrunk to fit* (halving its block count until
+it places, marked degraded) before being evicted back to the queue with
+its remaining service time (a requeue).  Robustness knobs — all
+behavior-preserving at their defaults:
+
+  * ``mttr``      — failures without an explicit ``repair_at`` draw an
+    exponential repair delay (mean ``mttr``) instead of staying down
+    forever;
+  * ``backoff_base`` — requeued jobs re-arrive after an exponential
+    backoff (``base * 2**(retries-1)``) instead of jumping to the queue
+    head;
+  * ``max_retries`` — a job evicted more than this many times is marked
+    failed and abandoned (``sched.giveup``);
+  * ``shrink_to_fit`` — the graceful-degradation placement fallback above.
+
+Straggler reports (``stragglers=[(time, host, seconds)]``) feed a
+:class:`~repro.runtime.fault_tolerance.StragglerMonitor`; hosts it evicts
+are treated as endpoint failures through the same migrate/requeue path
+(``sched.evict``).
+
+Crash safety: ``checkpoint_dir`` snapshots the entire stream state
+(ledger + heap + queue + records + RNG) through the checkpoint substrate
+every ``checkpoint_every`` processed timestamps; ``resume=True`` picks up
+the latest committed snapshot and replays to a bit-identical final
+``StreamResult`` (pinned by a kill-and-resume test).  ``crash_at`` kills
+the process hard at the first event time past the given instant — the
+test hook for that pin.
 
 At every successful placement the scheduler snapshots the co-resident job
 set; :mod:`repro.sched.bridge` turns those snapshots into batched SimEngine
@@ -26,16 +51,19 @@ evaluations.
 
 When a :mod:`repro.obs.trace` tracer is active, the event loop emits
 structured ``sched.*`` events (arrive / start / backfill flag / depart /
-fail / migrate / requeue / repair), fragmentation gauges at every
-scheduling pass, and a final per-stream summary — the fleet report
-generator aggregates these into the fragmentation/churn tables.  With no
-tracer configured the loop pays a single global check per event.
+fail / migrate / requeue / repair / straggle / evict / degrade / giveup /
+resume / checkpoint), fragmentation gauges at every scheduling pass, and a
+final per-stream summary — the fleet report generator aggregates these
+into the fragmentation/churn tables.  With no tracer configured the loop
+pays a single global check per event.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import heapq
+import os
+import pickle
 from typing import Sequence
 
 import numpy as np
@@ -44,11 +72,15 @@ from repro.core.allocation import Partition
 from repro.core.hyperx import HyperX
 from repro.core.properties import has_switch_locality, partition_bandwidth
 from repro.obs import trace as obs_trace
+from repro.runtime.fault_tolerance import StragglerMonitor
 from repro.sched.jobs import Job
 from repro.sched.ledger import BlockLedger
 from repro.sched.metrics import JobRecord, StreamResult
 
-_ORDER = {"depart": 0, "repair": 1, "fail": 2, "arrive": 3}
+# relative order of the pre-existing kinds (depart < repair < fail <
+# arrive) is load-bearing: changing it would reorder same-time event
+# processing and shift every pinned stream metric
+_ORDER = {"depart": 0, "repair": 1, "straggle": 2, "fail": 3, "arrive": 4}
 
 
 @dataclasses.dataclass(frozen=True)
@@ -76,6 +108,38 @@ class Snapshot:
         return len(self.jobs)
 
 
+@dataclasses.dataclass
+class _StreamState:
+    """Every mutable piece of one ``run_stream`` pass, in one picklable bag.
+
+    The crash-safe checkpoint is ``pickle.dumps((ledger, state))`` — heap
+    entries never compare payloads (the monotone ``seq`` breaks ties), all
+    payloads are frozen dataclasses or plain tuples, and the RNG /
+    straggler monitor ride along, so a resumed stream replays the exact
+    trajectory of an uninterrupted one.
+    """
+
+    records: dict  # jid -> JobRecord
+    heap: list = dataclasses.field(default_factory=list)
+    seq: int = 0
+    queue: list = dataclasses.field(default_factory=list)   # of Job
+    running: dict = dataclasses.field(default_factory=dict)  # jid -> info
+    gens: dict = dataclasses.field(default_factory=dict)     # jid -> gen
+    snapshots: list = dataclasses.field(default_factory=list)
+    retries: dict = dataclasses.field(default_factory=dict)  # jid -> evictions
+    evicted: set = dataclasses.field(default_factory=set)    # straggler hosts
+    # time integrals
+    last_t: float = 0.0
+    busy: float = 0.0        # requested endpoint-seconds
+    gross: float = 0.0       # slot-held endpoint-seconds
+    frag_int: float = 0.0
+    frag_max: float = 0.0
+    queue_int: float = 0.0
+    ticks: int = 0           # processed timestamps (the checkpoint step)
+    rng: np.random.Generator | None = None
+    monitor: StragglerMonitor | None = None
+
+
 class OnlineScheduler:
     """One strategy x policy scheduling run over a job stream."""
 
@@ -88,6 +152,10 @@ class OnlineScheduler:
         allow_scatter: bool = True,
         seed: int = 0,
         analyze: bool = True,
+        mttr: float | None = None,
+        backoff_base: float = 0.0,
+        max_retries: int | None = None,
+        shrink_to_fit: bool = False,
     ):
         self.topo = topo
         self.ledger = BlockLedger(
@@ -96,6 +164,15 @@ class OnlineScheduler:
         )
         self.backfill = backfill
         self.analyze = analyze
+        self.seed = seed
+        if mttr is not None and mttr <= 0:
+            raise ValueError(f"mttr must be positive, got {mttr}")
+        if backoff_base < 0:
+            raise ValueError(f"backoff_base must be >= 0, got {backoff_base}")
+        self.mttr = mttr
+        self.backoff_base = backoff_base
+        self.max_retries = max_retries
+        self.shrink_to_fit = shrink_to_fit
 
     # --------------------------------------------------------------- driver
     def run_stream(
@@ -103,6 +180,12 @@ class OnlineScheduler:
         jobs: Sequence[Job],
         failures: Sequence[FailureEvent] = (),
         check_invariants: bool = False,
+        stragglers: Sequence[tuple[float, int, float]] = (),
+        straggler_monitor: StragglerMonitor | None = None,
+        checkpoint_dir: str | None = None,
+        checkpoint_every: int = 16,
+        resume: bool = False,
+        crash_at: float | None = None,
     ) -> StreamResult:
         ledger = self.ledger
         too_big = [j.job_id for j in jobs if j.blocks > ledger.num_slots]
@@ -111,58 +194,78 @@ class OnlineScheduler:
                 f"jobs {too_big[:4]} request more than the machine's "
                 f"{ledger.num_slots} base blocks"
             )
-        records = {j.job_id: JobRecord(
-            job_id=j.job_id, arrival=j.arrival, blocks=j.blocks,
-            service=j.service, kernel=j.kernel,
-        ) for j in jobs}
-
-        heap: list[tuple] = []
-        seq = 0
-        for j in sorted(jobs, key=lambda x: (x.arrival, x.job_id)):
-            heapq.heappush(heap, (j.arrival, _ORDER["arrive"], seq, "arrive", j))
-            seq += 1
-        for f in failures:
-            heapq.heappush(heap, (f.time, _ORDER["fail"], seq, "fail", f))
-            seq += 1
-            if f.repair_at is not None:
-                heapq.heappush(
-                    heap, (f.repair_at, _ORDER["repair"], seq, "repair", f)
-                )
-                seq += 1
-
         stream = f"{ledger.strategy.name}/{ledger.policy}"
 
-        queue: list[Job] = []
-        running: dict[int, dict] = {}  # jid -> {job, finish}
-        gens: dict[int, int] = {}      # jid -> placement generation
-        snapshots: list[Snapshot] = []
-        # time integrals
-        last_t = 0.0
-        busy = 0.0        # requested endpoint-seconds
-        gross = 0.0       # slot-held endpoint-seconds
-        frag_int = 0.0
-        frag_max = 0.0
-        queue_int = 0.0
+        ckpt = None
+        if checkpoint_dir is not None:
+            from repro.checkpoint import Checkpointer
+
+            ckpt = Checkpointer(str(checkpoint_dir))
+
+        st: _StreamState | None = None
+        if resume and ckpt is not None and ckpt.latest_step() is not None:
+            blob, _extra = ckpt.restore({"pickle": None})
+            ledger, st = pickle.loads(
+                np.asarray(blob["pickle"], dtype=np.uint8).tobytes()
+            )
+            self.ledger = ledger
+            obs_trace.event("sched.resume", stream=stream, step=st.ticks,
+                            t_sim=st.last_t, queued=len(st.queue),
+                            running=len(st.running))
+        if st is None:
+            st = _StreamState(records={j.job_id: JobRecord(
+                job_id=j.job_id, arrival=j.arrival, blocks=j.blocks,
+                service=j.service, kernel=j.kernel,
+            ) for j in jobs})
+            st.rng = np.random.default_rng(self.seed)
+            if straggler_monitor is not None:
+                st.monitor = straggler_monitor
+            elif stragglers:
+                st.monitor = StragglerMonitor()
+            for j in sorted(jobs, key=lambda x: (x.arrival, x.job_id)):
+                heapq.heappush(
+                    st.heap, (j.arrival, _ORDER["arrive"], st.seq, "arrive", j)
+                )
+                st.seq += 1
+            for f in failures:
+                heapq.heappush(st.heap, (f.time, _ORDER["fail"], st.seq,
+                                         "fail", f))
+                st.seq += 1
+                if f.repair_at is not None:
+                    heapq.heappush(
+                        st.heap, (f.repair_at, _ORDER["repair"], st.seq,
+                                  "repair", f)
+                    )
+                    st.seq += 1
+            for t, host, seconds in stragglers:
+                heapq.heappush(
+                    st.heap,
+                    (float(t), _ORDER["straggle"], st.seq, "straggle",
+                     (int(host), float(seconds))),
+                )
+                st.seq += 1
+
         E = self.topo.num_endpoints
 
         def advance(now: float):
-            nonlocal last_t, busy, gross, frag_int, frag_max, queue_int
-            dt = now - last_t
+            dt = now - st.last_t
             if dt > 0:
-                req = sum(ledger.jobs[j].partition.size for j in running)
-                held = sum(len(ledger.jobs[j].slot_endpoints) for j in running)
+                req = sum(ledger.jobs[j].partition.size for j in st.running)
+                held = sum(
+                    len(ledger.jobs[j].slot_endpoints) for j in st.running
+                )
                 frag = ledger.fragmentation()
-                busy += req * dt
-                gross += held * dt
-                frag_int += frag * dt
-                frag_max = max(frag_max, frag)
-                queue_int += len(queue) * dt
-                last_t = now
+                st.busy += req * dt
+                st.gross += held * dt
+                st.frag_int += frag * dt
+                st.frag_max = max(st.frag_max, frag)
+                st.queue_int += len(st.queue) * dt
+                st.last_t = now
 
         def analyze_placement(jid: int):
             """Record the job's CURRENT placement quality (last placement
             wins: a migration onto scattered blocks must show up)."""
-            rec = records[jid]
+            rec = st.records[jid]
             placed = ledger.jobs[jid]
             rec.scattered = rec.scattered or not placed.contiguous
             if self.analyze:
@@ -173,11 +276,12 @@ class OnlineScheduler:
                 rec.switch_local = has_switch_locality(self.topo, eps)
 
         def take_snapshot(now: float, trigger: int):
-            snapshots.append(Snapshot(
+            st.snapshots.append(Snapshot(
                 time=now, trigger=trigger,
                 jobs=tuple(
-                    (jid, running[jid]["job"].kernel, ledger.jobs[jid].partition)
-                    for jid in sorted(running)
+                    (jid, st.running[jid]["job"].kernel,
+                     ledger.jobs[jid].partition)
+                    for jid in sorted(st.running)
                 ),
                 failed_endpoints=tuple(
                     int(e) for e in np.flatnonzero(ledger.failed)
@@ -189,7 +293,7 @@ class OnlineScheduler:
                 ledger.place(job.blocks, job_id=job.job_id)
             except RuntimeError:
                 return False
-            rec = records[job.job_id]
+            rec = st.records[job.job_id]
             if rec.start is None:
                 rec.start = now
                 rec.wait = now - rec.arrival
@@ -199,16 +303,15 @@ class OnlineScheduler:
                 backfilled=backfilled,
                 scattered=not ledger.jobs[job.job_id].contiguous,
             )
-            nonlocal seq
-            gen = gens.get(job.job_id, 0) + 1
-            gens[job.job_id] = gen
-            running[job.job_id] = {"job": job, "finish": now + job.service}
+            gen = st.gens.get(job.job_id, 0) + 1
+            st.gens[job.job_id] = gen
+            st.running[job.job_id] = {"job": job, "finish": now + job.service}
             heapq.heappush(
-                heap,
-                (now + job.service, _ORDER["depart"], seq, "depart",
+                st.heap,
+                (now + job.service, _ORDER["depart"], st.seq, "depart",
                  (job.job_id, gen)),
             )
-            seq += 1
+            st.seq += 1
             analyze_placement(job.job_id)
             take_snapshot(now, job.job_id)
             return True
@@ -219,13 +322,15 @@ class OnlineScheduler:
             if free_now >= head.blocks:
                 return now, 0  # blocked by fragmentation only, not capacity
             freed = 0
-            for jid in sorted(running, key=lambda j: running[j]["finish"]):
+            for jid in sorted(st.running,
+                              key=lambda j: st.running[j]["finish"]):
                 freed += len(ledger.jobs[jid].slots)
                 if free_now + freed >= head.blocks:
-                    return running[jid]["finish"], freed
+                    return st.running[jid]["finish"], freed
             return float("inf"), freed
 
         def schedule(now: float):
+            queue = st.queue
             while queue:
                 if start(queue[0], now):
                     queue.pop(0)
@@ -246,55 +351,147 @@ class OnlineScheduler:
                         queue.remove(cand)
                 break
 
-        while heap:
-            now = heap[0][0]
-            while heap and heap[0][0] == now:
-                _, _, _, kind, payload = heapq.heappop(heap)
+        def try_shrink(jid: int, now: float) -> bool:
+            """Graceful degradation: halve the block count until it places."""
+            job = st.running[jid]["job"]
+            b = job.blocks // 2
+            while b >= 1:
+                try:
+                    ledger.place(b, job_id=jid)
+                except RuntimeError:
+                    b //= 2
+                    continue
+                rec = st.records[jid]
+                rec.degraded = True
+                analyze_placement(jid)
+                take_snapshot(now, jid)
+                obs_trace.event("sched.degrade", stream=stream, job=jid,
+                                t_sim=now, blocks=b, requested=job.blocks)
+                return True
+            return False
+
+        def requeue_or_giveup(jid: int, now: float):
+            """Evict a running job; requeue with backoff, or abandon it."""
+            info = st.running.pop(jid)
+            st.gens[jid] += 1  # invalidate the depart event
+            remaining = info["finish"] - now
+            rec = st.records[jid]
+            st.retries[jid] = st.retries.get(jid, 0) + 1
+            tries = st.retries[jid]
+            rec.retries = tries
+            if self.max_retries is not None and tries > self.max_retries:
+                rec.failed = True
+                obs_trace.event("sched.giveup", stream=stream, job=jid,
+                                t_sim=now, retries=tries)
+                return
+            rec.requeues += 1
+            job2 = dataclasses.replace(info["job"], service=remaining)
+            if self.backoff_base > 0:
+                delay = self.backoff_base * (2 ** (tries - 1))
+                heapq.heappush(
+                    st.heap,
+                    (now + delay, _ORDER["arrive"], st.seq, "arrive", job2),
+                )
+                st.seq += 1
+                obs_trace.event("sched.requeue", stream=stream, job=jid,
+                                t_sim=now, backoff=round(delay, 4))
+            else:
+                # legacy behavior: straight back to the queue head
+                st.queue.insert(0, job2)
+                obs_trace.event("sched.requeue", stream=stream, job=jid,
+                                t_sim=now)
+
+        def handle_failed_jobs(now: float, affected: list[int]):
+            """Migrate / shrink / requeue every running job that lost slots."""
+            for jid in affected:
+                if jid not in st.running:
+                    continue
+                rec = st.records[jid]
+                try:
+                    ledger.replace_job(jid)
+                    rec.migrations += 1
+                    # a migration IS a placement: refresh the realized
+                    # metrics and snapshot the machine
+                    analyze_placement(jid)
+                    take_snapshot(now, jid)
+                    obs_trace.event("sched.migrate", stream=stream,
+                                    job=jid, t_sim=now)
+                    continue
+                except RuntimeError:
+                    pass  # job is released and unplaced
+                if self.shrink_to_fit and try_shrink(jid, now):
+                    continue
+                requeue_or_giveup(jid, now)
+
+        def push_repair(now: float, endpoints: tuple[int, ...]):
+            """MTTR repair timer for a failure with no scripted repair."""
+            delay = max(float(st.rng.exponential(self.mttr)), 1e-9)
+            heapq.heappush(
+                st.heap,
+                (now + delay, _ORDER["repair"], st.seq, "repair",
+                 FailureEvent(time=now, endpoints=tuple(endpoints),
+                              repair_at=now + delay)),
+            )
+            st.seq += 1
+
+        def save_checkpoint():
+            buf = np.frombuffer(pickle.dumps((ledger, st)), dtype=np.uint8)
+            ckpt.save(st.ticks, {"pickle": buf},
+                      extra={"t_sim": st.last_t, "stream": stream})
+            obs_trace.event("sched.checkpoint", stream=stream, step=st.ticks,
+                            t_sim=st.last_t, bytes=int(buf.size))
+
+        while st.heap:
+            now = st.heap[0][0]
+            if crash_at is not None and now >= crash_at:
+                os._exit(137)  # hard kill: no atexit, no flush (test hook)
+            while st.heap and st.heap[0][0] == now:
+                _, _, _, kind, payload = heapq.heappop(st.heap)
                 advance(now)
                 if kind == "arrive":
-                    queue.append(payload)
+                    st.queue.append(payload)
                     obs_trace.event("sched.arrive", stream=stream,
                                     job=payload.job_id, t_sim=now,
                                     blocks=payload.blocks)
                 elif kind == "depart":
                     jid, gen = payload
-                    if jid not in running or gens.get(jid) != gen:
+                    if jid not in st.running or st.gens.get(jid) != gen:
                         continue  # stale event (job was requeued)
-                    del running[jid]
+                    del st.running[jid]
                     ledger.release(jid)
-                    records[jid].finish = now
+                    st.records[jid].finish = now
                     obs_trace.event("sched.depart", stream=stream, job=jid,
                                     t_sim=now)
                 elif kind == "fail":
-                    affected = ledger.fail_endpoints(np.asarray(payload.endpoints))
+                    affected = ledger.fail_endpoints(
+                        np.asarray(payload.endpoints)
+                    )
                     obs_trace.event("sched.fail", stream=stream, t_sim=now,
                                     endpoints=len(payload.endpoints),
                                     affected_jobs=len(affected))
-                    for jid in affected:
-                        if jid not in running:
+                    if self.mttr is not None and payload.repair_at is None:
+                        push_repair(now, payload.endpoints)
+                    handle_failed_jobs(now, affected)
+                elif kind == "straggle":
+                    host, seconds = payload
+                    if st.monitor is None:
+                        st.monitor = StragglerMonitor()
+                    flagged = st.monitor.record(host, seconds)
+                    obs_trace.event("sched.straggle", stream=stream,
+                                    t_sim=now, host=host,
+                                    seconds=round(seconds, 4),
+                                    flagged=flagged)
+                    for h in st.monitor.evictions():
+                        if h in st.evicted:
                             continue
-                        rec = records[jid]
-                        try:
-                            ledger.replace_job(jid)
-                            rec.migrations += 1
-                            # a migration IS a placement: refresh the
-                            # realized metrics and snapshot the machine
-                            analyze_placement(jid)
-                            take_snapshot(now, jid)
-                            obs_trace.event("sched.migrate", stream=stream,
-                                            job=jid, t_sim=now)
-                        except RuntimeError:
-                            # evicted: back to the queue head with the
-                            # remaining service time
-                            info = running.pop(jid)
-                            gens[jid] += 1  # invalidate the depart event
-                            remaining = info["finish"] - now
-                            rec.requeues += 1
-                            queue.insert(0, dataclasses.replace(
-                                info["job"], service=remaining,
-                            ))
-                            obs_trace.event("sched.requeue", stream=stream,
-                                            job=jid, t_sim=now)
+                        st.evicted.add(h)
+                        affected = ledger.fail_endpoints(np.asarray([h]))
+                        obs_trace.event("sched.evict", stream=stream,
+                                        t_sim=now, host=h,
+                                        affected_jobs=len(affected))
+                        if self.mttr is not None:
+                            push_repair(now, (int(h),))
+                        handle_failed_jobs(now, affected)
                 elif kind == "repair":
                     ledger.repair_endpoints(np.asarray(payload.endpoints))
                     obs_trace.event("sched.repair", stream=stream, t_sim=now,
@@ -303,29 +500,33 @@ class OnlineScheduler:
             if obs_trace.active() is not None:
                 obs_trace.gauge("sched.frag", round(ledger.fragmentation(), 6),
                                 stream=stream, t_sim=now,
-                                running=len(running), queued=len(queue))
+                                running=len(st.running),
+                                queued=len(st.queue))
             if check_invariants:
                 ledger.check_conservation()
+            st.ticks += 1
+            if ckpt is not None and st.ticks % max(checkpoint_every, 1) == 0:
+                save_checkpoint()
 
-        span = max(last_t, 1e-9)
+        span = max(st.last_t, 1e-9)
         obs_trace.event(
-            "sched.summary", stream=stream, jobs=len(jobs),
-            snapshots=len(snapshots), span=round(span, 4),
-            utilization=round(busy / (E * span), 6),
-            frag_mean=round(frag_int / span, 6),
-            frag_max=round(frag_max, 6),
-            mean_queue=round(queue_int / span, 6),
+            "sched.summary", stream=stream, jobs=len(st.records),
+            snapshots=len(st.snapshots), span=round(span, 4),
+            utilization=round(st.busy / (E * span), 6),
+            frag_mean=round(st.frag_int / span, 6),
+            frag_max=round(st.frag_max, 6),
+            mean_queue=round(st.queue_int / span, 6),
         )
         return StreamResult(
             strategy=ledger.strategy.name,
             policy=ledger.policy,
-            records=[records[j.job_id] for j in
-                     sorted(jobs, key=lambda x: (x.arrival, x.job_id))],
-            snapshots=snapshots,
+            records=sorted(st.records.values(),
+                           key=lambda r: (r.arrival, r.job_id)),
+            snapshots=st.snapshots,
             span=span,
-            utilization=busy / (E * span),
-            gross_utilization=gross / (E * span),
-            frag_mean=frag_int / span,
-            frag_max=frag_max,
-            mean_queue=queue_int / span,
+            utilization=st.busy / (E * span),
+            gross_utilization=st.gross / (E * span),
+            frag_mean=st.frag_int / span,
+            frag_max=st.frag_max,
+            mean_queue=st.queue_int / span,
         )

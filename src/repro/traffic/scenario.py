@@ -89,6 +89,9 @@ class ScenarioSpec:
     fabric_partitioning: str = "shared"
     warmup: int = 0
     link_ok: np.ndarray | None = None
+    # optional repro.resil.epochs.FaultSchedule: time-varying fault
+    # epochs lowered into the engine tables (ANDed with link_ok)
+    fault_schedule: object | None = None
     seed: int = 0
 
 
@@ -144,4 +147,5 @@ def build_workload(topo: HyperX, spec: ScenarioSpec) -> Workload:
         topo, apps, background=backgrounds,
         fabric_partitioning=spec.fabric_partitioning,
         warmup=spec.warmup, link_ok=spec.link_ok,
+        fault_schedule=spec.fault_schedule,
     )

@@ -51,6 +51,11 @@ class Workload:
     # (S, q*n) bool, True = healthy directed link; None = all healthy.
     # See repro.route.faults for mask constructors and apply_faults().
     link_ok: np.ndarray | None = None
+    # time-varying faults: a repro.resil.epochs.FaultSchedule (epoch
+    # starts + per-epoch masks) lowered into the engine's epoch tables;
+    # composes with link_ok (the engine ANDs both).  Kept duck-typed so
+    # traffic does not import resil.
+    fault_schedule: object | None = None
 
     @property
     def target_ranks(self) -> np.ndarray:
@@ -68,6 +73,7 @@ def compose_workload(
     fabric_partitioning: str = "shared",
     warmup: int = 0,
     link_ok: np.ndarray | None = None,
+    fault_schedule: object | None = None,
 ) -> Workload:
     """Merge applications (+ background noise) into one machine workload.
 
@@ -83,6 +89,10 @@ def compose_workload(
     ``link_ok``: optional (S, q*n) link-fault mask (True = healthy); see
     :mod:`repro.route.faults`.  Travels with the workload into the
     engine's device tables, so fault scenarios batch like any other axis.
+
+    ``fault_schedule``: optional time-varying fault epochs (a
+    :class:`repro.resil.epochs.FaultSchedule`); ANDed with ``link_ok``
+    when both are given.
     """
     all_jobs = list(apps) + list(background)
     n_bg = len(background)
@@ -156,6 +166,7 @@ def compose_workload(
         lo=lo, hi=hi, window=window, start=start, num_pools=num_pools,
         names=names,
         link_ok=None if link_ok is None else np.asarray(link_ok, dtype=bool),
+        fault_schedule=fault_schedule,
     )
 
 

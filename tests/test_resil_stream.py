@@ -1,0 +1,259 @@
+"""Resilience subsystem tests (scheduler + crash-safety side): MTTR
+repair timers, backoff requeue / give-up, shrink-to-fit degradation,
+straggler-eviction wiring, checkpointed stream resume (in-process and the
+kill-and-resume subprocess pin), the async Checkpointer failure
+regression, and the benchmark suite's failure isolation."""
+
+import json
+import os
+import subprocess
+import sys
+import types
+
+import numpy as np
+import pytest
+
+from repro.core.hyperx import HyperX
+from repro.checkpoint import Checkpointer
+from repro.runtime.fault_tolerance import StragglerMonitor
+from repro.sched.jobs import Job, poisson_stream
+from repro.sched.scheduler import FailureEvent, OnlineScheduler
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SMALL = HyperX(n=4, q=2)  # 4 slots x 16 endpoints
+
+
+def _sched(**kw):
+    return OnlineScheduler(SMALL, strategy="diagonal", policy="first_fit",
+                           **kw)
+
+
+def _slot_endpoints(slots):
+    led = _sched().ledger
+    return tuple(int(e) for s in slots for e in led.slot_endpoints(s))
+
+
+# ------------------------------------------------------------- MTTR repairs
+def test_mttr_repair_timers_restore_capacity():
+    """A permanent (repair_at=None) failure leaves 3/4 of the machine down
+    forever without mttr; with mttr the drawn repair timer restores it and
+    strictly more jobs finish."""
+    jobs = poisson_stream(16, rate=1.0, seed=0)
+    hit = _slot_endpoints([0, 1, 2])
+    failures = [FailureEvent(time=2.0, endpoints=hit, repair_at=None)]
+    plain = _sched().run_stream(jobs, failures=failures)
+    robust = _sched(mttr=4.0).run_stream(jobs, failures=failures)
+    n_plain = len(plain.finished())
+    n_robust = len(robust.finished())
+    assert n_plain < len(jobs)           # the failure actually bites
+    assert n_robust > n_plain
+    assert robust.summary()["failed"] == 0
+
+
+def test_mttr_validation():
+    with pytest.raises(ValueError, match="mttr"):
+        _sched(mttr=0.0)
+    with pytest.raises(ValueError, match="backoff_base"):
+        _sched(backoff_base=-1.0)
+
+
+# ------------------------------------------------------ backoff and give-up
+def test_backoff_requeue_rearrives_after_delay():
+    """blocks=4 fills the machine; failing every endpoint forces a requeue
+    (no survivors to migrate to).  With backoff the job re-arrives at
+    t+base, waits for the scripted repair, and finishes with its remaining
+    service — deterministic end to end."""
+    job = Job(job_id=0, arrival=0.0, blocks=4, service=5.0)
+    failures = [FailureEvent(time=2.0, endpoints=_slot_endpoints(range(4)),
+                             repair_at=4.0)]
+    res = _sched(backoff_base=1.0).run_stream([job], failures=failures)
+    rec = res.records[0]
+    assert rec.retries == 1 and rec.requeues == 1
+    assert not rec.failed
+    # re-placed at the t=4 repair with 3.0 service units remaining
+    assert rec.finish == pytest.approx(7.0)
+
+
+def test_max_retries_gives_up_and_marks_failed():
+    job = Job(job_id=0, arrival=0.0, blocks=4, service=5.0)
+    failures = [FailureEvent(time=2.0, endpoints=_slot_endpoints(range(4)),
+                             repair_at=4.0)]
+    res = _sched(backoff_base=1.0, max_retries=0).run_stream(
+        [job], failures=failures
+    )
+    rec = res.records[0]
+    assert rec.failed and rec.finish is None
+    assert res.summary()["failed"] == 1
+    assert res.summary()["finished"] == 0
+
+
+# --------------------------------------------------------- shrink to fit
+def test_shrink_to_fit_degrades_instead_of_evicting():
+    """Losing one slot under a 4-block job: migration cannot fit, so the
+    shrink fallback halves the job onto the survivors and marks it
+    degraded — it keeps its original departure time."""
+    job = Job(job_id=0, arrival=0.0, blocks=4, service=5.0)
+    failures = [FailureEvent(time=2.0, endpoints=_slot_endpoints([0]),
+                             repair_at=100.0)]
+    res = _sched(shrink_to_fit=True).run_stream([job], failures=failures)
+    rec = res.records[0]
+    assert rec.degraded and not rec.failed
+    assert rec.requeues == 0
+    assert rec.finish == pytest.approx(5.0)  # departure event survives
+    assert res.summary()["degraded"] == 1
+
+
+def test_shrink_disabled_requeues_instead():
+    job = Job(job_id=0, arrival=0.0, blocks=4, service=5.0)
+    failures = [FailureEvent(time=2.0, endpoints=_slot_endpoints([0]),
+                             repair_at=6.0)]
+    res = _sched().run_stream([job], failures=failures)
+    rec = res.records[0]
+    assert rec.requeues == 1 and not rec.degraded
+    assert rec.finish == pytest.approx(9.0)  # repair at 6 + 3.0 remaining
+
+
+# ------------------------------------------------- straggler eviction wiring
+def test_straggler_eviction_feeds_failure_path():
+    """A persistently slow host reported through the monitor is evicted
+    and flows through the same migrate/requeue/repair machinery as a
+    failure (satellite: StragglerMonitor -> scheduler integration)."""
+    job = Job(job_id=0, arrival=0.0, blocks=4, service=10.0)
+    monitor = StragglerMonitor(threshold=1.2, window=8, evict_after=1)
+    stragglers = [(1.0, 40, 1.0), (2.0, 0, 50.0)]  # host 0 is 50x slower
+    res = _sched(mttr=3.0).run_stream(
+        [job], stragglers=stragglers, straggler_monitor=monitor,
+    )
+    rec = res.records[0]
+    assert monitor.evictions() == [0]
+    assert rec.requeues == 1      # whole-machine job cannot migrate off 0
+    assert rec.finish is not None  # the mttr repair let it run again
+    assert rec.finish > 10.0
+
+
+def test_straggler_noise_without_eviction_is_harmless():
+    job = Job(job_id=0, arrival=0.0, blocks=4, service=10.0)
+    res = _sched().run_stream(
+        [job], stragglers=[(1.0, 0, 1.0), (2.0, 1, 1.01)],
+    )
+    rec = res.records[0]
+    assert rec.requeues == 0 and rec.finish == pytest.approx(10.0)
+
+
+# ------------------------------------------------------- checkpointed resume
+def test_stream_checkpoint_and_resume_in_process(tmp_path):
+    """Checkpointing must not perturb the stream, and resuming from the
+    latest snapshot must replay to the same final records."""
+    jobs = poisson_stream(20, rate=0.8, seed=1)
+    hit = _slot_endpoints([1, 2])
+    failures = [FailureEvent(time=3.0, endpoints=hit, repair_at=9.0)]
+    base = _sched(mttr=5.0, backoff_base=0.5).run_stream(
+        jobs, failures=failures
+    )
+    ck = str(tmp_path / "ck")
+    with_ckpt = _sched(mttr=5.0, backoff_base=0.5).run_stream(
+        jobs, failures=failures, checkpoint_dir=ck, checkpoint_every=2,
+    )
+    assert with_ckpt.records == base.records
+    assert with_ckpt.summary() == base.summary()
+    assert Checkpointer(ck).latest_step() is not None
+    resumed = _sched(mttr=5.0, backoff_base=0.5).run_stream(
+        jobs, failures=failures, checkpoint_dir=ck, resume=True,
+    )
+    assert resumed.records == base.records
+    assert resumed.summary() == base.summary()
+
+
+def _stream_cli(extra, tmp_path, expect_rc=0):
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    args = [sys.executable, "-m", "repro.resil.stream",
+            "--jobs", "30", "--rate", "0.5", "--seed", "3",
+            "--mttr", "15", "--backoff", "0.5", "--churn", "3",
+            "--every", "2"] + extra
+    proc = subprocess.run(args, env=env, cwd=str(tmp_path),
+                          capture_output=True, text=True, timeout=300)
+    assert proc.returncode == expect_rc, proc.stderr
+    return proc
+
+
+def test_kill_and_resume_stream_bit_identical(tmp_path):
+    """The crash-safety pin: hard-kill (exit 137) a checkpointed stream
+    mid-flight, resume it, and the final summary JSON is byte-identical
+    to an uninterrupted run's."""
+    a = str(tmp_path / "a.json")
+    b = str(tmp_path / "b.json")
+    ck = str(tmp_path / "ck")
+    _stream_cli(["--out", a], tmp_path)
+    _stream_cli(["--ckpt", ck, "--crash-at", "20"], tmp_path,
+                expect_rc=137)
+    assert Checkpointer(ck).latest_step() is not None
+    _stream_cli(["--ckpt", ck, "--resume", "--out", b], tmp_path)
+    with open(a) as fa, open(b) as fb:
+        da, db = fa.read(), fb.read()
+    assert da == db
+    assert json.loads(da)["finished"] > 0
+
+
+def test_stream_cli_resume_without_checkpoint_starts_fresh(tmp_path):
+    out = str(tmp_path / "o.json")
+    _stream_cli(["--ckpt", str(tmp_path / "empty"), "--resume",
+                 "--out", out], tmp_path)
+    assert json.load(open(out))["jobs"] == 30
+
+
+# ------------------------------------------------ async Checkpointer failure
+def test_async_checkpointer_save_failure_surfaces(tmp_path, monkeypatch):
+    """Regression: a background _write that dies must raise on wait() (and
+    on the next save()), not silently drop the checkpoint."""
+    ckpt = Checkpointer(str(tmp_path / "ck"), async_save=True)
+
+    def boom(step, host, extra):
+        raise OSError("disk full")
+
+    monkeypatch.setattr(ckpt, "_write", boom)
+    ckpt.save(0, {"a": np.zeros(3)})
+    with pytest.raises(RuntimeError, match="async checkpoint save failed"):
+        ckpt.wait()
+    # the error is consumed: the substrate is usable again afterwards
+    ckpt.wait()
+
+    ckpt.save(1, {"a": np.zeros(3)})  # fails in the background again...
+    with pytest.raises(RuntimeError, match="disk full"):
+        ckpt.save(2, {"a": np.zeros(3)})  # ...and surfaces on the NEXT save
+    monkeypatch.undo()
+    ckpt.save(3, {"a": np.ones(3)})
+    ckpt.wait()
+    assert ckpt.latest_step() == 3
+    tree, _ = ckpt.restore({"a": None})
+    assert (np.asarray(tree["a"]) == 1).all()
+
+
+# ------------------------------------------------- benchmark suite isolation
+def test_benchmark_suite_survives_failing_module(monkeypatch, capsys):
+    """One raising benchmark module must not abort the suite: later
+    modules still run, the failure lands in the wall-time summary, and
+    main() exits nonzero (satellite: benchmarks/run.py isolation)."""
+    from benchmarks import run as bench_run
+
+    ran = []
+    ok = types.ModuleType("benchmarks.fake_ok")
+    ok.run = lambda quick=None: ran.append(("ok", quick))
+    bad = types.ModuleType("benchmarks.fake_fail")
+
+    def _explode(quick=None):
+        raise RuntimeError("synthetic benchmark failure")
+
+    bad.run = _explode
+    monkeypatch.setitem(sys.modules, "benchmarks.fake_ok", ok)
+    monkeypatch.setitem(sys.modules, "benchmarks.fake_fail", bad)
+    monkeypatch.setattr(bench_run, "MODULES",
+                        ["fake_fail", "fake_ok"])
+    rc = bench_run.main(["--quick"])
+    out = capsys.readouterr().out
+    assert rc == 1
+    assert ran == [("ok", True)]          # the suite kept going
+    assert "FAILED" in out and "synthetic benchmark failure" in out
+    assert "fake_ok" in out
+
+    rc_ok = bench_run.main(["--quick", "--only", "fake_ok"])
+    assert rc_ok == 0                      # no failure -> zero exit

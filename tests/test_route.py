@@ -189,8 +189,8 @@ def test_workload_carries_mask_into_tables():
     mask = _one_link_mask()
     wl = apply_faults(_a2a_workload("row"), mask)
     prep = make_workload_tables(wl)
-    np.testing.assert_array_equal(np.asarray(prep.tables.link_ok), mask)
-    assert int(prep.tables.n_mid) == SMALL.num_switches
+    np.testing.assert_array_equal(np.asarray(prep.tables.link_ok[0]), mask)
+    assert int(prep.tables.n_mid[0]) == SMALL.num_switches
     healthy = make_workload_tables(_a2a_workload("row"))
     assert np.asarray(healthy.tables.link_ok).all()
     # same shape bucket: fault scenarios batch with healthy ones

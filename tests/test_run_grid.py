@@ -127,6 +127,8 @@ def test_run_grid_sharded_matches_single_device():
     engine = SimEngine(SMALL, mode="omniwar")
     wls = [_a2a_workload(s) for s in ("row", "diagonal", "full_spread")]
     ref = engine.run_grid(wls, seeds=(0, 7), horizon=5000)
+    # tuples (per-epoch counters) round-trip through JSON as lists
     assert payload["grid"] == [
-        [{k: v for k, v in r.__dict__.items() if k != "telemetry"}
+        [{k: list(v) if isinstance(v, tuple) else v
+          for k, v in r.__dict__.items() if k != "telemetry"}
          for r in per_seed] for per_seed in ref]
