@@ -115,6 +115,11 @@ def main(argv=None):
                 print(f"# [{name}] FAILED: {type(e).__name__}: {e}\n")
                 obs_trace.event("bench.failed", module=name, error=str(e))
             timings.append((name, time.time() - t0))
+            # per-module wall time as a gauge so fleet rollups can chart
+            # where suite time goes without re-parsing stdout
+            obs_trace.gauge("bench.module", round(timings[-1][1], 4),
+                            module=name,
+                            failed=bool(failures and failures[-1][0] == name))
             if not failures or failures[-1][0] != name:
                 print(f"# [{name}] {timings[-1][1]:.1f}s\n")
         if args.trace:

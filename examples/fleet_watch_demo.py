@@ -1,0 +1,95 @@
+"""Fleet service demo: traced streams under churn -> watcher -> insights.
+
+    PYTHONPATH=src python examples/fleet_watch_demo.py [FLEET_DIR]
+
+Drives the whole fleet-observability loop end to end on one machine:
+
+  1. run two traced scheduler streams (different allocation strategies)
+     under an endpoint-churn failure campaign — each lands a
+     store-friendly trace directory under ``FLEET_DIR``;
+  2. point a one-shot :class:`~repro.obs.watch.FleetWatcher` at both
+     dirs: rollups compact the events, alert rules flag the churn;
+  3. render the :mod:`~repro.obs.dashboard` (markdown + HTML);
+  4. ask :mod:`~repro.obs.insights` two questions — which *queue* should
+     absorb a new job (from the watched history) and which *strategy*
+     should place a job right now (from live ledger state, one batched
+     interference simulation across all candidates).
+"""
+
+import sys
+import tempfile
+
+from repro.core.hyperx import HyperX
+from repro.obs import dashboard, insights, trace
+from repro.obs.store import open_store
+from repro.obs.watch import FleetWatcher, default_rules
+from repro.resil.processes import (
+    exponential_lifetimes,
+    sample_components,
+    to_failure_events,
+)
+from repro.sched import OnlineScheduler, poisson_stream
+
+STRATEGIES = ("diagonal", "rectangular")
+
+
+def main():
+    topo = HyperX(n=8, q=2)
+    fleet = sys.argv[1] if len(sys.argv) > 1 else tempfile.mkdtemp(
+        prefix="fleet_")
+    jobs = poisson_stream(60, rate=0.5, mean_service=8.0, seed=11)
+    comps = sample_components(topo, n_endpoints=6, seed=11)
+    failures = to_failure_events(exponential_lifetimes(
+        comps, mtbf=40.0, mttr=10.0, horizon=200, seed=11))
+
+    # 1. two traced streams under the same churn campaign
+    dirs = []
+    for strat in STRATEGIES:
+        d = f"{fleet}/{strat}"
+        dirs.append(d)
+        trace.configure(d, demo="fleet_watch", strategy=strat)
+        try:
+            res = OnlineScheduler(topo, strategy=strat, mttr=10.0,
+                                  backoff_base=0.5).run_stream(
+                jobs, failures=failures)
+        finally:
+            trace.disable()
+        s = res.summary()
+        print(f"{strat:12s} util={s['utilization']:.2f} "
+              f"frag={s['frag_mean']:.3f} failed={s['failed']}")
+
+    # 2. one-shot watch: rollups + alert rules over both traces
+    store = open_store(dirs, store_dir=f"{fleet}/store")
+    FleetWatcher(store, rules=default_rules(frag=0.5, fails=3), echo=False)
+    store.poll()
+    print(f"\nwatch: {store.status_line()}")
+    for alert in store.alerts[:5]:
+        print(f"  ALERT {alert['rule']}: {alert['value']} "
+              f"> {alert['threshold']} ({alert['run']})")
+
+    # 3. dashboard artifacts
+    paths = dashboard.write_dashboard(store, f"{fleet}/dash")
+    print(f"\ndashboard: {paths['html']}")
+
+    # 4a. which queue absorbs the next job best, from watched history?
+    best = insights.recommend_queue(store, blocks=2)
+    print(f"\nqueue recommendation: {best['stream']} — {best['reason']}")
+
+    # 4b. which strategy places a job best right now, from live state?
+    ledger = OnlineScheduler(topo, strategy="diagonal").ledger
+    ledger.place(2, job_id=1)
+    ledger.place(1, job_id=2)
+    ins = insights.recommend(topo, ledger, blocks=1, seeds=(0,),
+                             horizon=20_000)
+    print(f"strategy recommendation for a 1-block job "
+          f"(simulated={ins.simulated}):")
+    for c in ins.candidates:
+        lat = f"{c.avg_latency:.2f}" if c.avg_latency is not None else "-"
+        print(f"  {c.strategy:12s} placeable={c.placeable!s:5s} "
+              f"contiguous={c.contiguous!s:5s} frag={c.frag:.3f} "
+              f"latency={lat}")
+    print(f"-> place with {ins.best.strategy}")
+
+
+if __name__ == "__main__":
+    main()

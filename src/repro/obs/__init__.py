@@ -1,6 +1,6 @@
-"""Observability subsystem: in-sim telemetry, run tracing, fleet reports.
+"""Observability subsystem: telemetry, tracing, reports, fleet service.
 
-Three layers (DESIGN.md §Observability):
+Layers (DESIGN.md §Observability, §Fleet service):
 
   * :mod:`.probes` — :class:`TelemetrySpec` / :class:`Telemetry`: static
     probe specs that join the engine compile key (default off = the
@@ -11,7 +11,15 @@ Three layers (DESIGN.md §Observability):
   * :mod:`.trace` — host-side span/event JSONL logging + run manifest,
     zero-cost when no tracer is configured;
   * :mod:`.report` — renders a trace directory into CSV tables and a
-    markdown fleet report (``python -m repro.obs.report TRACE_DIR``).
+    markdown fleet report (``python -m repro.obs.report TRACE_DIR``);
+  * :mod:`.store` — persistent :class:`EventStore`: append-aware tailing
+    of live trace dirs into bounded windowed rollups, checkpointed;
+  * :mod:`.watch` — :class:`FleetWatcher` CLI: follow live runs,
+    evaluate declarative alert rules (``python -m repro.obs.watch``);
+  * :mod:`.insights` — queryable placement/queue recommendations from
+    live ledger state + store rollups;
+  * :mod:`.dashboard` — store rollups → markdown/HTML fleet dashboard
+    (``python -m repro.obs.dashboard``).
 """
 
 from repro.obs import trace
@@ -22,14 +30,16 @@ from repro.obs.probes import (
     init_telemetry,
 )
 
+_LAZY = ("report", "store", "watch", "insights", "dashboard")
+
 
 def __getattr__(name):
-    # lazy: `python -m repro.obs.report` would otherwise warn that the
+    # lazy: `python -m repro.obs.<mod>` would otherwise warn that the
     # module is already in sys.modules before runpy executes it
-    if name == "report":
+    if name in _LAZY:
         import importlib
 
-        return importlib.import_module("repro.obs.report")
+        return importlib.import_module(f"repro.obs.{name}")
     raise AttributeError(f"module 'repro.obs' has no attribute {name!r}")
 
 __all__ = [
@@ -37,6 +47,10 @@ __all__ = [
     "TelemetrySpec",
     "TelemetryState",
     "init_telemetry",
+    "dashboard",
+    "insights",
     "report",
+    "store",
     "trace",
+    "watch",
 ]

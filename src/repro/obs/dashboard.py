@@ -1,0 +1,224 @@
+"""Fleet dashboard: render store rollups as markdown + self-contained HTML.
+
+    PYTHONPATH=src python -m repro.obs.dashboard TRACE_DIR... [--out DIR]
+        [--ckpt DIR] [--refresh S] [--follow] [--interval S]
+
+One-shot: ingest the trace dirs (or restore a checkpointed store with
+``--ckpt``) and write ``dashboard.md`` + ``dashboard.html``.  ``--follow``
+keeps polling and re-rendering until the traced runs end, and
+``--refresh`` stamps the HTML with a ``<meta http-equiv="refresh">`` so a
+browser pointed at the file live-updates — together they are the "leave a
+browser open on the fleet" mode.  Tables reuse the report generator's
+builders (:func:`repro.obs.report.md_table`), so the dashboard and the
+post-hoc report render the same rows the same way.
+"""
+
+from __future__ import annotations
+
+import argparse
+import html
+import os
+import sys
+import time
+
+from repro.obs.store import EventStore, open_store
+
+_BLOCKS = "▁▂▃▄▅▆▇█"
+
+_CSS = """
+body{font-family:-apple-system,'Segoe UI',Roboto,sans-serif;margin:2em;
+     background:#fafafa;color:#1a1a1a;max-width:72em}
+h1{font-size:1.4em}h2{font-size:1.1em;margin-top:1.6em}
+table{border-collapse:collapse;font-size:0.85em;margin:0.5em 0}
+th,td{border:1px solid #ccc;padding:0.25em 0.6em;text-align:right}
+th{background:#ececec}td:first-child,th:first-child{text-align:left}
+.alert td{background:#fde8e8}
+.spark{font-family:monospace;letter-spacing:-1px;text-align:left}
+footer{margin-top:2em;color:#777;font-size:0.8em}
+"""
+
+
+def sparkline(values, lo: float = 0.0, hi: float | None = None) -> str:
+    """Unicode block sparkline of a numeric series (deterministic)."""
+    vals = [float(v) for v in values]
+    if not vals:
+        return ""
+    hi = max(vals) if hi is None else hi
+    span = max(hi - lo, 1e-9)
+    out = []
+    for v in vals:
+        i = int((min(max(v, lo), hi) - lo) / span * (len(_BLOCKS) - 1))
+        out.append(_BLOCKS[i])
+    return "".join(out)
+
+
+def _frag_sparks(store: EventStore) -> list[dict]:
+    """Per-stream fragmentation + queue-depth sparklines over the windows."""
+    rows = []
+    for key in sorted(store.runs):
+        run = store.runs[key]
+        for sname in sorted(run.streams):
+            sr = run.streams[sname]
+            active = [w for w in range(store.spec.n_windows)
+                      if sr.frag_cnt[w]]
+            if not active:
+                continue
+            hi = active[-1] + 1
+            frag = [sr.frag_sum[w] / max(sr.frag_cnt[w], 1)
+                    for w in range(hi)]
+            queued = [sr.queued_sum[w] / max(sr.frag_cnt[w], 1)
+                      for w in range(hi)]
+            rows.append({
+                "run": key, "stream": sname,
+                "frag": sparkline(frag, hi=1.0),
+                "queued": sparkline(queued),
+                "windows": hi,
+            })
+    return rows
+
+
+def _sections(store: EventStore) -> list[tuple[str, list[dict]]]:
+    """(title, rows) sections in render order; empty sections are skipped."""
+    rows = store.rollup_rows()
+    links = sorted(rows["links"],
+                   key=lambda r: -float(r.get("util", 0.0)))[:15]
+    return [
+        ("Runs", rows["runs"]),
+        ("Scheduler streams (utilization & fragmentation)", rows["streams"]),
+        ("Fragmentation / queue-depth timelines", _frag_sparks(store)),
+        ("Link utilization (per strategy)", rows["telemetry"]),
+        ("Hottest links", links),
+        ("Alerts", rows["alerts"][-20:]),
+        ("Benchmark module wall times", rows["bench"]),
+    ]
+
+
+def render_markdown(store: EventStore) -> str:
+    from repro.obs.report import md_table
+
+    parts = [
+        "# Fleet dashboard\n",
+        f"_{store.total_events} events · {len(store.runs)} run(s) · "
+        f"{len(store.alerts)} alert(s)._\n",
+    ]
+    for title, rows in _sections(store):
+        if not rows:
+            continue
+        parts.append(f"\n## {title}\n")
+        parts.append(md_table(rows))
+    return "\n".join(parts)
+
+
+def _html_table(rows: list[dict], alert: bool = False) -> str:
+    cols = list(rows[0].keys())
+    out = ["<table>", "<tr>" + "".join(f"<th>{html.escape(str(c))}</th>"
+                                       for c in cols) + "</tr>"]
+    for r in rows:
+        cls = ' class="alert"' if alert else ""
+        cells = "".join(
+            f'<td class="spark">{html.escape(str(r.get(c, "")))}</td>'
+            if isinstance(r.get(c), str) and set(r[c]) <= set(_BLOCKS)
+            and r[c] else
+            f"<td>{html.escape(str(r.get(c, '')))}</td>"
+            for c in cols
+        )
+        out.append(f"<tr{cls}>{cells}</tr>")
+    out.append("</table>")
+    return "\n".join(out)
+
+
+def render_html(store: EventStore, refresh: float | None = None) -> str:
+    meta = (f'<meta http-equiv="refresh" content="{refresh:g}">'
+            if refresh else "")
+    parts = [
+        "<!doctype html><html><head><meta charset='utf-8'>",
+        meta,
+        "<title>Fleet dashboard</title>",
+        f"<style>{_CSS}</style></head><body>",
+        "<h1>Fleet dashboard</h1>",
+        f"<p>{store.total_events} events · {len(store.runs)} run(s) · "
+        f"{len(store.alerts)} alert(s)</p>",
+    ]
+    for title, rows in _sections(store):
+        if not rows:
+            continue
+        parts.append(f"<h2>{html.escape(title)}</h2>")
+        parts.append(_html_table(rows, alert=title == "Alerts"))
+    parts.append("<footer>rendered by repro.obs.dashboard</footer>")
+    parts.append("</body></html>")
+    return "\n".join(parts)
+
+
+def write_dashboard(store: EventStore, out_dir: str,
+                    refresh: float | None = None) -> dict[str, str]:
+    """Render both artifacts into ``out_dir``; returns written paths."""
+    os.makedirs(out_dir, exist_ok=True)
+    paths = {}
+    md = os.path.join(out_dir, "dashboard.md")
+    with open(md, "w") as f:
+        f.write(render_markdown(store))
+    paths["markdown"] = md
+    hp = os.path.join(out_dir, "dashboard.html")
+    with open(hp, "w") as f:
+        f.write(render_html(store, refresh=refresh))
+    paths["html"] = hp
+    return paths
+
+
+# --------------------------------------------------------------------- CLI
+def build_parser() -> argparse.ArgumentParser:
+    p = argparse.ArgumentParser(
+        prog="repro.obs.dashboard",
+        description="render store rollups into a fleet dashboard",
+    )
+    p.add_argument("dirs", nargs="*", metavar="TRACE_DIR")
+    p.add_argument("--ckpt", default=None,
+                   help="restore a checkpointed EventStore instead of "
+                        "(or in addition to) ingesting trace dirs")
+    p.add_argument("--out", default=None,
+                   help="output dir (default: first TRACE_DIR/dashboard)")
+    p.add_argument("--refresh", type=float, default=None,
+                   help="HTML meta-refresh seconds (live browser view)")
+    p.add_argument("--follow", action="store_true",
+                   help="keep polling + re-rendering until runs end")
+    p.add_argument("--interval", type=float, default=2.0)
+    p.add_argument("--idle-timeout", type=float, default=60.0)
+    p.add_argument("--window", type=float, default=20.0)
+    p.add_argument("--n-windows", type=int, default=64)
+    return p
+
+
+def run(argv=None) -> int:
+    from repro.obs.store import StoreSpec
+
+    args = build_parser().parse_args(argv)
+    if not args.dirs and not args.ckpt:
+        print("# obs.dashboard: need TRACE_DIR(s) or --ckpt",
+              file=sys.stderr)
+        return 2
+    store = open_store(
+        args.dirs, spec=StoreSpec(window=args.window,
+                                  n_windows=args.n_windows),
+        checkpoint_dir=args.ckpt, resume=args.ckpt is not None,
+    )
+    out = args.out or (os.path.join(args.dirs[0], "dashboard")
+                       if args.dirs else "dashboard")
+    store.poll()
+    paths = write_dashboard(store, out, refresh=args.refresh)
+    idle = 0.0
+    while args.follow and not store.ended():
+        time.sleep(args.interval)
+        n = store.poll()
+        idle = 0.0 if n else idle + args.interval
+        if n:
+            write_dashboard(store, out, refresh=args.refresh)
+        if idle >= args.idle_timeout:
+            break
+    write_dashboard(store, out, refresh=args.refresh)
+    for name, path in sorted(paths.items()):
+        print(f"# {name}: {path}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(run())

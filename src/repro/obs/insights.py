@@ -1,0 +1,252 @@
+"""Queryable recommendation API: "which strategy/queue for a B-block job?"
+
+Two complementary query surfaces:
+
+  * :func:`recommend` answers from **live machine state**: a
+    :class:`~repro.sched.ledger.BlockLedger`'s current occupancy decides
+    placeability/contiguity/fragmentation per candidate strategy, and
+    (``simulate=True``) a hypothetical co-resident snapshot per strategy —
+    the current tenants plus the new job — refreshes an interference grid
+    through :func:`repro.sched.bridge.evaluate_snapshots` (one engine, one
+    batched device call for *all* candidates).  Results are **memoized on
+    a snapshot hash** over the ledger occupancy + query parameters, so
+    repeated queries against an unchanged machine never re-simulate
+    (``Insight.cached`` says which path answered; pinned in tests).
+  * :func:`queue_outlook` / :func:`recommend_queue` answer from **history**:
+    an :class:`~repro.obs.store.EventStore`'s rollups (typically restored
+    from a checkpoint — no raw event log needed) rank the observed
+    scheduler streams by recent fragmentation, queue depth and failure
+    pressure, the "which queue absorbs this job best" half of the ROADMAP
+    fleet-service question.
+"""
+
+from __future__ import annotations
+
+import copy
+import dataclasses
+import hashlib
+from typing import Mapping, Sequence
+
+from repro.core.hyperx import HyperX
+from repro.sched.ledger import BlockLedger
+from repro.sched.scheduler import Snapshot
+
+_DEFAULT_STRATEGIES = ("diagonal", "rectangular", "row", "full_spread")
+_MEMO: dict[str, "Insight"] = {}
+_MEMO_CAP = 128
+_HYPO_JOB = 1 << 30  # job id for the hypothetical placement
+
+
+@dataclasses.dataclass(frozen=True)
+class Candidate:
+    """One strategy's answer for the queried job."""
+
+    strategy: str
+    placeable: bool
+    contiguous: bool
+    free_slots: int
+    frag: float                      # current frag in this strategy's frame
+    avg_latency: float | None = None  # predicted under co-resident load
+    avg_hops: float | None = None
+    completed: bool | None = None
+
+
+@dataclasses.dataclass(frozen=True)
+class Insight:
+    """A ranked recommendation (best candidate first)."""
+
+    blocks: int
+    key: str                  # the memo/snapshot hash
+    cached: bool              # True when answered from the memo
+    simulated: bool
+    candidates: tuple[Candidate, ...]
+
+    @property
+    def best(self) -> Candidate | None:
+        return self.candidates[0] if self.candidates else None
+
+
+def snapshot_key(
+    ledger: BlockLedger,
+    blocks: int,
+    strategies: Sequence[str],
+    kernel: str,
+    kernels: Mapping[int, str] | None,
+    mode: str,
+    seeds: Sequence[int],
+    horizon: int,
+    simulate: bool,
+) -> str:
+    """Hash of everything the answer depends on: machine occupancy + query."""
+    h = hashlib.sha256()
+    topo = ledger.topo
+    h.update(repr((topo.n, topo.q, topo.concentration, ledger.strategy.name,
+                   ledger.policy, ledger.seed, ledger.allow_scatter,
+                   int(blocks), tuple(strategies), kernel,
+                   tuple(sorted((kernels or {}).items())), mode,
+                   tuple(int(s) for s in seeds), int(horizon),
+                   bool(simulate))).encode())
+    h.update(ledger.free.tobytes())
+    h.update(ledger.failed.tobytes())
+    for jid in sorted(ledger.jobs):
+        job = ledger.jobs[jid]
+        h.update(repr((jid, job.slots, job.contiguous)).encode())
+        h.update(job.partition.endpoints.tobytes())
+    return h.hexdigest()[:16]
+
+
+def recommend(
+    topo: HyperX,
+    ledger: BlockLedger,
+    blocks: int,
+    strategies: Sequence[str] = _DEFAULT_STRATEGIES,
+    kernel: str = "all_to_all",
+    kernels: Mapping[int, str] | None = None,
+    mode: str = "omniwar",
+    seeds: Sequence[int] = (0,),
+    horizon: int = 30_000,
+    simulate: bool = True,
+) -> Insight:
+    """Rank candidate strategies for placing a ``blocks``-block job *now*.
+
+    ``kernel`` is the new job's traffic kernel; ``kernels`` maps resident
+    job ids to theirs (default ``all_to_all`` — the conservative
+    worst-case collective).  Ranking: placeable before not, contiguous
+    before scattered, then predicted ``avg_latency`` under the co-resident
+    interference simulation, then current fragmentation.
+
+    The ledger is never mutated (hypothetical placements run on a copy).
+    """
+    if blocks < 1:
+        raise ValueError(f"need a positive block count, got {blocks}")
+    key = snapshot_key(ledger, blocks, strategies, kernel, kernels, mode,
+                       seeds, horizon, simulate)
+    hit = _MEMO.get(key)
+    if hit is not None:
+        return dataclasses.replace(hit, cached=True)
+
+    fits: dict[str, Candidate] = {}
+    snaps: dict[str, list[Snapshot]] = {}
+    for strat in strategies:
+        free = ledger.free_slots(strat)
+        found = ledger.find_slots(blocks, strat) \
+            if blocks <= ledger.num_slots else None
+        frag = ledger.fragmentation(strat)
+        if found is None:
+            fits[strat] = Candidate(
+                strategy=strat, placeable=False, contiguous=False,
+                free_slots=int(free.sum()), frag=round(frag, 4),
+            )
+            continue
+        _, contiguous = found
+        fits[strat] = Candidate(
+            strategy=strat, placeable=True, contiguous=contiguous,
+            free_slots=int(free.sum()), frag=round(frag, 4),
+        )
+        if simulate:
+            hypo = copy.deepcopy(ledger)
+            hypo.place(blocks, strategy=strat, job_id=_HYPO_JOB)
+            snaps[strat] = [Snapshot(
+                time=0.0, trigger=_HYPO_JOB,
+                jobs=tuple(
+                    (jid,
+                     kernel if jid == _HYPO_JOB
+                     else (kernels or {}).get(jid, "all_to_all"),
+                     hypo.jobs[jid].partition)
+                    for jid in sorted(hypo.jobs)
+                ),
+                failed_endpoints=tuple(
+                    int(e) for e in ledger.failed.nonzero()[0]
+                ),
+            )]
+
+    if snaps:
+        from repro.sched.bridge import evaluate_snapshots
+
+        rows, _stats = evaluate_snapshots(
+            topo, snaps, seeds=seeds, horizon=horizon, mode=mode,
+            churn_faults=True,
+        )
+        by_strat: dict[str, list[dict]] = {}
+        for row in rows:
+            by_strat.setdefault(row["key"], []).append(row)
+        for strat, srows in by_strat.items():
+            lat = sum(r["avg_latency"] for r in srows) / len(srows)
+            hops = sum(r["avg_hops"] for r in srows) / len(srows)
+            fits[strat] = dataclasses.replace(
+                fits[strat],
+                avg_latency=round(lat, 3), avg_hops=round(hops, 4),
+                completed=all(r["completed"] for r in srows),
+            )
+
+    ranked = sorted(
+        fits.values(),
+        key=lambda c: (
+            not c.placeable, not c.contiguous,
+            c.avg_latency if c.avg_latency is not None else float("inf"),
+            c.frag, c.strategy,
+        ),
+    )
+    insight = Insight(blocks=blocks, key=key, cached=False,
+                      simulated=bool(snaps), candidates=tuple(ranked))
+    if len(_MEMO) >= _MEMO_CAP:
+        _MEMO.pop(next(iter(_MEMO)))
+    _MEMO[key] = insight
+    return insight
+
+
+def clear_memo():
+    _MEMO.clear()
+
+
+# ---------------------------------------------------------- store-backed
+def queue_outlook(store) -> list[dict]:
+    """Rank observed scheduler streams from an EventStore's rollups.
+
+    One row per (run, stream) with the recent pressure signals and a
+    composite ``score`` (lower = more headroom): fragmentation + queue
+    depth + failure pressure.  Works on a checkpoint-restored store — no
+    raw event log is touched.
+    """
+    rows = []
+    for key in sorted(store.runs):
+        run = store.runs[key]
+        for sname in sorted(run.streams):
+            sr = run.streams[sname]
+            arrived = max(sr.totals["arrive"], 1)
+            fail_rate = (sr.totals["fail"] + sr.totals["giveup"]) / arrived
+            frag = sr.summary.get("frag_mean", sr.last_frag)
+            score = float(frag) + 0.1 * sr.last_queued + fail_rate
+            rows.append({
+                "run": key, "stream": sname,
+                "arrived": sr.totals["arrive"],
+                "finished": sr.totals["depart"],
+                "failures": sr.totals["fail"],
+                "frag": round(float(frag), 4),
+                "queued": sr.last_queued,
+                "running": sr.last_running,
+                "utilization": sr.summary.get("utilization", ""),
+                "fail_rate": round(fail_rate, 4),
+                "score": round(score, 4),
+            })
+    rows.sort(key=lambda r: (r["score"], r["run"], r["stream"]))
+    return rows
+
+
+def recommend_queue(store, blocks: int = 1) -> dict | None:
+    """The best stream (strategy/policy queue) for a new job, from history.
+
+    Returns the top :func:`queue_outlook` row annotated with a human
+    reason, or ``None`` when the store has seen no scheduler streams.
+    """
+    outlook = queue_outlook(store)
+    if not outlook:
+        return None
+    best = dict(outlook[0])
+    best["blocks"] = blocks
+    best["reason"] = (
+        f"lowest pressure score {best['score']} "
+        f"(frag {best['frag']}, queued {best['queued']}, "
+        f"fail_rate {best['fail_rate']})"
+    )
+    return best

@@ -63,6 +63,29 @@ def load_trace(trace_dir: str) -> tuple[dict, list[dict]]:
     return manifest, events
 
 
+def split_runs(events: list[dict]) -> list[tuple[str, list[dict]]]:
+    """Split an event list on ``trace.start`` boundaries.
+
+    ``events.jsonl`` is opened in append mode, so re-``configure``-ing into
+    the same directory aggregates several runs into one file; every table
+    must be computed per run, not over the blended log.  Returns
+    ``[(run_id, events), ...]`` in file order — a single-run file (or one
+    with no ``trace.start`` at all) comes back as one group.
+    """
+    runs: list[tuple[str, list[dict]]] = []
+    cur_id, cur = "", []
+    for ev in events:
+        if ev.get("name") == "trace.start":
+            if cur:
+                runs.append((cur_id, cur))
+            cur_id = str(ev.get("run_id") or f"run{len(runs) + 1}")
+            cur = []
+        cur.append(ev)
+    if cur:
+        runs.append((cur_id, cur))
+    return runs or [("", [])]
+
+
 # ------------------------------------------------------------------- tables
 def span_rows(events: list[dict]) -> list[dict]:
     """Aggregate span events by name: count, total/mean/max duration."""
@@ -224,19 +247,19 @@ def _md_table(rows: list[dict]) -> str:
     return "\n".join(lines) + "\n"
 
 
-def render_markdown(manifest: dict, events: list[dict]) -> str:
-    """The full fleet report as markdown text."""
-    parts = ["# Run report\n"]
-    if manifest:
-        keys = ("run_id", "git_rev", "backend", "devices", "lane_backend",
-                "jax", "config_hash")
-        parts.append("## Manifest\n")
-        parts.append(_md_table([{k: manifest.get(k, "") for k in keys}]))
+# public aliases: the dashboard and the event store reuse these builders
+csv_text = _csv_text
+md_table = _md_table
+
+
+def _run_tables(events: list[dict], heading: str = "##") -> list[str]:
+    """The per-run table sections (shared by single- and multi-run paths)."""
+    parts = []
     tel = utilization_rows(events)
     if tel:
-        parts.append("\n## Link utilization (per strategy)\n")
+        parts.append(f"\n{heading} Link utilization (per strategy)\n")
         parts.append(_md_table(tel))
-        parts.append("\n### Hottest links\n")
+        parts.append(f"\n{heading}# Hottest links\n")
         hot = []
         for ev in telemetry_events(events):
             for link in hottest_links(ev, 5):
@@ -244,13 +267,41 @@ def render_markdown(manifest: dict, events: list[dict]) -> str:
         parts.append(_md_table(hot))
     sched = sched_rows(events)
     if sched:
-        parts.append("\n## Scheduler streams (fragmentation & churn)\n")
+        parts.append(f"\n{heading} Scheduler streams (fragmentation & churn)\n")
         parts.append(_md_table(sched))
     spans = span_rows(events)
     if spans:
-        parts.append("\n## Span timings\n")
+        parts.append(f"\n{heading} Span timings\n")
         parts.append(_md_table(spans))
-    parts.append(f"\n_{len(events)} events._\n")
+    return parts
+
+
+def render_markdown(manifest: dict, events: list[dict]) -> str:
+    """The full fleet report as markdown text.
+
+    An append-mode trace directory may hold several runs; tables are split
+    on ``trace.start`` boundaries and the run count is surfaced up front —
+    a blended multi-run table would silently aggregate unrelated streams.
+    """
+    runs = split_runs(events)
+    parts = ["# Run report\n"]
+    if manifest:
+        keys = ("run_id", "git_rev", "backend", "devices", "lane_backend",
+                "jax", "config_hash")
+        parts.append("## Manifest\n")
+        parts.append(_md_table([{k: manifest.get(k, "") for k in keys}]))
+    if len(runs) > 1:
+        parts.append(f"\n## Runs ({len(runs)})\n")
+        parts.append(_md_table([
+            {"run": rid or f"run{i + 1}", "events": len(evs)}
+            for i, (rid, evs) in enumerate(runs)
+        ]))
+        for i, (rid, evs) in enumerate(runs):
+            parts.append(f"\n## Run {rid or f'run{i + 1}'}\n")
+            parts.extend(_run_tables(evs, heading="###"))
+    else:
+        parts.extend(_run_tables(events))
+    parts.append(f"\n_{len(events)} events across {len(runs)} run(s)._\n")
     return "\n".join(parts)
 
 
@@ -259,9 +310,18 @@ def write_report(trace_dir: str, out_dir: str | None = None) -> dict[str, str]:
     out_dir = out_dir or os.path.join(trace_dir, "report")
     os.makedirs(out_dir, exist_ok=True)
     manifest, events = load_trace(trace_dir)
+    runs = split_runs(events)
     written: dict[str, str] = {}
 
-    def emit_csv(name, rows):
+    def emit_csv(name, fn):
+        if len(runs) > 1:  # split per run; a leading run column labels rows
+            rows = [
+                {"run": rid or f"run{i + 1}", **row}
+                for i, (rid, evs) in enumerate(runs)
+                for row in fn(evs)
+            ]
+        else:
+            rows = fn(events)
         if not rows:
             return
         path = os.path.join(out_dir, f"{name}.csv")
@@ -269,12 +329,12 @@ def write_report(trace_dir: str, out_dir: str | None = None) -> dict[str, str]:
             f.write(_csv_text(rows))
         written[name] = path
 
-    emit_csv("spans", span_rows(events))
-    emit_csv("sched", sched_rows(events))
-    emit_csv("utilization", utilization_rows(events))
-    emit_csv("link_heatmap", link_heatmap_rows(events))
-    emit_csv("latency", latency_rows(events))
-    emit_csv("queue_occupancy", queue_occupancy_rows(events))
+    emit_csv("spans", span_rows)
+    emit_csv("sched", sched_rows)
+    emit_csv("utilization", utilization_rows)
+    emit_csv("link_heatmap", link_heatmap_rows)
+    emit_csv("latency", latency_rows)
+    emit_csv("queue_occupancy", queue_occupancy_rows)
     md = os.path.join(out_dir, "report.md")
     with open(md, "w") as f:
         f.write(render_markdown(manifest, events))

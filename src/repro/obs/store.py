@@ -1,0 +1,524 @@
+"""Persistent event store: append-aware tailing + bounded windowed rollups.
+
+An :class:`EventStore` ingests one or more trace directories (the
+``events.jsonl`` + ``manifest.json`` layout :mod:`repro.obs.trace` runs
+write) *incrementally*:
+
+  * **Tailing.**  A per-file byte offset marks how far each
+    ``events.jsonl`` has been consumed; :meth:`EventStore.poll` reads only
+    newly appended **complete** lines.  A truncated final line — a live
+    writer mid-``write`` or a crashed run — is left un-consumed until its
+    newline arrives, so a follower and a one-shot reader of the finished
+    file fold the exact same event sequence (the parity the watcher pins).
+  * **Run keying.**  Every ``trace.start`` event opens a new run keyed
+    ``<dir-basename>/<run_id>`` (append-mode logs may hold several runs);
+    ``config_hash`` joins from the directory's manifest.
+  * **Rollups.**  Events compact into per-run :class:`RunRollup`s:
+    fixed-width sim-time windows of scheduler counters and
+    fragmentation/queue gauges per stream (the last window absorbs
+    overflow, mirroring ``TelemetrySpec``), link/dimension-utilization
+    digests from ``sim.telemetry`` events, heartbeat cadence,
+    ``bench.module`` wall-time gauges, and ``obs.alert`` records — so a
+    thousands-of-jobs trace replays and resumes in memory proportional to
+    the window count, never the event count.
+  * **Checkpoints.**  With ``checkpoint_dir`` set, the whole store state
+    (rollups + tail offsets + subscriber rule state) snapshots through
+    :class:`repro.checkpoint.Checkpointer` every ``checkpoint_every``
+    consumed events, *inside* the consume loop — a killed ingest resumes
+    from the last committed snapshot and re-derives byte-identical rollup
+    CSVs (pinned by a kill-and-resume test), and a restored store answers
+    insights queries without re-reading the raw event log.
+
+Rollup CSVs (:meth:`EventStore.write_csvs`) are pure functions of the
+consumed event sequence: iteration is sorted, accumulation is sequential,
+rounding happens only at render time.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import pickle
+
+import numpy as np
+
+_CHUNK = 1 << 20  # tail-read granularity (bounds memory on huge backlogs)
+
+# scheduler event kinds folded into windowed counters (column order is the
+# CSV contract) and the remainder tracked as totals only
+_WINDOW_KINDS = ("arrive", "start", "depart", "fail", "migrate", "requeue")
+_TOTAL_KINDS = _WINDOW_KINDS + (
+    "repair", "evict", "giveup", "degrade", "straggle", "requeue",
+    "checkpoint", "resume", "heartbeat", "summary",
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class StoreSpec:
+    """Static rollup shape (sim-time window width / count, link top-k)."""
+
+    window: float = 20.0
+    n_windows: int = 64
+    top_links: int = 10
+
+    def __post_init__(self):
+        if self.window <= 0 or self.n_windows < 1 or self.top_links < 1:
+            raise ValueError(f"degenerate StoreSpec {self}")
+
+    def window_of(self, t_sim: float) -> int:
+        return min(int(t_sim // self.window), self.n_windows - 1)
+
+
+class _StreamRollup:
+    """Windowed counters + gauges for one scheduler stream of one run."""
+
+    def __init__(self, spec: StoreSpec):
+        W = spec.n_windows
+        self.counts = {k: [0] * W for k in _WINDOW_KINDS}
+        self.frag_sum = [0.0] * W
+        self.frag_cnt = [0] * W
+        self.frag_max = [0.0] * W
+        self.queued_sum = [0.0] * W
+        self.running_sum = [0.0] * W
+        self.totals = {k: 0 for k in _TOTAL_KINDS}
+        self.last_frag = 0.0
+        self.last_queued = 0
+        self.last_running = 0
+        self.summary: dict = {}
+
+    def fold(self, spec: StoreSpec, kind: str, ev: dict):
+        if kind in self.totals:
+            self.totals[kind] += 1
+        t_sim = ev.get("t_sim")
+        w = spec.window_of(float(t_sim)) if t_sim is not None else None
+        if kind in self.counts and w is not None:
+            self.counts[kind][w] += 1
+        if kind == "frag" and w is not None:
+            v = float(ev.get("value", 0.0))
+            self.frag_sum[w] += v
+            self.frag_cnt[w] += 1
+            self.frag_max[w] = max(self.frag_max[w], v)
+            self.queued_sum[w] += float(ev.get("queued", 0))
+            self.running_sum[w] += float(ev.get("running", 0))
+            self.last_frag = v
+            self.last_queued = int(ev.get("queued", 0))
+            self.last_running = int(ev.get("running", 0))
+        elif kind == "summary":
+            self.summary = {
+                k: ev[k] for k in (
+                    "jobs", "span", "utilization", "frag_mean", "frag_max",
+                    "mean_queue", "snapshots",
+                ) if k in ev
+            }
+
+
+class RunRollup:
+    """Everything the store keeps about one run (bounded, picklable)."""
+
+    def __init__(self, key: str, spec: StoreSpec, trace_dir: str = "",
+                 config_hash: str = ""):
+        self.key = key
+        self.spec = spec
+        self.trace_dir = trace_dir
+        self.config_hash = config_hash
+        self.events = 0
+        self.ended = False
+        self.last_t = 0.0           # wall seconds since the run's trace start
+        self.streams: dict[str, _StreamRollup] = {}
+        self.telemetry: dict[str, dict] = {}   # label -> last digest scalars
+        self.links: dict[str, list[dict]] = {}  # label -> top-k link rows
+        self.bench: dict[str, float] = {}      # module -> wall seconds
+        self.heartbeats = 0
+        self.last_heartbeat_t: float | None = None
+        self.max_heartbeat_gap = 0.0
+        self.alerts = 0
+
+    def _stream(self, name: str) -> _StreamRollup:
+        sr = self.streams.get(name)
+        if sr is None:
+            sr = self.streams[name] = _StreamRollup(self.spec)
+        return sr
+
+    # ------------------------------------------------------------- folding
+    def fold(self, ev: dict):
+        self.events += 1
+        self.last_t = float(ev.get("t", self.last_t))
+        name = str(ev.get("name", ""))
+        if name == "trace.end":
+            self.ended = True
+        elif name == "sched.heartbeat":
+            t = float(ev.get("t", 0.0))
+            if self.last_heartbeat_t is not None:
+                self.max_heartbeat_gap = max(
+                    self.max_heartbeat_gap, t - self.last_heartbeat_t
+                )
+            self.last_heartbeat_t = t
+            self.heartbeats += 1
+            self._stream(str(ev.get("stream", "-"))).totals["heartbeat"] += 1
+        elif name.startswith("sched."):
+            kind = name.split(".", 1)[1]
+            self._stream(str(ev.get("stream", "-"))).fold(self.spec, kind, ev)
+        elif ev.get("type") == "telemetry":
+            label = str(ev.get("label", ""))
+            self.telemetry[label] = {
+                k: ev[k] for k in (
+                    "cycles", "util_mean", "util_max", "deroutes",
+                    "escalations", "injected", "delivered", "lat_mean",
+                    "epoch_flips", "dead_links_mean",
+                ) if k in ev
+            }
+            self.telemetry[label]["dim_util"] = "|".join(
+                str(u) for u in ev.get("dim_util", [])
+            )
+            self.links[label] = [
+                dict(row) for row in ev.get("top_links", [])[: self.spec.top_links]
+            ]
+        elif name == "bench.module" and ev.get("type") == "gauge":
+            self.bench[str(ev.get("module", ""))] = float(ev.get("value", 0.0))
+
+
+class EventStore:
+    """Ingests trace dirs into rollups; optionally checkpointed + persistent.
+
+    ``store_dir`` (optional) is the store's own directory: fired alerts are
+    appended to ``<store_dir>/alerts.jsonl`` there (rewritten from state on
+    resume, so the log matches the rollups).  ``subscribe(fn)`` registers a
+    per-event callback ``fn(run_key, event_dict)`` — the watcher's alert
+    rules hang here; callbacks may stash picklable state in
+    :attr:`extra_state`, which rides inside every checkpoint so rule
+    hysteresis survives a kill exactly like the rollups do.
+    """
+
+    def __init__(
+        self,
+        spec: StoreSpec | None = None,
+        store_dir: str | None = None,
+        checkpoint_dir: str | None = None,
+        checkpoint_every: int = 1000,
+        resume: bool = False,
+    ):
+        self.spec = spec or StoreSpec()
+        self.dir = store_dir
+        self.tails: dict[str, _Tail] = {}
+        self.runs: dict[str, RunRollup] = {}
+        self.alerts: list[dict] = []
+        self.total_events = 0
+        self.extra_state: dict = {}
+        self._subs: list = []
+        self._ckpt = None
+        self.checkpoint_every = max(int(checkpoint_every), 1)
+        self.restored = False
+        if store_dir is not None:
+            os.makedirs(store_dir, exist_ok=True)
+            if checkpoint_dir is None:
+                checkpoint_dir = os.path.join(store_dir, "ckpt")
+        if checkpoint_dir is not None:
+            from repro.checkpoint import Checkpointer
+
+            self._ckpt = Checkpointer(checkpoint_dir)
+            if resume and self._ckpt.latest_step() is not None:
+                blob, _extra = self._ckpt.restore({"pickle": None})
+                state = pickle.loads(
+                    np.asarray(blob["pickle"], dtype=np.uint8).tobytes()
+                )
+                self.spec = state["spec"]
+                self.tails = state["tails"]
+                self.runs = state["runs"]
+                self.alerts = state["alerts"]
+                self.total_events = state["total_events"]
+                self.extra_state = state["extra_state"]
+                self.restored = True
+                self._rewrite_alert_log()
+
+    # ---------------------------------------------------------- directories
+    def add_dir(self, trace_dir: str):
+        """Register a trace directory for tailing (idempotent)."""
+        trace_dir = os.path.abspath(trace_dir)
+        if trace_dir not in self.tails:
+            self.tails[trace_dir] = _Tail(
+                path=os.path.join(trace_dir, "events.jsonl"),
+                base=os.path.basename(trace_dir.rstrip(os.sep)) or trace_dir,
+            )
+
+    def ingest(self, *trace_dirs: str) -> int:
+        """Register directories and consume everything currently readable."""
+        for d in trace_dirs:
+            self.add_dir(d)
+        return self.poll()
+
+    def subscribe(self, fn):
+        self._subs.append(fn)
+
+    # -------------------------------------------------------------- tailing
+    def poll(self) -> int:
+        """Consume newly appended complete lines from every registered dir.
+
+        Returns the number of events folded this call.  A final line with
+        no trailing newline is never consumed (its offset stays put), so a
+        crashed writer's torn tail is invisible rather than fatal.
+        """
+        n = 0
+        for d in sorted(self.tails):
+            n += self._poll_tail(d, self.tails[d])
+        return n
+
+    def _poll_tail(self, trace_dir: str, tail: "_Tail") -> int:
+        try:
+            size = os.path.getsize(tail.path)
+        except OSError:
+            return 0
+        if size < tail.offset:
+            tail.offset = 0  # file was replaced/truncated: replay it
+        if size == tail.offset:
+            return 0
+        n = 0
+        with open(tail.path, "rb") as f:
+            f.seek(tail.offset)
+            carry = b""
+            while True:
+                buf = f.read(_CHUNK)
+                if not buf:
+                    break
+                carry += buf
+                while True:
+                    nl = carry.find(b"\n")
+                    if nl < 0:
+                        break
+                    line, carry = carry[:nl], carry[nl + 1:]
+                    tail.offset += nl + 1
+                    n += self._consume_line(trace_dir, tail, line)
+        return n
+
+    def _consume_line(self, trace_dir: str, tail: "_Tail", line: bytes) -> int:
+        line = line.strip()
+        if not line:
+            return 0
+        try:
+            ev = json.loads(line)
+        except (json.JSONDecodeError, UnicodeDecodeError):
+            return 0  # offset already advanced: corrupt lines are skipped
+        if not isinstance(ev, dict):
+            return 0
+        run = self._route(trace_dir, tail, ev)
+        run.fold(ev)
+        key = run.key
+        for fn in self._subs:
+            fn(key, ev)
+        self.total_events += 1
+        if self._ckpt is not None \
+                and self.total_events % self.checkpoint_every == 0:
+            self.save_checkpoint()
+        return 1
+
+    def _route(self, trace_dir: str, tail: "_Tail", ev: dict) -> RunRollup:
+        if ev.get("name") == "trace.start":
+            tail.runs_seen += 1
+            rid = str(ev.get("run_id") or f"run{tail.runs_seen}")
+            tail.run_key = f"{tail.base}/{rid}"
+        if not tail.run_key:  # events before any trace.start
+            tail.run_key = f"{tail.base}/-"
+        run = self.runs.get(tail.run_key)
+        if run is None:
+            run = self.runs[tail.run_key] = RunRollup(
+                tail.run_key, self.spec, trace_dir=trace_dir,
+                config_hash=_manifest_hash(trace_dir),
+            )
+        return run
+
+    def ended(self) -> bool:
+        """True once every registered dir's *current* run saw trace.end."""
+        return bool(self.tails) and all(
+            t.run_key and self.runs[t.run_key].ended
+            for t in self.tails.values() if t.run_key
+        ) and all(t.run_key for t in self.tails.values())
+
+    # --------------------------------------------------------------- alerts
+    def record_alert(self, run_key: str, rule: str, value, threshold,
+                     t: float, **attrs):
+        """Append one ``obs.alert`` into the store (rollups + durable log)."""
+        alert = {"type": "alert", "name": "obs.alert", "run": run_key,
+                 "rule": rule, "value": value, "threshold": threshold,
+                 "t": round(float(t), 6)}
+        alert.update(attrs)
+        self.alerts.append(alert)
+        run = self.runs.get(run_key)
+        if run is not None:
+            run.alerts += 1
+        if self.dir is not None:
+            with open(os.path.join(self.dir, "alerts.jsonl"), "a",
+                      encoding="utf-8") as f:
+                f.write(json.dumps(alert, sort_keys=True) + "\n")
+        return alert
+
+    def _rewrite_alert_log(self):
+        """On resume: make the durable alert log match the restored state
+        (alerts fired after the checkpoint will deterministically re-fire)."""
+        if self.dir is None:
+            return
+        with open(os.path.join(self.dir, "alerts.jsonl"), "w",
+                  encoding="utf-8") as f:
+            for alert in self.alerts:
+                f.write(json.dumps(alert, sort_keys=True) + "\n")
+
+    # ---------------------------------------------------------- checkpoints
+    def save_checkpoint(self):
+        if self._ckpt is None:
+            raise RuntimeError("EventStore has no checkpoint_dir")
+        state = {
+            "spec": self.spec, "tails": self.tails, "runs": self.runs,
+            "alerts": self.alerts, "total_events": self.total_events,
+            "extra_state": self.extra_state,
+        }
+        buf = np.frombuffer(pickle.dumps(state), dtype=np.uint8)
+        self._ckpt.save(self.total_events, {"pickle": buf},
+                        extra={"events": self.total_events,
+                               "runs": len(self.runs)})
+
+    # ---------------------------------------------------------------- views
+    def rollup_rows(self) -> dict[str, list[dict]]:
+        """Every rollup table as dict rows (the CSV/dashboard contract)."""
+        spec = self.spec
+        runs_rows, stream_rows, window_rows = [], [], []
+        tel_rows, link_rows, bench_rows = [], [], []
+        for key in sorted(self.runs):
+            run = self.runs[key]
+            runs_rows.append({
+                "run": key, "config_hash": run.config_hash,
+                "events": run.events, "streams": len(run.streams),
+                "heartbeats": run.heartbeats,
+                "max_heartbeat_gap_s": round(run.max_heartbeat_gap, 3),
+                "alerts": run.alerts, "ended": run.ended,
+                "last_t": round(run.last_t, 3),
+            })
+            for sname in sorted(run.streams):
+                sr = run.streams[sname]
+                row = {"run": key, "stream": sname}
+                row.update({
+                    {"arrive": "arrived", "start": "started",
+                     "depart": "finished", "fail": "failures",
+                     "migrate": "migrations", "requeue": "requeues",
+                     }.get(k, k): sr.totals[k]
+                    for k in ("arrive", "start", "depart", "fail",
+                              "migrate", "requeue", "giveup", "degrade",
+                              "heartbeat")
+                })
+                row["frag_last"] = round(sr.last_frag, 4)
+                row["queued_last"] = sr.last_queued
+                row["running_last"] = sr.last_running
+                for k in ("utilization", "frag_mean", "frag_max",
+                          "mean_queue"):
+                    row[k] = sr.summary.get(k, "")
+                stream_rows.append(row)
+                for w in range(spec.n_windows):
+                    active = sr.frag_cnt[w] or any(
+                        sr.counts[k][w] for k in _WINDOW_KINDS
+                    )
+                    if not active:
+                        continue
+                    cnt = max(sr.frag_cnt[w], 1)
+                    window_rows.append({
+                        "run": key, "stream": sname, "window": w,
+                        "t_lo": round(w * spec.window, 3),
+                        "t_hi": round((w + 1) * spec.window, 3),
+                        "arrived": sr.counts["arrive"][w],
+                        "started": sr.counts["start"][w],
+                        "finished": sr.counts["depart"][w],
+                        "failures": sr.counts["fail"][w],
+                        "migrations": sr.counts["migrate"][w],
+                        "requeues": sr.counts["requeue"][w],
+                        "frag_mean": round(sr.frag_sum[w] / cnt, 4),
+                        "frag_max": round(sr.frag_max[w], 4),
+                        "queued_mean": round(sr.queued_sum[w] / cnt, 3),
+                        "running_mean": round(sr.running_sum[w] / cnt, 3),
+                    })
+            for label in sorted(run.telemetry):
+                tel_rows.append({"run": key, "label": label,
+                                 **run.telemetry[label]})
+                for link in run.links.get(label, []):
+                    link_rows.append({"run": key, "label": label, **link})
+            for module in sorted(run.bench):
+                bench_rows.append({"run": key, "module": module,
+                                   "seconds": round(run.bench[module], 4)})
+        alert_rows = [
+            {"run": a.get("run", ""), "rule": a.get("rule", ""),
+             "t": a.get("t", ""), "value": a.get("value", ""),
+             "threshold": a.get("threshold", ""),
+             "stream": a.get("stream", a.get("label", ""))}
+            for a in self.alerts
+        ]
+        return {
+            "runs": runs_rows, "streams": stream_rows,
+            "sched_windows": window_rows, "telemetry": tel_rows,
+            "links": link_rows, "alerts": alert_rows, "bench": bench_rows,
+        }
+
+    def write_csvs(self, out_dir: str) -> dict[str, str]:
+        """Write every non-empty rollup table to ``out_dir``; returns paths.
+
+        Byte-identical across kill-and-resume and one-shot-vs-follow (the
+        tests pin both): rows derive only from folded state.
+        """
+        from repro.obs.report import csv_text
+
+        os.makedirs(out_dir, exist_ok=True)
+        written = {}
+        for name, rows in self.rollup_rows().items():
+            if not rows:
+                continue
+            path = os.path.join(out_dir, f"{name}.csv")
+            with open(path, "w", newline="") as f:
+                f.write(csv_text(rows))
+            written[name] = path
+        return written
+
+    def status_line(self) -> str:
+        """One-line rolling gauge digest (the watcher's follow output)."""
+        parts = [f"events={self.total_events} runs={len(self.runs)} "
+                 f"alerts={len(self.alerts)}"]
+        for key in sorted(self.runs):
+            run = self.runs[key]
+            for sname in sorted(run.streams):
+                sr = run.streams[sname]
+                parts.append(
+                    f"{sname}[run={sr.last_running} q={sr.last_queued} "
+                    f"frag={sr.last_frag:.2f}]"
+                )
+        return " ".join(parts)
+
+
+@dataclasses.dataclass
+class _Tail:
+    """Per-file tailing state (picklable; rides in the checkpoint)."""
+
+    path: str
+    base: str
+    offset: int = 0
+    run_key: str = ""
+    runs_seen: int = 0
+
+
+def _manifest_hash(trace_dir: str) -> str:
+    try:
+        with open(os.path.join(trace_dir, "manifest.json")) as f:
+            return str(json.load(f).get("config_hash", ""))
+    except (OSError, json.JSONDecodeError):
+        return ""
+
+
+def open_store(
+    trace_dirs=(),
+    spec: StoreSpec | None = None,
+    store_dir: str | None = None,
+    checkpoint_dir: str | None = None,
+    checkpoint_every: int = 1000,
+    resume: bool = False,
+) -> EventStore:
+    """Construct (or resume) a store and register ``trace_dirs``."""
+    store = EventStore(
+        spec=spec, store_dir=store_dir, checkpoint_dir=checkpoint_dir,
+        checkpoint_every=checkpoint_every, resume=resume,
+    )
+    for d in trace_dirs:
+        store.add_dir(d)
+    return store

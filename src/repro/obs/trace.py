@@ -94,6 +94,7 @@ class Tracer:
         self.run_id = run_id or time.strftime("%Y%m%d-%H%M%S")
         self.path = os.path.join(trace_dir, "events.jsonl")
         self._f = open(self.path, "a", encoding="utf-8")
+        self._closed = False
         self._lock = threading.Lock()
         self._t0 = time.perf_counter()
         self.manifest = manifest_dict(run_id=self.run_id, **extra)
@@ -119,6 +120,11 @@ class Tracer:
         ev.update(attrs)
         line = json.dumps(ev, default=_json_default)
         with self._lock:
+            # post-close emits are safe no-ops: an in-flight span() held
+            # across disable()/configure() must not raise "I/O operation
+            # on closed file" when it finally exits (regression-pinned)
+            if self._closed:
+                return
             self._f.write(line + "\n")
             self._f.flush()
 
@@ -137,9 +143,17 @@ class Tracer:
             self.event(name, type="span",
                        dur_s=round(time.perf_counter() - t0, 6), **attrs)
 
+    @property
+    def closed(self) -> bool:
+        return self._closed
+
     def close(self):
+        if self._closed:
+            return
         self.event("trace.end")
-        self._f.close()
+        with self._lock:
+            self._closed = True
+            self._f.close()
 
 
 # ------------------------------------------------------- module-level API

@@ -1,0 +1,255 @@
+"""Live fleet watcher: follow trace dirs, evaluate alert rules, roll up.
+
+    PYTHONPATH=src python -m repro.obs.watch TRACE_DIR... [--follow]
+        [--csv DIR] [--store DIR] [--resume] [--interval S]
+        [--util-max X] [--frag X] [--fails N] [--stall S]
+
+A :class:`FleetWatcher` wraps an :class:`~repro.obs.store.EventStore` and
+evaluates declarative :class:`AlertRule`\\ s **per consumed event**, so
+one-shot mode (consume everything, exit) and follow mode (poll a live
+``sched`` / ``resil.stream`` run until its ``trace.end``) produce
+*identical* rollups and alerts on the same trace — chunking never changes
+the folded sequence (pinned in ``tests/test_obs_store.py``).
+
+Rule kinds (all hysteretic — fire on the below→above crossing, re-arm when
+the signal drops back under the threshold):
+
+  * ``util_max``  — a ``sim.telemetry`` digest's ``util_max`` exceeds the
+    threshold (a saturating link);
+  * ``frag``      — a ``sched.frag`` gauge spikes over the threshold for
+    its stream (fragmentation emergency);
+  * ``fails``     — every N-th ``sched.fail``/``sched.giveup`` of a run
+    (repeated job failures under churn);
+  * ``stall``     — the wall-clock gap between consecutive
+    ``sched.heartbeat`` events exceeds the threshold (a wedged stream;
+    data-driven, so one-shot replay flags historic stalls identically).
+
+Fired alerts append ``obs.alert`` records back into the store (rollup
+counters + the durable ``alerts.jsonl``).  Rule hysteresis state lives in
+``store.extra_state`` and therefore rides inside every store checkpoint:
+a killed-and-resumed watch re-fires exactly the alerts an uninterrupted
+one would.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import os
+import sys
+import time
+
+from repro.obs.store import EventStore, StoreSpec, open_store
+
+
+@dataclasses.dataclass(frozen=True)
+class AlertRule:
+    """One declarative alert: ``kind`` selects the signal, ``threshold``
+    the level.  ``name`` labels the fired ``obs.alert`` records."""
+
+    name: str
+    kind: str  # "util_max" | "frag" | "fails" | "stall"
+    threshold: float
+
+    def __post_init__(self):
+        if self.kind not in ("util_max", "frag", "fails", "stall"):
+            raise ValueError(f"unknown alert-rule kind {self.kind!r}")
+        if self.threshold <= 0:
+            raise ValueError(f"alert threshold must be > 0, got {self}")
+
+
+def default_rules(util_max: float = 0.95, frag: float = 0.75,
+                  fails: int = 5, stall: float = 30.0) -> tuple[AlertRule, ...]:
+    return (
+        AlertRule("util_saturation", "util_max", util_max),
+        AlertRule("frag_spike", "frag", frag),
+        AlertRule("repeated_failures", "fails", float(fails)),
+        AlertRule("stalled_stream", "stall", stall),
+    )
+
+
+class FleetWatcher:
+    """Evaluates alert rules over a store's event feed; one-shot or follow."""
+
+    def __init__(self, store: EventStore, rules=None, echo: bool = False,
+                 out=None):
+        self.store = store
+        self.rules = tuple(default_rules() if rules is None else rules)
+        self.echo = echo
+        self.out = out or sys.stdout
+        # hysteresis state lives in the store so checkpoints carry it
+        self._state = store.extra_state.setdefault("watch_rules", {})
+        store.subscribe(self._on_event)
+
+    # ------------------------------------------------------ rule evaluation
+    def _on_event(self, run_key: str, ev: dict):
+        name = str(ev.get("name", ""))
+        for rule in self.rules:
+            if rule.kind == "util_max" and ev.get("type") == "telemetry":
+                self._hysteresis(
+                    rule, (run_key, rule.name, ev.get("label", "")),
+                    float(ev.get("util_max", 0.0)), run_key, ev,
+                    label=str(ev.get("label", "")),
+                )
+            elif rule.kind == "frag" and name == "sched.frag":
+                self._hysteresis(
+                    rule, (run_key, rule.name, ev.get("stream", "-")),
+                    float(ev.get("value", 0.0)), run_key, ev,
+                    stream=str(ev.get("stream", "-")),
+                )
+            elif rule.kind == "fails" and name in ("sched.fail",
+                                                   "sched.giveup"):
+                key = (run_key, rule.name)
+                count = self._state.get(key, 0) + 1
+                self._state[key] = count
+                if count % max(int(rule.threshold), 1) == 0:
+                    self._fire(rule, run_key, count, ev,
+                               stream=str(ev.get("stream", "-")))
+            elif rule.kind == "stall" and name == "sched.heartbeat":
+                key = (run_key, rule.name)
+                last = self._state.get(key)
+                t = float(ev.get("t", 0.0))
+                self._state[key] = t
+                if last is not None and t - last > rule.threshold:
+                    self._fire(rule, run_key, round(t - last, 3), ev,
+                               stream=str(ev.get("stream", "-")))
+
+    def _hysteresis(self, rule: AlertRule, key, value: float, run_key: str,
+                    ev: dict, **attrs):
+        armed = self._state.get(key, True)
+        if value > rule.threshold and armed:
+            self._state[key] = False
+            self._fire(rule, run_key, value, ev, **attrs)
+        elif value <= rule.threshold and not armed:
+            self._state[key] = True
+
+    def _fire(self, rule: AlertRule, run_key: str, value, ev: dict, **attrs):
+        alert = self.store.record_alert(
+            run_key, rule.name, value, rule.threshold,
+            t=float(ev.get("t", 0.0)), **attrs,
+        )
+        if self.echo:
+            print(f"# ALERT {rule.name}: {value} > {rule.threshold} "
+                  f"({run_key})", file=self.out)
+        return alert
+
+    # -------------------------------------------------------------- driving
+    def poll(self) -> int:
+        return self.store.poll()
+
+    def run_once(self) -> int:
+        """Consume everything currently readable (the one-shot mode)."""
+        return self.poll()
+
+    def follow(self, interval: float = 0.5, idle_timeout: float | None = None,
+               max_wall: float | None = None) -> int:
+        """Poll until every followed run ends (or goes idle/time-bounded).
+
+        Returns total events consumed.  Termination: all current runs saw
+        ``trace.end``; OR no new events for ``idle_timeout`` seconds; OR
+        ``max_wall`` seconds elapsed.  A wall-clock-quiet *live* stream is
+        reported on stderr but never folded into rollups — rollups stay a
+        pure function of the event stream (the one-shot parity pin).
+        """
+        total = 0
+        idle = 0.0
+        t0 = time.monotonic()
+        while True:
+            n = self.poll()
+            total += n
+            if n and self.echo:
+                print(f"# watch: {self.store.status_line()}", file=self.out)
+            if self.store.ended():
+                break
+            if n == 0:
+                idle += interval
+                if idle_timeout is not None and idle >= idle_timeout:
+                    print(f"# watch: idle for {idle:.1f}s, stopping "
+                          f"(no trace.end seen)", file=sys.stderr)
+                    break
+            else:
+                idle = 0.0
+            if max_wall is not None and time.monotonic() - t0 >= max_wall:
+                print(f"# watch: max wall time reached", file=sys.stderr)
+                break
+            time.sleep(interval)
+        return total
+
+
+# --------------------------------------------------------------------- CLI
+def build_parser() -> argparse.ArgumentParser:
+    p = argparse.ArgumentParser(
+        prog="repro.obs.watch",
+        description="fleet watcher: tail trace dirs into rollups + alerts",
+    )
+    p.add_argument("dirs", nargs="+", metavar="TRACE_DIR")
+    p.add_argument("--follow", action="store_true",
+                   help="poll live dirs until trace.end (default: one-shot)")
+    p.add_argument("--interval", type=float, default=0.5)
+    p.add_argument("--idle-timeout", type=float, default=60.0,
+                   help="stop following after this many quiet seconds")
+    p.add_argument("--max-wall", type=float, default=None)
+    p.add_argument("--csv", default=None, metavar="DIR",
+                   help="write rollup CSVs here when done")
+    p.add_argument("--store", default=None, metavar="DIR",
+                   help="store directory (alerts.jsonl + checkpoints)")
+    p.add_argument("--ckpt", default=None, metavar="DIR",
+                   help="checkpoint directory (default: STORE/ckpt)")
+    p.add_argument("--every", type=int, default=1000,
+                   help="checkpoint every N consumed events")
+    p.add_argument("--resume", action="store_true",
+                   help="resume from the latest committed store checkpoint")
+    p.add_argument("--window", type=float, default=20.0)
+    p.add_argument("--n-windows", type=int, default=64)
+    p.add_argument("--util-max", type=float, default=0.95)
+    p.add_argument("--frag", type=float, default=0.75)
+    p.add_argument("--fails", type=int, default=5)
+    p.add_argument("--stall", type=float, default=30.0)
+    p.add_argument("--quiet", action="store_true")
+    p.add_argument("--crash-after", type=int, default=None,
+                   help=argparse.SUPPRESS)  # kill-and-resume test hook
+    return p
+
+
+def run(argv=None) -> int:
+    args = build_parser().parse_args(argv)
+    store = open_store(
+        args.dirs,
+        spec=StoreSpec(window=args.window, n_windows=args.n_windows),
+        store_dir=args.store,
+        checkpoint_dir=args.ckpt,
+        checkpoint_every=args.every,
+        resume=args.resume,
+    )
+    if args.crash_after is not None:
+        target = int(args.crash_after)
+
+        def _crash(run_key, ev):
+            if store.total_events + 1 >= target:
+                os._exit(137)  # hard kill AFTER checkpoints up to here
+
+        store.subscribe(_crash)
+    watcher = FleetWatcher(
+        store,
+        rules=default_rules(util_max=args.util_max, frag=args.frag,
+                            fails=args.fails, stall=args.stall),
+        echo=not args.quiet,
+    )
+    if args.follow:
+        watcher.follow(interval=args.interval,
+                       idle_timeout=args.idle_timeout,
+                       max_wall=args.max_wall)
+    else:
+        watcher.run_once()
+    if store._ckpt is not None:
+        store.save_checkpoint()
+    if args.csv:
+        for name, path in sorted(store.write_csvs(args.csv).items()):
+            print(f"# {name}: {path}")
+    if not args.quiet:
+        print(f"# watch: {store.status_line()}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(run())

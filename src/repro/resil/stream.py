@@ -9,10 +9,16 @@ final ``StreamResult.summary()`` goes to ``--out`` as sorted JSON, so a
 killed-and-resumed run can be compared bit-for-bit against an
 uninterrupted one (the kill-and-resume test pins exactly that).
 
+``--trace DIR`` activates :mod:`repro.obs.trace` for the run, producing a
+store-friendly trace directory (manifest + ``events.jsonl`` with
+``sched.*`` events, fragmentation gauges and heartbeats, closed by
+``trace.end``) that the fleet watcher / dashboard can tail live.
+
     python -m repro.resil.stream --jobs 40 --mttr 20 --churn 4 \
         --ckpt /tmp/ck --every 4 --out /tmp/a.json
     python -m repro.resil.stream ... --crash-at 30   # exits 137 mid-stream
     python -m repro.resil.stream ... --resume        # finishes the stream
+    python -m repro.resil.stream ... --trace /tmp/fleet/run0   # traced
 """
 
 from __future__ import annotations
@@ -64,6 +70,10 @@ def build_parser() -> argparse.ArgumentParser:
     p.add_argument("--crash-at", type=float, default=None,
                    help="hard-exit (137) at the first event past this time")
     p.add_argument("--out", default=None, help="write summary JSON here")
+    p.add_argument("--trace", default=None, metavar="DIR",
+                   help="emit a repro.obs trace of the stream here")
+    p.add_argument("--heartbeat-every", type=int, default=16,
+                   help="sched.heartbeat every N event-loop ticks")
     return p
 
 
@@ -87,11 +97,24 @@ def run(argv=None) -> int:
         mttr=args.mttr, backoff_base=args.backoff,
         max_retries=args.max_retries, shrink_to_fit=args.shrink,
     )
-    result = sched.run_stream(
-        jobs, failures=failures,
-        checkpoint_dir=args.ckpt, checkpoint_every=args.every,
-        resume=args.resume, crash_at=args.crash_at,
-    )
+    if args.trace:
+        from repro.obs import trace as obs_trace
+
+        obs_trace.configure(
+            args.trace, tool="resil.stream", n=args.n, q=args.q,
+            jobs=args.jobs, seed=args.seed, strategy=args.strategy,
+            policy=args.policy, churn=args.churn,
+        )
+    try:
+        result = sched.run_stream(
+            jobs, failures=failures,
+            checkpoint_dir=args.ckpt, checkpoint_every=args.every,
+            resume=args.resume, crash_at=args.crash_at,
+            heartbeat_every=args.heartbeat_every,
+        )
+    finally:
+        if args.trace:
+            obs_trace.disable()  # lands trace.end so watchers stop cleanly
     payload = json.dumps(result.summary(), sort_keys=True)
     if args.out:
         with open(args.out, "w") as f:

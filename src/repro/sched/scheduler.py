@@ -52,10 +52,12 @@ evaluations.
 When a :mod:`repro.obs.trace` tracer is active, the event loop emits
 structured ``sched.*`` events (arrive / start / backfill flag / depart /
 fail / migrate / requeue / repair / straggle / evict / degrade / giveup /
-resume / checkpoint), fragmentation gauges at every scheduling pass, and a
-final per-stream summary — the fleet report generator aggregates these
-into the fragmentation/churn tables.  With no tracer configured the loop
-pays a single global check per event.
+resume / checkpoint), fragmentation gauges at every scheduling pass,
+periodic ``sched.heartbeat`` liveness beacons (every ``heartbeat_every``
+ticks — the fleet watcher's stall rule keys off their gaps), and a final
+per-stream summary — the fleet report generator aggregates these into
+the fragmentation/churn tables.  With no tracer configured the loop pays
+a single global check per event.
 """
 
 from __future__ import annotations
@@ -186,6 +188,7 @@ class OnlineScheduler:
         checkpoint_every: int = 16,
         resume: bool = False,
         crash_at: float | None = None,
+        heartbeat_every: int = 16,
     ) -> StreamResult:
         ledger = self.ledger
         too_big = [j.job_id for j in jobs if j.blocks > ledger.num_slots]
@@ -502,6 +505,14 @@ class OnlineScheduler:
                                 stream=stream, t_sim=now,
                                 running=len(st.running),
                                 queued=len(st.queue))
+                # liveness beacon for the fleet watcher's stall rule: a
+                # wedged stream stops heartbeating, a healthy one emits
+                # every ``heartbeat_every`` ticks
+                if st.ticks % max(heartbeat_every, 1) == 0:
+                    obs_trace.event("sched.heartbeat", stream=stream,
+                                    t_sim=now, tick=st.ticks,
+                                    queued=len(st.queue),
+                                    running=len(st.running))
             if check_invariants:
                 ledger.check_conservation()
             st.ticks += 1

@@ -1,0 +1,457 @@
+"""Fleet observability service tests: the persistent EventStore (tailing,
+rollups, checkpoints), the FleetWatcher (alert rules, one-shot/follow
+parity, kill-and-resume), the insights API (strategy ranking, memoization,
+queue recommendation from checkpointed rollups), dashboard rendering,
+multi-run report splitting, post-close tracer safety, and the
+traced-vs-untraced scheduler neutrality pin."""
+
+import json
+import os
+import shutil
+import subprocess
+import sys
+import textwrap
+import time
+
+import pytest
+
+from repro.core.hyperx import HyperX
+from repro.obs import report as obs_report
+from repro.obs import trace as obs_trace
+from repro.obs.insights import (
+    clear_memo,
+    recommend,
+    recommend_queue,
+    queue_outlook,
+)
+from repro.obs.store import EventStore, StoreSpec, open_store
+from repro.obs.watch import AlertRule, FleetWatcher, default_rules
+from repro.sched.jobs import poisson_stream
+from repro.sched.ledger import BlockLedger
+from repro.sched.scheduler import FailureEvent, OnlineScheduler
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SMALL = HyperX(n=4, q=2)
+
+
+def _traced_stream(trace_dir, jobs=20, seed=3, churn=True, **kw):
+    """Run one checkpoint-free scheduler stream under tracing."""
+    stream = poisson_stream(jobs, rate=0.8, seed=seed)
+    failures = []
+    if churn:
+        led = OnlineScheduler(SMALL, strategy="diagonal").ledger
+        hit = tuple(int(e) for e in led.slot_endpoints(0))
+        failures = [FailureEvent(time=4.0, endpoints=hit, repair_at=8.0)]
+    try:
+        obs_trace.configure(str(trace_dir), run_id=f"s{seed}")
+        res = OnlineScheduler(
+            SMALL, strategy="diagonal", policy="first_fit", seed=seed,
+            mttr=10.0, backoff_base=0.5, analyze=False,
+        ).run_stream(stream, failures=failures, **kw)
+    finally:
+        obs_trace.disable()
+    return res
+
+
+# ------------------------------------------------------------------ rollups
+def test_store_rollups_match_trace(tmp_path):
+    """Stream totals folded by the store equal the report generator's
+    per-stream digest of the same trace — two independent consumers."""
+    d = tmp_path / "run"
+    res = _traced_stream(d)
+    store = open_store([str(d)])
+    n = store.poll()
+    with open(d / "events.jsonl") as f:
+        events = [json.loads(line) for line in f]
+    assert n == len(events)
+    assert store.poll() == 0  # nothing new: offsets are sticky
+
+    (run,) = store.runs.values()
+    assert run.ended and run.config_hash
+    sr = run.streams["diagonal/first_fit"]
+    (row,) = obs_report.sched_rows(events)
+    assert sr.totals["arrive"] == row["arrived"]
+    assert sr.totals["depart"] == row["finished"]
+    assert sr.totals["fail"] == row["failures"]
+    assert sr.totals["requeue"] == row["requeues"]
+    assert sr.summary["utilization"] == round(res.utilization, 6)
+    assert run.heartbeats > 0  # the scheduler's liveness beacons landed
+    # windowed counters conserve the totals (last window absorbs overflow)
+    for kind, field in (("arrive", "arrived"), ("depart", "finished")):
+        assert sum(sr.counts[kind]) == row[field]
+
+
+def test_store_ignores_torn_final_line(tmp_path):
+    """A live writer's torn tail is invisible until its newline arrives."""
+    d = tmp_path / "run"
+    os.makedirs(d)
+    full = json.dumps({"t": 0.0, "type": "event", "name": "trace.start",
+                       "run_id": "r1"})
+    torn = json.dumps({"t": 0.1, "type": "event", "name": "sched.arrive",
+                       "stream": "s", "job": 1, "t_sim": 0.5})
+    path = d / "events.jsonl"
+    with open(path, "w") as f:
+        f.write(full + "\n" + torn[:10])  # mid-write crash / in-flight write
+    store = open_store([str(d)])
+    assert store.poll() == 1
+    assert store.total_events == 1
+    with open(path, "a") as f:
+        f.write(torn[10:] + "\n")
+    assert store.poll() == 1  # the completed line folds exactly once
+    (run,) = store.runs.values()
+    assert run.streams["s"].totals["arrive"] == 1
+
+
+def test_one_shot_vs_incremental_parity(tmp_path):
+    """Folding a trace in arbitrary byte increments produces rollups
+    identical to one-shot ingestion — chunking never changes the result."""
+    src = tmp_path / "src"
+    _traced_stream(src)
+    blob = (src / "events.jsonl").read_bytes()
+
+    live = tmp_path / "run"
+    os.makedirs(live)
+    shutil.copy(src / "manifest.json", live / "manifest.json")
+    inc = open_store([str(live)])
+    path = live / "events.jsonl"
+    step = 97  # deliberately not line-aligned
+    for off in range(0, len(blob), step):
+        with open(path, "ab") as f:
+            f.write(blob[off:off + step])
+        inc.poll()
+    inc.poll()
+
+    shot = open_store([str(live)])
+    shot.poll()
+    assert inc.total_events == shot.total_events == len(blob.splitlines())
+    assert inc.rollup_rows() == shot.rollup_rows()
+
+
+def test_follow_live_subprocess_writer(tmp_path):
+    """The watcher follows a trace being written by another process and
+    lands on the same rollups as a one-shot pass over the finished file."""
+    src = tmp_path / "src"
+    _traced_stream(src)
+    live = tmp_path / "run"
+    os.makedirs(live)
+    shutil.copy(src / "manifest.json", live / "manifest.json")
+    writer = tmp_path / "writer.py"
+    writer.write_text(textwrap.dedent("""\
+        import sys, time
+        blob = open(sys.argv[1], "rb").read()
+        out = open(sys.argv[2], "ab")
+        for off in range(0, len(blob), 256):   # torn, un-aligned appends
+            out.write(blob[off:off + 256])
+            out.flush()
+            time.sleep(0.002)
+        out.close()
+    """))
+    proc = subprocess.Popen(
+        [sys.executable, str(writer), str(src / "events.jsonl"),
+         str(live / "events.jsonl")],
+    )
+    try:
+        store = open_store([str(live)])
+        watcher = FleetWatcher(store, echo=False)
+        total = watcher.follow(interval=0.02, idle_timeout=30.0,
+                               max_wall=120.0)
+    finally:
+        proc.wait(timeout=60)
+    assert store.ended()
+
+    shot = open_store([str(live)])
+    FleetWatcher(shot, echo=False)
+    shot.poll()
+    assert total == shot.total_events
+    assert store.rollup_rows() == shot.rollup_rows()
+    assert [a for a in store.alerts] == [a for a in shot.alerts]
+
+
+# ------------------------------------------------------- checkpoint / resume
+def test_watch_kill_and_resume_byte_identical_csvs(tmp_path):
+    """Hard-kill (137) a checkpointed watch mid-ingest, resume it, and the
+    rollup CSVs + durable alert log are byte-identical to an uninterrupted
+    watch of the same trace."""
+    d = tmp_path / "run"
+    _traced_stream(d, jobs=30)
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+
+    def watch(csv, store, extra=(), rc=0):
+        proc = subprocess.run(
+            [sys.executable, "-m", "repro.obs.watch", str(d),
+             "--csv", str(csv), "--store", str(store), "--every", "25",
+             "--fails", "1", "--quiet", *extra],
+            env=env, cwd=str(tmp_path), capture_output=True, text=True,
+            timeout=300,
+        )
+        assert proc.returncode == rc, proc.stderr
+        return proc
+
+    watch(tmp_path / "c1", tmp_path / "s1")
+    watch(tmp_path / "c2", tmp_path / "s2",
+          extra=["--crash-after", "60"], rc=137)
+    watch(tmp_path / "c2", tmp_path / "s2", extra=["--resume"])
+
+    names = sorted(os.listdir(tmp_path / "c1"))
+    assert names == sorted(os.listdir(tmp_path / "c2")) and names
+    for name in names:
+        a = (tmp_path / "c1" / name).read_bytes()
+        b = (tmp_path / "c2" / name).read_bytes()
+        assert a == b, f"{name} diverged after kill-and-resume"
+    assert (tmp_path / "s1" / "alerts.jsonl").read_bytes() == \
+           (tmp_path / "s2" / "alerts.jsonl").read_bytes()
+
+
+def test_checkpointed_insights_without_raw_log(tmp_path):
+    """A 1000+-job stream's store checkpoint answers queue recommendations
+    after the raw event log is deleted — rollups, not re-reads."""
+    d = tmp_path / "run"
+    _traced_stream(d, jobs=1000, churn=False)
+    store = open_store([str(d)], checkpoint_dir=str(tmp_path / "ck"),
+                       checkpoint_every=500)
+    n = store.poll()
+    assert n > 1000  # arrivals alone exceed 1000
+    store.save_checkpoint()
+
+    os.remove(d / "events.jsonl")  # the raw log is gone for good
+    restored = open_store([str(d)], checkpoint_dir=str(tmp_path / "ck"),
+                          resume=True)
+    assert restored.restored
+    assert restored.total_events == n
+    assert restored.poll() == 0  # nothing to (re-)read
+
+    best = recommend_queue(restored, blocks=2)
+    assert best is not None
+    assert best["stream"] == "diagonal/first_fit"
+    assert best["arrived"] == 1000
+    assert best["blocks"] == 2 and "lowest pressure" in best["reason"]
+    outlook = queue_outlook(restored)
+    assert outlook and outlook[0]["score"] == best["score"]
+
+
+# -------------------------------------------------------------- alert rules
+def _synthetic_run(tmp_path, lines):
+    d = tmp_path / "synth"
+    os.makedirs(d, exist_ok=True)
+    with open(d / "events.jsonl", "w") as f:
+        f.write(json.dumps({"t": 0.0, "type": "event",
+                            "name": "trace.start", "run_id": "r"}) + "\n")
+        for ev in lines:
+            f.write(json.dumps(ev) + "\n")
+        f.write(json.dumps({"t": 99.0, "type": "event",
+                            "name": "trace.end"}) + "\n")
+    return d
+
+
+def test_alert_rule_validation():
+    with pytest.raises(ValueError, match="unknown alert-rule kind"):
+        AlertRule("x", "nope", 1.0)
+    with pytest.raises(ValueError, match="threshold"):
+        AlertRule("x", "frag", 0.0)
+    assert len(default_rules()) == 4
+
+
+def test_util_rule_hysteresis(tmp_path):
+    """Fire on the below→above crossing only; re-arm after the dip."""
+    tel = [{"t": float(i), "type": "telemetry", "name": "sim.telemetry",
+            "label": "L", "util_max": u}
+           for i, u in enumerate([0.5, 0.97, 0.99, 0.5, 0.98])]
+    d = _synthetic_run(tmp_path, tel)
+    store = open_store([str(d)])
+    FleetWatcher(store, rules=[AlertRule("sat", "util_max", 0.95)],
+                 echo=False)
+    store.poll()
+    assert [a["value"] for a in store.alerts] == [0.97, 0.98]
+    assert all(a["rule"] == "sat" and a["label"] == "L"
+               for a in store.alerts)
+    (run,) = store.runs.values()
+    assert run.alerts == 2
+
+
+def test_stall_rule_fires_on_heartbeat_gap(tmp_path):
+    hbs = [{"t": t, "type": "event", "name": "sched.heartbeat",
+            "stream": "s", "t_sim": t} for t in (0.0, 1.0, 9.0, 9.5)]
+    d = _synthetic_run(tmp_path, hbs)
+    store = open_store([str(d)])
+    FleetWatcher(store, rules=[AlertRule("stall", "stall", 5.0)],
+                 echo=False)
+    store.poll()
+    (alert,) = store.alerts
+    assert alert["rule"] == "stall" and alert["value"] == 8.0
+    (run,) = store.runs.values()
+    assert run.heartbeats == 4
+    assert run.max_heartbeat_gap == pytest.approx(8.0)
+
+
+# ----------------------------------------------------------------- insights
+def test_recommend_ranks_and_memoizes():
+    clear_memo()
+    topo = SMALL
+    ledger = BlockLedger(topo, strategy="diagonal", policy="first_fit",
+                         seed=0)
+    ledger.place(1, job_id=1)
+    before = {jid: ledger.jobs[jid].slots for jid in ledger.jobs}
+
+    ins = recommend(topo, ledger, blocks=1, seeds=(0,), horizon=4000)
+    assert not ins.cached and ins.simulated
+    assert ins.best is not None and ins.best.placeable
+    assert all(c.avg_latency is not None for c in ins.candidates
+               if c.placeable)
+    # within the contiguous-placeable tier, ranking is by predicted latency
+    lats = [c.avg_latency for c in ins.candidates
+            if c.placeable and c.contiguous]
+    assert lats == sorted(lats)
+    # the query never mutates the live ledger
+    assert {jid: ledger.jobs[jid].slots for jid in ledger.jobs} == before
+
+    again = recommend(topo, ledger, blocks=1, seeds=(0,), horizon=4000)
+    assert again.cached and again.key == ins.key
+    assert again.candidates == ins.candidates
+
+    ledger.place(1, job_id=2)  # occupancy changed: the memo misses
+    moved = recommend(topo, ledger, blocks=1, seeds=(0,), horizon=4000)
+    assert not moved.cached and moved.key != ins.key
+
+
+def test_recommend_full_machine_and_validation():
+    clear_memo()
+    ledger = BlockLedger(SMALL, strategy="diagonal", policy="first_fit",
+                         seed=0)
+    ledger.place(ledger.num_slots, job_id=1)  # machine is full
+    ins = recommend(SMALL, ledger, blocks=1, simulate=False)
+    assert not ins.simulated
+    assert all(not c.placeable for c in ins.candidates)
+    assert ins.best is not None and not ins.best.placeable
+    with pytest.raises(ValueError, match="positive block count"):
+        recommend(SMALL, ledger, blocks=0)
+
+
+def test_recommend_queue_empty_store():
+    assert recommend_queue(EventStore()) is None
+
+
+# ------------------------------------------------------ dashboard + report
+def test_dashboard_renders_store(tmp_path):
+    from repro.obs.dashboard import render_html, sparkline, write_dashboard
+
+    d = tmp_path / "run"
+    _traced_stream(d)
+    store = open_store([str(d)], store_dir=str(tmp_path / "store"))
+    FleetWatcher(store, rules=[AlertRule("f", "fails", 1.0)], echo=False)
+    store.poll()
+    assert store.alerts  # churn fired the failure rule
+
+    paths = write_dashboard(store, str(tmp_path / "dash"), refresh=5.0)
+    md = open(paths["markdown"]).read()
+    assert "# Fleet dashboard" in md
+    assert "diagonal/first_fit" in md and "Alerts" in md
+    html = open(paths["html"]).read()
+    assert 'http-equiv="refresh" content="5"' in html
+    assert "class=\"alert\"" in html
+    assert render_html(store).count("refresh") == 0
+    assert sparkline([0.0, 0.5, 1.0], hi=1.0) == "▁▄█"
+    assert sparkline([]) == ""
+
+
+def test_report_splits_multi_run_trace(tmp_path):
+    """Append-mode traces holding several runs split on trace.start: the
+    markdown surfaces the run count and CSVs gain a leading run column."""
+    d = str(tmp_path / "trace")
+    for rid in ("a1", "a2"):
+        try:
+            obs_trace.configure(d, run_id=rid)
+            obs_trace.event("sched.arrive", stream="s/p", job=1, t_sim=0.1)
+            obs_trace.event("sched.start", stream="s/p", job=1, t_sim=0.2)
+        finally:
+            obs_trace.disable()
+    _, events = obs_report.load_trace(d)
+    runs = obs_report.split_runs(events)
+    assert [rid for rid, _ in runs] == ["a1", "a2"]
+    assert all(evs[0]["name"] == "trace.start" for _, evs in runs)
+
+    paths = obs_report.write_report(d)
+    md = open(paths["report"]).read()
+    assert "## Runs (2)" in md
+    assert "## Run a1" in md and "## Run a2" in md
+    assert "across 2 run(s)" in md
+    with open(paths["sched"]) as f:
+        lines = f.read().splitlines()
+    assert lines[0].startswith("run,")
+    assert len(lines) == 3  # header + one stream row per run
+    assert lines[1].startswith("a1,") and lines[2].startswith("a2,")
+    # each run's counters stay unblended
+    assert ",1,1," in lines[1] and ",1,1," in lines[2]
+
+
+def test_report_single_run_has_no_run_column(tmp_path):
+    d = str(tmp_path / "trace")
+    try:
+        obs_trace.configure(d, run_id="only")
+        obs_trace.event("sched.arrive", stream="s/p", job=1)
+    finally:
+        obs_trace.disable()
+    paths = obs_report.write_report(d)
+    with open(paths["sched"]) as f:
+        header = f.readline()
+    assert not header.startswith("run,")  # single-run layout is unchanged
+
+
+# ------------------------------------------------------ tracer close safety
+def test_post_close_emits_are_noops(tmp_path):
+    """An in-flight span() held across disable()/configure() must finish
+    as a silent no-op, never an I/O-on-closed-file error."""
+    d1, d2 = str(tmp_path / "t1"), str(tmp_path / "t2")
+    tracer = obs_trace.configure(d1, run_id="r1")
+    span = tracer.span("unit.leaky")
+    span.__enter__()
+    obs_trace.configure(d2, run_id="r2")  # closes the first tracer
+    assert tracer.closed
+    span.__exit__(None, None, None)  # would have raised before the guard
+    tracer.event("late")
+    tracer.close()  # idempotent
+    obs_trace.disable()
+    obs_trace.disable()  # also idempotent
+
+    for d, rid in ((d1, "r1"), (d2, "r2")):
+        with open(os.path.join(d, "events.jsonl")) as f:
+            events = [json.loads(line) for line in f]
+        names = [e["name"] for e in events]
+        assert names[0] == "trace.start" and names[-1] == "trace.end"
+        assert "unit.leaky" not in names and "late" not in names
+
+
+# --------------------------------------------------- tracing neutrality pin
+def test_scheduler_output_identical_traced_vs_untraced(tmp_path):
+    """Tracing (heartbeats included) must not perturb scheduling: records
+    and summary are identical with the tracer on and off."""
+    jobs = poisson_stream(16, rate=0.8, seed=5)
+
+    def run():
+        return OnlineScheduler(SMALL, strategy="diagonal", seed=5,
+                               mttr=8.0, backoff_base=0.5,
+                               analyze=False).run_stream(jobs)
+
+    obs_trace.disable()
+    plain = run()
+    d = str(tmp_path / "trace")
+    try:
+        obs_trace.configure(d)
+        traced = run()
+    finally:
+        obs_trace.disable()
+    assert traced.records == plain.records
+    assert traced.summary() == plain.summary()
+    with open(os.path.join(d, "events.jsonl")) as f:
+        events = [json.loads(line) for line in f]
+    assert any(e["name"] == "sched.heartbeat" for e in events)
+
+
+def test_store_spec_validation():
+    with pytest.raises(ValueError, match="degenerate"):
+        StoreSpec(window=0.0)
+    with pytest.raises(ValueError, match="degenerate"):
+        StoreSpec(n_windows=0)
+    spec = StoreSpec(window=10.0, n_windows=4)
+    assert spec.window_of(0.0) == 0
+    assert spec.window_of(39.9) == 3
+    assert spec.window_of(1e9) == 3  # overflow clamps to the last window
