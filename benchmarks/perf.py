@@ -2,9 +2,12 @@
 
     PYTHONPATH=src python -m benchmarks.perf [--quick|--full]
                                              [--out PATH] [--rev REV]
-                                             [--compare BASE.json]
+                                             [--compare [BASE.json]]
                                              [--threshold 0.10]
                                              [--grids a,b,...]
+                                             [--kernel lax|pallas]
+                                             [--chunk K] [--canon]
+                                             [--cache DIR] [--profile DIR]
 
 Runs the canonical grids (strategy / pattern / fault sweeps on the paper
 machine) through a **fresh** ``SimEngine`` each — so compile time is
@@ -23,13 +26,29 @@ overrides) together with host metadata (backend, device count, lane
 dispatch backend, jax version) and a full ``manifest`` provenance block
 (:func:`repro.obs.trace.manifest_dict` — the same schema trace
 directories carry, so BENCH files and traces join on ``config_hash``) —
-the persistent perf trajectory ROADMAP calls for.  ``--compare
-BASE.json`` re-measures and exits nonzero when any grid's ``device_s``
-regresses more than ``--threshold`` (default 10%) against the baseline,
-which is the CI perf gate (``BENCH_baseline.json`` is the committed
-baseline; refresh it with ``--baseline`` when a speedup lands).  Exit
-codes: 2 = regression past the gate; 3 = the baseline file is missing or
-corrupt (validated *before* any measurement runs).
+the persistent perf trajectory ROADMAP calls for.  Every run also
+*appends* one line to ``BENCH_history.jsonl`` at the repo root (rev,
+UTC date, engine knobs, per-grid metrics) — the cumulative trajectory.
+
+``--compare BASE.json`` re-measures and exits nonzero when any grid's
+``device_s`` regresses more than ``--threshold`` (default 10%) against
+the baseline; a bare ``--compare`` (no path) gates against the *latest
+prior entry* of ``BENCH_history.jsonl`` instead.  This is the CI perf
+gate (``BENCH_baseline.json`` is regenerated on the CI machine itself;
+refresh the committed copy with ``--baseline`` when a speedup lands).
+Exit codes: 2 = regression past the gate; 3 = the baseline file (or
+history) is missing or corrupt (validated *before* any measurement).
+
+Engine knobs under measurement: ``--arb`` / ``--kernel`` (Pallas
+arbitration / fused route+arbitrate megakernel), ``--chunk K``
+(early-exit granularity of the cycle loop), ``--canon`` (pow2 batch-axis
+canonicalization; its compile-key hit rate lands in the snapshot), and
+``--cache DIR`` (persistent XLA compile cache — repeat-process wall time
+is the metric it moves; also reachable via ``REPRO_COMPILE_CACHE``).
+``--profile DIR`` runs one extra, horizon-clamped dispatch per grid
+under a ``jax.profiler`` trace inside an obs trace dir (timing itself is
+never profiled), so ``repro.obs.report`` renders per-grid device
+timelines next to the usual span tables.
 """
 
 from __future__ import annotations
@@ -51,12 +70,20 @@ from benchmarks.common import (
     write_grid_csv,
 )
 
-from repro.core.engine import PACKET_FLITS, SimEngine
+from repro.core.engine import PACKET_FLITS, SimEngine, enable_persistent_cache
+from repro.obs import trace as obs_trace
 from repro.obs.trace import manifest_dict
 from repro.route import apply_faults, random_link_faults
 
 REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+HISTORY_PATH = os.path.join(REPO_ROOT, "BENCH_history.jsonl")
 SCHEMA = 1
+# Horizon clamp for the extra profiled dispatch (see measure_grid).  The
+# tracer records every HLO-op execution, and one engine cycle is a very
+# large graph (~20 s and ~50 MB of xplane PER CYCLE on CPU), so the
+# profiled dispatch samples just two cycles — enough for the op-level
+# breakdown; headline timings never come from the profiled run.
+PROFILE_HORIZON = 2
 DEFAULT_THRESHOLD = 0.10
 EXIT_REGRESSION = 2
 EXIT_BAD_BASELINE = 3
@@ -102,7 +129,9 @@ GRIDS = {
 
 # ----------------------------------------------------------------- measuring
 def measure_grid(workloads, seeds, mode, horizon,
-                 topo=PAPER_TOPO, arb: str = "lax") -> dict:
+                 topo=PAPER_TOPO, arb: str = "lax", kernel: str = "lax",
+                 chunk: int = 1, canon: bool = False,
+                 profile_dir: str | None = None) -> dict:
     """Time one grid through a fresh engine: compile vs steady-state.
 
     The engine is constructed directly (bypassing the ``get_engine``
@@ -110,11 +139,20 @@ def measure_grid(workloads, seeds, mode, horizon,
     the real compilation cost; an identical second call measures the
     steady-state device time.  ``_to_result`` materialises every output
     on the host, so the wall clock brackets full device execution.
+    ``wall_first_s`` / ``wall_repeat_s`` record the two raw calls — the
+    pair the persistent compile cache moves (a cache-warm process pays
+    steady-state on its *first* call).  ``profile_dir`` runs one EXTRA
+    dispatch after timing under a ``jax.profiler`` trace, with the
+    horizon clamped to ``PROFILE_HORIZON`` cycles: the tracer emits an
+    event per HLO-op execution, so profiling a full-horizon dispatch
+    balloons to hours and GBs.  The clamped dispatch has the same
+    per-cycle op profile; timing is never taken under the profiler.
     """
     num_pools = {w.num_pools for w in workloads}
     if len(num_pools) != 1:
         raise ValueError(f"grid mixes VC pool counts {sorted(num_pools)}")
-    engine = SimEngine(topo, mode=mode, num_pools=num_pools.pop(), arb=arb)
+    engine = SimEngine(topo, mode=mode, num_pools=num_pools.pop(), arb=arb,
+                       kernel=kernel, chunk=chunk, canon=canon)
     preps = [engine.prepare(w) for w in workloads]
     buckets = {p.tables.shape_bucket for p in preps}
 
@@ -124,6 +162,12 @@ def measure_grid(workloads, seeds, mode, horizon,
     engine.run_grid(preps, seeds=seeds, horizon=horizon)
     t2 = time.perf_counter()
 
+    if profile_dir:
+        os.makedirs(profile_dir, exist_ok=True)
+        with jax.profiler.trace(profile_dir):
+            engine.run_grid(preps, seeds=seeds,
+                            horizon=min(horizon, PROFILE_HORIZON))
+
     device_s = t2 - t1
     compile_s = max((t1 - t0) - device_s, 0.0)
     lanes = len(workloads) * len(seeds)
@@ -131,6 +175,7 @@ def measure_grid(workloads, seeds, mode, horizon,
         (r.makespan if r.completed else horizon) * PACKET_FLITS
         for per_seed in results for r in per_seed
     )
+    stats = engine.bucket_stats()
     return {
         "lanes": lanes,
         "buckets": len(buckets),
@@ -138,9 +183,14 @@ def measure_grid(workloads, seeds, mode, horizon,
         "lane_backend": engine.lane_backend,
         "compile_s": round(compile_s, 3),
         "device_s": round(device_s, 3),
+        "wall_first_s": round(t1 - t0, 3),
+        "wall_repeat_s": round(t2 - t1, 3),
         "cycles": int(cycles),
         "cycles_per_s": round(cycles / max(device_s, 1e-9), 1),
         "lanes_per_s": round(lanes / max(device_s, 1e-9), 2),
+        "bucket_hits": stats["hits"],
+        "bucket_misses": stats["misses"],
+        "bucket_hit_rate": round(stats["hit_rate"], 3),
     }
 
 
@@ -157,9 +207,19 @@ def current_rev() -> str:
         return "dev"
 
 
-def run_suite(quick: bool = True, grids=None, arb: str = "lax") -> dict:
-    """Measure every requested grid; returns the BENCH json payload."""
+def run_suite(quick: bool = True, grids=None, arb: str = "lax",
+              kernel: str = "lax", chunk: int = 1, canon: bool = False,
+              profile: str | None = None) -> dict:
+    """Measure every requested grid; returns the BENCH json payload.
+
+    ``profile`` is an obs trace directory: each grid is measured inside a
+    ``perf.grid`` span with its ``jax.profiler`` trace under
+    ``<profile>/xprof/<grid>/``, and a ``perf.grid_metrics`` event carries
+    the headline numbers so :mod:`repro.obs.report` can render the
+    device-timeline table without re-running anything.
+    """
     names = list(GRIDS) if not grids else [g for g in GRIDS if g in grids]
+    knobs = {"arb": arb, "kernel": kernel, "chunk": chunk, "canon": canon}
     bench = {
         "schema": SCHEMA,
         "rev": current_rev(),
@@ -167,19 +227,81 @@ def run_suite(quick: bool = True, grids=None, arb: str = "lax") -> dict:
         "backend": jax.default_backend(),
         "devices": jax.local_device_count(),
         "jax": jax.__version__,
-        "arb": arb,
+        **knobs,
         # full provenance block — same shape as a trace dir's manifest.json,
         # so BENCH snapshots and traces join on config_hash
-        "manifest": manifest_dict(rev=current_rev(), quick=quick, arb=arb),
+        "manifest": manifest_dict(rev=current_rev(), quick=quick, **knobs),
         "grids": {},
     }
     for name in names:
         wls, seeds, mode, horizon = GRIDS[name](quick)
+        pdir = os.path.join(profile, "xprof", name) if profile else None
         print(f"# measuring {name} ({len(wls)} workloads x "
               f"{len(seeds)} seeds)...", file=sys.stderr)
-        bench["grids"][name] = measure_grid(wls, seeds, mode, horizon,
-                                            arb=arb)
+        with obs_trace.span("perf.grid", grid=name, **knobs):
+            m = measure_grid(wls, seeds, mode, horizon, arb=arb,
+                             kernel=kernel, chunk=chunk, canon=canon,
+                             profile_dir=pdir)
+        if profile:
+            obs_trace.event(
+                "perf.grid_metrics", grid=name, xprof=pdir or "",
+                **{k: m[k] for k in ("lanes", "compile_s", "device_s",
+                                     "wall_first_s", "wall_repeat_s",
+                                     "cycles_per_s", "bucket_hit_rate")},
+            )
+        bench["grids"][name] = m
     return bench
+
+
+# -------------------------------------------------------------------- history
+def append_history(bench: dict, path: str | None = None) -> dict:
+    """Append one run to the cumulative ``BENCH_history.jsonl`` trajectory.
+
+    One JSON object per line: rev, UTC date, engine knobs, and the
+    per-grid metric table (sans host manifest — the BENCH_<rev>.json
+    snapshot keeps full provenance).  Returns the appended entry.
+    """
+    path = path or HISTORY_PATH
+    entry = {
+        k: bench[k]
+        for k in ("schema", "rev", "quick", "backend", "devices", "jax",
+                  "arb", "kernel", "chunk", "canon")
+        if k in bench
+    }
+    entry["date"] = time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime())
+    entry["grids"] = bench["grids"]
+    with open(path, "a") as f:
+        f.write(json.dumps(entry, sort_keys=True) + "\n")
+    return entry
+
+
+def latest_history(path: str | None = None,
+                   quick: bool | None = None) -> dict | None:
+    """The most recent prior history entry (optionally matching ``quick``).
+
+    Unparsable lines are skipped, matching the report loader's contract:
+    a truncated final line from a killed run must not poison the gate.
+    """
+    path = path or HISTORY_PATH
+    if not os.path.exists(path):
+        return None
+    last = None
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                entry = json.loads(line)
+            except json.JSONDecodeError:
+                continue
+            if not isinstance(entry, dict) or not isinstance(
+                    entry.get("grids"), dict):
+                continue
+            if quick is not None and entry.get("quick") != quick:
+                continue
+            last = entry
+    return last
 
 
 # ------------------------------------------------------------------ comparing
@@ -225,28 +347,65 @@ def main(argv=None) -> int:
                    help="output json (default: <repo>/BENCH_<rev>.json)")
     p.add_argument("--rev", default=None,
                    help="revision label (default: git short sha)")
-    p.add_argument("--compare", default=None, metavar="BASE",
-                   help="baseline BENCH json; exit nonzero on regression")
+    p.add_argument("--compare", nargs="?", const="history", default=None,
+                   metavar="BASE",
+                   help="baseline BENCH json; exit nonzero on regression "
+                        "(bare --compare gates against the latest prior "
+                        "BENCH_history.jsonl entry)")
     p.add_argument("--threshold", type=float, default=DEFAULT_THRESHOLD,
                    help="regression gate on device_s (default 0.10 = 10%%)")
     p.add_argument("--grids", default=None,
                    help=f"comma list from {sorted(GRIDS)}")
     p.add_argument("--arb", default="lax", choices=("lax", "pallas"),
                    help="arbitration backend to measure")
+    p.add_argument("--kernel", default="lax", choices=("lax", "pallas"),
+                   help="route+arbitrate block: lax reference or the fused "
+                        "Pallas megakernel")
+    p.add_argument("--chunk", type=int, default=1, metavar="K",
+                   help="cycle-loop early-exit granularity (all_done "
+                        "checked every K cycles; K=1 = reference)")
+    p.add_argument("--canon", action="store_true",
+                   help="pow2-canonicalize batch-axis lengths (compile "
+                        "sharing across nearby grid sizes)")
+    p.add_argument("--cache", default=None, metavar="DIR",
+                   help="persistent XLA compile cache directory (also: "
+                        "REPRO_COMPILE_CACHE env)")
+    p.add_argument("--profile", default=None, metavar="DIR",
+                   help="obs trace dir: wrap each grid in a jax.profiler "
+                        "trace (<DIR>/xprof/<grid>/) + span/metric events "
+                        "for repro.obs.report")
+    p.add_argument("--history", default=None, metavar="PATH",
+                   help="history jsonl to append/compare "
+                        "(default <repo>/BENCH_history.jsonl)")
     p.add_argument("--baseline", action="store_true",
                    help="also refresh <repo>/BENCH_baseline.json")
     args = p.parse_args(argv)
     if args.quick and args.full:
         p.error("--quick and --full are mutually exclusive")
+    if args.chunk < 1:
+        p.error("--chunk must be >= 1")
     if args.rev:
         os.environ["BENCH_REV"] = args.rev
     grids = args.grids.split(",") if args.grids else None
     unknown = set(grids or []) - set(GRIDS)
     if unknown:
         p.error(f"unknown grids {sorted(unknown)}; have {sorted(GRIDS)}")
+    if args.cache:
+        enable_persistent_cache(args.cache)
 
     base = None
-    if args.compare:
+    base_label = args.compare
+    if args.compare == "history":
+        # gate against the latest prior trajectory entry of matching size
+        base = latest_history(args.history, quick=not args.full)
+        if base is None:
+            print("# perf: --compare requested but "
+                  f"{args.history or HISTORY_PATH} has no prior "
+                  f"{'quick' if not args.full else 'full'} entry",
+                  file=sys.stderr)
+            return EXIT_BAD_BASELINE
+        base_label = f"history:{base.get('rev')}@{base.get('date')}"
+    elif args.compare:
         # validate the baseline BEFORE measuring: a missing or corrupt
         # file should fail in milliseconds with a distinct exit code, not
         # after minutes of measurement with a traceback
@@ -263,7 +422,17 @@ def main(argv=None) -> int:
                   "snapshot (missing 'grids' table)", file=sys.stderr)
             return EXIT_BAD_BASELINE
 
-    bench = run_suite(quick=not args.full, grids=grids, arb=args.arb)
+    tracer = None
+    if args.profile:
+        tracer = obs_trace.configure(args.profile, kind="perf_profile",
+                                     rev=current_rev())
+    try:
+        bench = run_suite(quick=not args.full, grids=grids, arb=args.arb,
+                          kernel=args.kernel, chunk=args.chunk,
+                          canon=args.canon, profile=args.profile)
+    finally:
+        if tracer is not None:
+            obs_trace.disable()
     out = args.out or os.path.join(REPO_ROOT, f"BENCH_{bench['rev']}.json")
     os.makedirs(os.path.dirname(os.path.abspath(out)), exist_ok=True)
     with open(out, "w") as f:
@@ -273,6 +442,7 @@ def main(argv=None) -> int:
         with open(os.path.join(REPO_ROOT, "BENCH_baseline.json"), "w") as f:
             json.dump(bench, f, indent=2, sort_keys=True)
             f.write("\n")
+    append_history(bench, args.history)
     rows = [{"grid": g, **m} for g, m in bench["grids"].items()]
     write_grid_csv(rows, f"perf ({bench['rev']}, {bench['backend']} x "
                          f"{bench['devices']} dev) -> {out}")
@@ -280,7 +450,7 @@ def main(argv=None) -> int:
     if base is not None:
         cmp_rows = compare_benchmarks(bench, base, threshold=args.threshold)
         write_grid_csv(cmp_rows,
-                       f"perf_compare (vs {args.compare}, "
+                       f"perf_compare (vs {base_label}, "
                        f"gate +{args.threshold:.0%} device_s)")
         regressed = [r["grid"] for r in cmp_rows if r["regressed"]]
         if regressed:

@@ -18,7 +18,9 @@ The legacy entry points ``build_simulator`` / ``simulate`` in
 """
 
 from repro.core.engine.arb import arbitrate_lax, make_arbiter
+from repro.core.engine.cache import cache_dir, enable_persistent_cache
 from repro.core.engine.packing import pack, pack_dtype
+from repro.core.engine.route_kernel import make_fused_router
 from repro.core.engine.runner import (
     PACKET_FLITS,
     SimEngine,
@@ -48,10 +50,13 @@ __all__ = [
     "arbitrate_lax",
     "build_static_tables",
     "build_step",
+    "cache_dir",
     "default_lane_backend",
+    "enable_persistent_cache",
     "get_engine",
     "init_state",
     "make_arbiter",
+    "make_fused_router",
     "make_workload_tables",
     "pack",
     "pack_dtype",

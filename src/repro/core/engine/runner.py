@@ -33,6 +33,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.engine.cache import enable_persistent_cache
 from repro.core.engine.step import SimState, all_done, build_step, init_state
 from repro.core.engine.tables import build_static_tables
 from repro.core.engine.workload_tables import (
@@ -131,7 +132,12 @@ class SimEngine:
         arb: str = "lax",
         pack: bool = True,
         telemetry: TelemetrySpec | None = None,
+        kernel: str = "lax",
+        chunk: int = 1,
+        canon: bool = False,
     ):
+        if chunk < 1:
+            raise ValueError(f"chunk must be >= 1, got {chunk}")
         self.topo = topo
         self.mode = mode
         self.policy = get_policy(mode)  # registry: unknown modes raise here
@@ -139,14 +145,50 @@ class SimEngine:
         self.bucket = bucket
         self.pack = pack
         self.telemetry = telemetry
+        self.kernel = kernel
+        self.chunk = chunk
+        self.canon = canon
+        # opt-in persistent XLA compile cache (REPRO_COMPILE_CACHE env or an
+        # earlier enable_persistent_cache() call); no-op when unconfigured
+        enable_persistent_cache()
         self.static = build_static_tables(
             topo, mode=mode, num_pools=num_pools, max_deroutes=max_deroutes,
             cap=cap, penalty_packets=penalty_packets, arb=arb,
-            pack_tables=pack,
+            pack_tables=pack, kernel=kernel,
         )
         self._step = build_step(self.static, telemetry=telemetry)
         self.trace_count = 0   # XLA traces of the core (any batching)
         self.device_calls = 0  # jitted dispatches issued
+        self.bucket_hits = 0   # dispatches whose compile key was seen before
+        self.bucket_misses = 0  # dispatches that opened a new compile key
+        self._seen_keys: set = set()
+
+        if chunk == 1:
+            # cycle-granular reference loop: `all_done` checked every cycle
+            loop = jax.lax.while_loop
+        else:
+            def loop(cond, body, init):
+                # while-of-scan chunks: the `all_done` reduction runs every
+                # `chunk` cycles and XLA fuses across cycles within a chunk
+                # (scan/while carries are buffer-donated by XLA, so the
+                # chunk adds no copies).  Result-exact for any K: `cond` is
+                # monotone (horizon and completion only latch one way), so
+                # freezing the carry on the first inactive cycle makes the
+                # in-chunk tail a no-op and records the exact completion
+                # cycle — the fixed point is the while_loop's, bit for bit.
+                def cstep(carry, _):
+                    active = cond(carry)
+                    new = body(carry)
+                    return jax.tree_util.tree_map(
+                        lambda old, upd: jnp.where(active, upd, old),
+                        carry, new,
+                    ), None
+
+                def chunk_body(carry):
+                    carry, _ = jax.lax.scan(cstep, carry, None, length=chunk)
+                    return carry
+
+                return jax.lax.while_loop(cond, chunk_body, init)
 
         if telemetry is None:
             def core(wt: WorkloadTables, seed, horizon):
@@ -159,9 +201,7 @@ class SimEngine:
                 def body(state: SimState):
                     return self._step(state, wt)
 
-                final = jax.lax.while_loop(
-                    cond, body, init_state(self.static, wt, seed)
-                )
+                final = loop(cond, body, init_state(self.static, wt, seed))
                 return (
                     final.t, all_done(wt, final), final.n_delivered,
                     final.n_injected, final.lat_sum, final.hop_sum,
@@ -185,7 +225,7 @@ class SimEngine:
                     init_state(st, wt, seed),
                     init_telemetry(telemetry, st.S, st.OUT, st.P, st.CAP),
                 )
-                final, tel = jax.lax.while_loop(cond, body, init)
+                final, tel = loop(cond, body, init)
                 return (
                     final.t, all_done(wt, final), final.n_delivered,
                     final.n_injected, final.lat_sum, final.hop_sum,
@@ -230,6 +270,52 @@ class SimEngine:
             )
         return prep
 
+    # --------------------------------------------- shape canonicalization
+    def _canon_pad(self, count: int) -> int:
+        """Canonical batch-axis length: next power of two (``canon`` only).
+
+        Workload tables already pow2-pad their own dims (R/T/D/NE — see
+        :func:`~repro.core.engine.workload_tables.shape_bucket`); the one
+        remaining compile-key degree of freedom is how many lanes are
+        stacked per dispatch.  Padding that count to a power of two makes
+        nearby grid sizes (5 vs 7 workloads, 3 vs 4 seeds) share one
+        compiled executable; padded lanes repeat existing ones and their
+        results are discarded.
+        """
+        if not self.canon or count <= 1:
+            return count
+        return 1 << (count - 1).bit_length()
+
+    def _pad_idxs(self, idxs: list) -> list:
+        """Round-robin-extend ``idxs`` to its canonical length."""
+        tgt = self._canon_pad(len(idxs))
+        return idxs + [idxs[k % len(idxs)] for k in range(tgt - len(idxs))]
+
+    def _note_bucket(self, fn: str, bucket, dims: tuple) -> None:
+        """Account one dispatch against the compile-key it lands on.
+
+        ``(fn, shape bucket, batch dims)`` mirrors the jit cache key of
+        the dispatched callable — a *miss* is a dispatch that opens a new
+        key (first trace+compile), a *hit* reuses one.  The hit rate is
+        the compile-amortization figure of merit ``benchmarks/perf.py``
+        records in ``BENCH_*.json``.
+        """
+        key = (fn, bucket, dims)
+        if key in self._seen_keys:
+            self.bucket_hits += 1
+        else:
+            self.bucket_misses += 1
+            self._seen_keys.add(key)
+
+    def bucket_stats(self) -> dict:
+        """Compile-key hit/miss counters for this engine's dispatches."""
+        total = self.bucket_hits + self.bucket_misses
+        return {
+            "hits": self.bucket_hits,
+            "misses": self.bucket_misses,
+            "hit_rate": (self.bucket_hits / total) if total else 0.0,
+        }
+
     # ------------------------------------------------------------ running
     def run(
         self,
@@ -239,6 +325,7 @@ class SimEngine:
     ) -> SimResult:
         prep = self.prepare(wl)
         self.device_calls += 1
+        self._note_bucket("run1", prep.tables.shape_bucket, ())
         with self._dispatch_span("run", lanes=1):
             out = self._run1(prep.tables, jnp.int32(seed), jnp.int32(horizon))
         return self._to_result(out, prep)
@@ -270,10 +357,17 @@ class SimEngine:
             groups.setdefault(p.tables.shape_bucket, []).append(i)
         results: list[SimResult | None] = [None] * len(preps)
         for idxs in groups.values():
-            stacked = stack_tables([preps[i].tables for i in idxs])
-            seed_arr = jnp.asarray([int(seeds[i]) for i in idxs], dtype=jnp.int32)
+            # canon: pad the stacked axis to a power of two (padded lanes
+            # repeat real ones; their rows are simply never read back)
+            idxs_p = self._pad_idxs(idxs)
+            stacked = stack_tables([preps[i].tables for i in idxs_p])
+            seed_arr = jnp.asarray(
+                [int(seeds[i]) for i in idxs_p], dtype=jnp.int32
+            )
             self.device_calls += 1
-            with self._dispatch_span("run_batch", lanes=len(idxs)):
+            self._note_bucket("runN", preps[idxs[0]].tables.shape_bucket,
+                              (len(idxs_p),))
+            with self._dispatch_span("run_batch", lanes=len(idxs_p)):
                 outs = self._runN(stacked, seed_arr, jnp.int32(horizon))
             for j, i in enumerate(idxs):
                 results[i] = self._to_result(_index_outs(outs, j), preps[i])
@@ -291,16 +385,20 @@ class SimEngine:
         ``results[workload][seed]`` in input order.
         """
         preps = [self.prepare(w) for w in workloads]
-        seed_arr = jnp.asarray([int(s) for s in seeds], dtype=jnp.int32)
+        seeds_p = self._pad_idxs([int(s) for s in seeds])
+        seed_arr = jnp.asarray(seeds_p, dtype=jnp.int32)
         groups: dict[tuple[int, int, int, int], list[int]] = {}
         for i, p in enumerate(preps):
             groups.setdefault(p.tables.shape_bucket, []).append(i)
         results: list[list[SimResult] | None] = [None] * len(preps)
         for idxs in groups.values():
-            stacked = stack_tables([preps[i].tables for i in idxs])
+            idxs_p = self._pad_idxs(idxs)
+            stacked = stack_tables([preps[i].tables for i in idxs_p])
             self.device_calls += 1
+            self._note_bucket("runNS", preps[idxs[0]].tables.shape_bucket,
+                              (len(idxs_p), len(seeds_p)))
             with self._dispatch_span("run_batch_seeds",
-                                     lanes=len(idxs) * len(seeds)):
+                                     lanes=len(idxs_p) * len(seeds_p)):
                 outs = self._runNS(stacked, seed_arr, jnp.int32(horizon))
             for j, i in enumerate(idxs):
                 results[i] = [
@@ -395,12 +493,18 @@ class SimEngine:
         if ndev == 1:
             # single device: the nested-vmap cross product is already the
             # fastest layout (no table replication across the seed axis)
-            seed_arr = jnp.asarray([int(s) for s in seeds], dtype=jnp.int32)
+            seeds_p = self._pad_idxs([int(s) for s in seeds])
+            seed_arr = jnp.asarray(seeds_p, dtype=jnp.int32)
             for idxs in groups.values():
-                stacked = stack_tables([preps[i].tables for i in idxs])
+                idxs_p = self._pad_idxs(idxs)
+                stacked = stack_tables([preps[i].tables for i in idxs_p])
                 self.device_calls += 1
+                self._note_bucket(
+                    "runNS", preps[idxs[0]].tables.shape_bucket,
+                    (len(idxs_p), len(seeds_p)),
+                )
                 with self._dispatch_span("run_grid",
-                                         lanes=len(idxs) * len(seeds)):
+                                         lanes=len(idxs_p) * len(seeds_p)):
                     outs = self._runNS(stacked, seed_arr, jnp.int32(horizon))
                 for j, i in enumerate(idxs):
                     results[i] = [
@@ -413,7 +517,11 @@ class SimEngine:
             self._lane_runner = self._make_lane_runner()
         for idxs in groups.values():
             lanes = [(i, k) for i in idxs for k in range(len(seeds))]
-            pad = (-len(lanes)) % ndev
+            # canon first (pow2 lane count), then to a device-count
+            # multiple so every shard is full
+            tgt = self._canon_pad(len(lanes))
+            tgt += (-tgt) % ndev
+            pad = tgt - len(lanes)
             # round-robin padding: repeat existing lanes so every device
             # shard is full; padded lanes are computed and discarded
             lanes_p = lanes + [lanes[k % len(lanes)] for k in range(pad)]
@@ -421,6 +529,8 @@ class SimEngine:
             seed_arr = jnp.asarray([int(seeds[k]) for _, k in lanes_p],
                                    dtype=jnp.int32)
             self.device_calls += 1
+            self._note_bucket("lanes", preps[idxs[0]].tables.shape_bucket,
+                              (len(lanes_p),))
             with self._dispatch_span("run_grid", lanes=len(lanes_p)):
                 outs = self._lane_runner(stacked, seed_arr, jnp.int32(horizon))
             for lane, (i, k) in enumerate(lanes):
@@ -439,9 +549,11 @@ class SimEngine:
     ) -> list[SimResult]:
         """One scenario, many seeds — tables are not replicated on device."""
         prep = self.prepare(wl)
-        seed_arr = jnp.asarray([int(s) for s in seeds], dtype=jnp.int32)
+        seeds_p = self._pad_idxs([int(s) for s in seeds])
+        seed_arr = jnp.asarray(seeds_p, dtype=jnp.int32)
         self.device_calls += 1
-        with self._dispatch_span("run_seeds", lanes=len(seeds)):
+        self._note_bucket("runS", prep.tables.shape_bucket, (len(seeds_p),))
+        with self._dispatch_span("run_seeds", lanes=len(seeds_p)):
             outs = self._runS(prep.tables, seed_arr, jnp.int32(horizon))
         return [
             self._to_result(_index_outs(outs, j), prep)
@@ -521,11 +633,12 @@ class SimEngine:
 
 @functools.lru_cache(maxsize=None)
 def _engine_for(topo, mode, num_pools, max_deroutes, cap, penalty_packets,
-                bucket, arb, pack, telemetry):
+                bucket, arb, pack, telemetry, kernel, chunk, canon):
     return SimEngine(
         topo, mode=mode, num_pools=num_pools, max_deroutes=max_deroutes,
         cap=cap, penalty_packets=penalty_packets, bucket=bucket, arb=arb,
-        pack=pack, telemetry=telemetry,
+        pack=pack, telemetry=telemetry, kernel=kernel, chunk=chunk,
+        canon=canon,
     )
 
 
@@ -540,13 +653,21 @@ def get_engine(
     arb: str = "lax",
     pack: bool = True,
     telemetry: TelemetrySpec | None = None,
+    kernel: str = "lax",
+    chunk: int = 1,
+    canon: bool = False,
 ) -> SimEngine:
     """Memoised engine lookup: one engine (and one compile) per config.
 
     Arguments are normalised into one positional cache key, so calls that
     spell defaults explicitly share the engine with calls that omit them.
     ``arb`` selects the switch-arbitration backend ("lax" | "pallas", bit
-    identical); ``pack`` controls int8/int16 table packing (default on —
+    identical); ``kernel`` selects the route+arbitrate implementation
+    ("lax" | "pallas" fused megakernel, bit identical); ``chunk`` is the
+    early-exit granularity of the cycle loop (K cycles per ``all_done``
+    check — result-exact for any K, K=1 is the cycle-granular reference);
+    ``canon`` pow2-pads batch-axis lengths so nearby grid sizes share
+    compiles; ``pack`` controls int8/int16 table packing (default on —
     ``False`` is the int32 reference layout for parity tests).
     ``telemetry`` (a hashable :class:`~repro.obs.probes.TelemetrySpec`)
     is part of the key: enabling probes builds a separate engine, leaving
@@ -554,5 +675,5 @@ def get_engine(
     """
     return _engine_for(
         topo, mode, num_pools, max_deroutes, cap, penalty_packets, bucket,
-        arb, pack, telemetry,
+        arb, pack, telemetry, kernel, chunk, canon,
     )

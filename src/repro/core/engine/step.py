@@ -34,6 +34,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.engine.arb import make_arbiter
+from repro.core.engine.route_kernel import make_fused_router
 from repro.core.engine.tables import StaticTables
 from repro.core.engine.workload_tables import WorkloadTables
 from repro.obs.probes import TelemetrySpec, TelemetryState
@@ -139,6 +140,11 @@ def build_step(
     # per-round arbitration primitive: "lax" scatter-min or "pallas"
     # per-switch kernel (bit-exact — see repro.core.engine.arb)
     arbitrate = make_arbiter(st.S, st.OUT, st.H, st.arb)
+    # fused route+arbitrate megakernel: kernel="pallas" replaces the whole
+    # candidate/cost/argmin/two-round block with one per-switch pallas_call
+    # (bit-exact — see repro.core.engine.route_kernel); the arb backend is
+    # subsumed, since both rounds live inside the fused kernel
+    fused_route = make_fused_router(st) if st.kernel == "pallas" else None
     BIGCOST = jnp.int32(1 << 28)
     OOB = jnp.int32(NQ * CAP + 5)  # safely out of bounds => dropped scatters
     NOMID = jnp.int32(S)           # f_imd sentinel: no (remaining) intermediate
@@ -205,119 +211,152 @@ def build_step(
         else:
             route_dsw = dsw
 
-        # ---------------- routing: candidate network ports -----------------
-        ccur = coords[cur]                                  # (H, q)
-        cdst = coords[route_dsw]                            # (H, q)
-        pv = port_val[None, :]                              # (1, q*n)
-        cur_d = ccur[:, port_dim]                           # (H, q*n)
-        dst_d = cdst[:, port_dim]
-        unaligned = cur_d != dst_d                          # (H, q*n)
-        not_self = pv != cur_d
-        is_min = (pv == dst_d) & unaligned
-        healthy = link_ok_t[cur]                            # (H, q*n) faults
-        nb = nbr[cur].astype(I32)                           # (H, q*n)
-        ipnb = in_port_at_nb[cur].astype(I32)               # (H, q*n)
-        vc_next = jnp.minimum(hop + 1, V - 1)[:, None]      # (H, 1)
-        qi_down = ((nb * IN + ipnb) * P + h_pool[:, None]) * V + vc_next
-        room = qlen[qi_down] < CAP                          # own queue has space
-        occ = port_occ[nb * IN + ipnb]                      # congestion signal
-        busy = jnp.maximum(state.busy - 1, 0)               # link served 1 pkt
-        avail_net = busy[cur[:, None] * OUT + jnp.arange(q * n)[None, :]] < 2
-        if policy.adaptive_deroutes:
-            # Omni-WAR: deroutes in any unaligned dimension while budget
-            # lasts; dead links drop out of the candidate set.  Under
-            # faults, voluntary deroutes must keep a *reserve* (one unit
-            # per dead cable) so the budget can't be spent before a
-            # forced escape is needed — a packet stranded at a dead
-            # minimal link with der == 0 would wait forever.  The cap at
-            # m - 1 keeps one voluntary deroute alive at any fault count
-            # (a full-budget reserve would silently collapse omniwar
-            # into min-with-escalation machine-wide); the escalation
-            # term covers forced escapes below the reserve, exactly
-            # like the minimal-only policies.
-            reserve = jnp.minimum(n_dead_t, max(m - 1, 0))
-            base = unaligned & not_self & healthy
-            escalate = (
-                ~(is_min & healthy).any(axis=1, keepdims=True)
-                & base & (der[:, None] > 0)
-            )
-            legal = (
-                (base & (is_min | (der[:, None] > reserve)) | escalate)
-                & room & avail_net
-            )
-        else:
-            # minimal-only (min / val / ugal): when every minimal port of
-            # this switch is dead, escalate to budget-bounded deroutes so
-            # packets can round the fault (hops stay inside the VC budget)
-            is_min_h = is_min & healthy
-            escalate = (
-                ~is_min_h.any(axis=1, keepdims=True)
-                & unaligned & not_self & healthy & (der[:, None] > 0)
-            )
-            legal = (is_min_h | escalate) & room & avail_net
+        # shared pre-kernel signals: the RNG draws must come off the host
+        # key stream identically on both kernel paths (bit-exactness)
+        busy_dec = jnp.maximum(state.busy - 1, 0)           # link served 1 pkt
+        vcn = jnp.minimum(hop + 1, V - 1)                   # (H,) next VC
         jitter = jax.random.randint(k_jit, (H, q * n), 0, 8, dtype=I32)
-        cost = occ * 8 + PEN * (~is_min) + jitter
-        cost = jnp.where(legal, cost, BIGCOST)
-        best = jnp.argmin(cost, axis=1).astype(I32)         # (H,)
-        best_cost = jnp.take_along_axis(cost, best[:, None], 1)[:, 0]
-        has_port = best_cost < BIGCOST
-        best_min = jnp.take_along_axis(is_min, best[:, None], 1)[:, 0]
-
-        out_port = jnp.where(at_dst, q * n + dof, best)
-        requesting = exists & (at_dst | has_port)
-        requesting = requesting & (busy[cur * OUT + out_port] < 2)
-        # NOTE: scatter/gather OOB markers must be POSITIVE out-of-range —
-        # negative indices wrap NumPy-style in jnp .at[] even with mode='drop'.
-        OOB_OUT = jnp.int32(S * OUT + 1)
-        req_out = jnp.where(requesting, cur * OUT + out_port, OOB_OUT)
-
-        # ------------- iterative random arbitration (2x internal speedup) --
-        # Round 1: every head requests its best port; one random winner per
-        # output.  Round 2 (separable-allocator iteration + the paper's 2x
-        # crossbar speedup): losers re-route to their best port that still
-        # has output tokens, enabling a second grant per cycle per output.
-        # The `busy` token bucket keeps sustained link rate at 1 pkt/time.
-        # Each round runs through the configured arbiter backend (lax
-        # scatter-min or the per-switch Pallas kernel — bit-exact).
         arb_key = jax.random.bits(k_arb, (H,), dtype=U32) >> 17  # 15 bits
         packed = (arb_key << 17) | jnp.arange(H, dtype=U32)
-        won1, g1 = arbitrate(req_out, packed)
 
-        qi_best1 = jnp.take_along_axis(qi_down, best[:, None], 1)[:, 0]
-        arr1 = jnp.zeros(NQ, dtype=I32).at[
-            jnp.where(won1 & ~at_dst, qi_best1, NQ + 1)
-        ].add(1, mode="drop")
-        tokens = (2 - busy) - g1                            # remaining slots
+        def route_arbitrate_lax():
+            # ---------- routing: candidate network ports (lax path) --------
+            ccur = coords[cur]                              # (H, q)
+            cdst = coords[route_dsw]                        # (H, q)
+            pv = port_val[None, :]                          # (1, q*n)
+            cur_d = ccur[:, port_dim]                       # (H, q*n)
+            dst_d = cdst[:, port_dim]
+            unaligned = cur_d != dst_d                      # (H, q*n)
+            not_self = pv != cur_d
+            is_min = (pv == dst_d) & unaligned
+            healthy = link_ok_t[cur]                        # (H, q*n) faults
+            nb = nbr[cur].astype(I32)                       # (H, q*n)
+            ipnb = in_port_at_nb[cur].astype(I32)           # (H, q*n)
+            qi_down = ((nb * IN + ipnb) * P + h_pool[:, None]) * V + vcn[:, None]
+            room = qlen[qi_down] < CAP                      # own queue has space
+            occ = port_occ[nb * IN + ipnb]                  # congestion signal
+            avail_net = busy_dec[
+                cur[:, None] * OUT + jnp.arange(q * n)[None, :]
+            ] < 2
+            if policy.adaptive_deroutes:
+                # Omni-WAR: deroutes in any unaligned dimension while budget
+                # lasts; dead links drop out of the candidate set.  Under
+                # faults, voluntary deroutes must keep a *reserve* (one unit
+                # per dead cable) so the budget can't be spent before a
+                # forced escape is needed — a packet stranded at a dead
+                # minimal link with der == 0 would wait forever.  The cap at
+                # m - 1 keeps one voluntary deroute alive at any fault count
+                # (a full-budget reserve would silently collapse omniwar
+                # into min-with-escalation machine-wide); the escalation
+                # term covers forced escapes below the reserve, exactly
+                # like the minimal-only policies.
+                reserve = jnp.minimum(n_dead_t, max(m - 1, 0))
+                base = unaligned & not_self & healthy
+                escalate = (
+                    ~(is_min & healthy).any(axis=1, keepdims=True)
+                    & base & (der[:, None] > 0)
+                )
+                legal = (
+                    (base & (is_min | (der[:, None] > reserve)) | escalate)
+                    & room & avail_net
+                )
+            else:
+                # minimal-only (min / val / ugal): when every minimal port of
+                # this switch is dead, escalate to budget-bounded deroutes so
+                # packets can round the fault (hops stay inside the VC budget)
+                is_min_h = is_min & healthy
+                escalate = (
+                    ~is_min_h.any(axis=1, keepdims=True)
+                    & unaligned & not_self & healthy & (der[:, None] > 0)
+                )
+                legal = (is_min_h | escalate) & room & avail_net
+            cost = occ * 8 + PEN * (~is_min) + jitter
+            cost = jnp.where(legal, cost, BIGCOST)
+            best = jnp.argmin(cost, axis=1).astype(I32)     # (H,)
+            best_cost = jnp.take_along_axis(cost, best[:, None], 1)[:, 0]
+            has_port = best_cost < BIGCOST
+            best_min = jnp.take_along_axis(is_min, best[:, None], 1)[:, 0]
 
-        loser = requesting & ~won1
-        # re-route: best legal port with tokens left and downstream room
-        # (accounting for the round-1 arrival into the same queue)
-        tok_net = tokens[cur[:, None] * OUT + jnp.arange(q * n)[None, :]] > 0
-        room_2 = qlen[qi_down] + arr1[qi_down] < CAP
-        cost2 = jnp.where(legal & tok_net & room_2, cost, BIGCOST)
-        best2 = jnp.argmin(cost2, axis=1).astype(I32)
-        has2 = jnp.take_along_axis(cost2, best2[:, None], 1)[:, 0] < BIGCOST
-        ej_ok = at_dst & (tokens[cur * OUT + q * n + dof] > 0)
-        out2 = jnp.where(at_dst, q * n + dof, best2)
-        req2 = loser & jnp.where(at_dst, ej_ok, has2)
-        req_out2 = jnp.where(req2, cur * OUT + out2, OOB_OUT)
-        won2, g2 = arbitrate(req_out2, packed)
-        won = won1 | won2
+            out_port = jnp.where(at_dst, q * n + dof, best)
+            requesting = exists & (at_dst | has_port)
+            requesting = requesting & (busy_dec[cur * OUT + out_port] < 2)
+            # NOTE: scatter/gather OOB markers must be POSITIVE out-of-range —
+            # negative indices wrap NumPy-style in jnp .at[] even with
+            # mode='drop'.
+            OOB_OUT = jnp.int32(S * OUT + 1)
+            req_out = jnp.where(requesting, cur * OUT + out_port, OOB_OUT)
 
-        # final chosen queue / minimality per winner
-        qi_best = jnp.where(
-            won2,
-            jnp.take_along_axis(qi_down, jnp.minimum(best2, q * n - 1)[:, None], 1)[:, 0],
-            qi_best1,
-        )
-        best_min = jnp.where(
-            won2,
-            jnp.take_along_axis(is_min, jnp.minimum(best2, q * n - 1)[:, None], 1)[:, 0],
-            best_min,
-        )
+            # --------- iterative random arbitration (2x internal speedup) --
+            # Round 1: every head requests its best port; one random winner
+            # per output.  Round 2 (separable-allocator iteration + the
+            # paper's 2x crossbar speedup): losers re-route to their best
+            # port that still has output tokens, enabling a second grant per
+            # cycle per output.  The `busy` token bucket keeps sustained
+            # link rate at 1 pkt/time.  Each round runs through the
+            # configured arbiter backend (lax scatter-min or the per-switch
+            # Pallas kernel — bit-exact).
+            won1, g1 = arbitrate(req_out, packed)
+
+            qi_best1 = jnp.take_along_axis(qi_down, best[:, None], 1)[:, 0]
+            arr1 = jnp.zeros(NQ, dtype=I32).at[
+                jnp.where(won1 & ~at_dst, qi_best1, NQ + 1)
+            ].add(1, mode="drop")
+            tokens = (2 - busy_dec) - g1                    # remaining slots
+
+            loser = requesting & ~won1
+            # re-route: best legal port with tokens left and downstream room
+            # (accounting for the round-1 arrival into the same queue)
+            tok_net = tokens[cur[:, None] * OUT + jnp.arange(q * n)[None, :]] > 0
+            room_2 = qlen[qi_down] + arr1[qi_down] < CAP
+            cost2 = jnp.where(legal & tok_net & room_2, cost, BIGCOST)
+            best2 = jnp.argmin(cost2, axis=1).astype(I32)
+            has2 = jnp.take_along_axis(cost2, best2[:, None], 1)[:, 0] < BIGCOST
+            ej_ok = at_dst & (tokens[cur * OUT + q * n + dof] > 0)
+            out2 = jnp.where(at_dst, q * n + dof, best2)
+            req2 = loser & jnp.where(at_dst, ej_ok, has2)
+            req_out2 = jnp.where(req2, cur * OUT + out2, OOB_OUT)
+            won2, g2 = arbitrate(req_out2, packed)
+            won = won1 | won2
+
+            # final chosen queue / minimality per winner
+            qi_best = jnp.where(
+                won2,
+                jnp.take_along_axis(
+                    qi_down, jnp.minimum(best2, q * n - 1)[:, None], 1
+                )[:, 0],
+                qi_best1,
+            )
+            bmin = jnp.where(
+                won2,
+                jnp.take_along_axis(
+                    is_min, jnp.minimum(best2, q * n - 1)[:, None], 1
+                )[:, 0],
+                best_min,
+            )
+            # per-winner escalation flag + round-1 arrival count into the
+            # winner's queue (the only arr1 value downstream code needs)
+            chosen = jnp.minimum(jnp.where(won2, best2, best), q * n - 1)
+            esc_chosen = jnp.take_along_axis(escalate, chosen[:, None], 1)[:, 0]
+            arr1_tgt = arr1[qi_best]
+            return won, won2, qi_best, bmin, esc_chosen, arr1_tgt, g1, g2
+
+        if fused_route is not None:
+            # ---------- fused route+arbitrate megakernel (one pallas_call,
+            # gridded per switch; candidate masks, cost, argmin and both
+            # arbitration rounds stay VMEM-resident — bit-exact) ----------
+            (won, won2, qi_best, best_min, esc_chosen, arr1_tgt, g1, g2) = (
+                fused_route(
+                    exists, at_dst, dof, der, vcn, route_dsw, link_ok_t,
+                    n_dead_t, qlen, port_occ, busy_dec, jitter, packed,
+                )
+            )
+        else:
+            (won, won2, qi_best, best_min, esc_chosen, arr1_tgt, g1, g2) = (
+                route_arbitrate_lax()
+            )
 
         # output token update: +1 per grant (burst absorbed by 2x speedup)
-        busy = busy + g1 + g2
+        busy = busy_dec + g1 + g2
 
         # ---------------- dequeue winners ----------------------------------
         qhead = jnp.where(won, (qhead + 1) % CAP, qhead)
@@ -356,15 +395,13 @@ def build_step(
         # re-escalation accounting: moves granted through the forced
         # fault-escape candidate set (the port the winner took was only
         # legal because every minimal port was dead / reserve was spent)
-        chosen = jnp.minimum(jnp.where(won2, best2, best), q * n - 1)
-        esc_chosen = jnp.take_along_axis(escalate, chosen[:, None], 1)[:, 0]
         esc_count = state.esc_count + jnp.sum(net & esc_chosen)
         tgt_qi = qi_best
         # ring tail = head_pre + len_pre, invariant under same-cycle dequeue;
         # a round-2 arrival lands one slot behind the round-1 arrival.
         tgt_slot = (
             state.qhead[tgt_qi] + qlen[tgt_qi]
-            + jnp.where(won2, arr1[tgt_qi], 0)
+            + jnp.where(won2, arr1_tgt, 0)
         ) % CAP
         tgt_flat = jnp.where(net, tgt_qi * CAP + tgt_slot, OOB)
         f_dst = state.f_dst.at[tgt_flat].set(dst, mode="drop")

@@ -64,6 +64,7 @@ class StaticTables(NamedTuple):
     PEN: int          # deroute penalty on the cost scale
     mode: str         # registered routing-policy name
     arb: str          # arbitration backend: "lax" scatter-min | "pallas"
+    kernel: str       # route+arbitrate block: "lax" | "pallas" megakernel
     # device constant tables
     coords: jnp.ndarray
     nbr: jnp.ndarray
@@ -86,12 +87,18 @@ def build_static_tables(
     penalty_packets: int = 4,
     arb: str = "lax",
     pack_tables: bool = True,
+    kernel: str = "lax",
 ) -> StaticTables:
     """Construct (and cache) the constant tables for one configuration.
 
     ``arb`` selects the arbitration backend the step kernel is built with
     ("lax" scatter-min reference or the "pallas" per-switch kernel — bit
-    identical, regression-pinned).  ``pack_tables`` packs the small-range
+    identical, regression-pinned).  ``kernel`` selects the route+arbitrate
+    block implementation: "lax" keeps the reference jnp path; "pallas"
+    swaps in the fused per-switch megakernel (candidate masks, cost,
+    argmin and both arbitration rounds in one ``pallas_call`` — bit
+    identical, regression-pinned; subsumes ``arb`` for those rounds).
+    ``pack_tables`` packs the small-range
     lookup tables to int8/int16 with topology-derived bounds (the step
     kernel widens to int32 at each gather); ``False`` keeps the int32
     reference layout for the packing parity tests.
@@ -135,7 +142,7 @@ def build_static_tables(
         n=n, q=q, conc=conc, S=S, E=E, IN=IN, OUT=OUT, P=P, V=V,
         NQ=NQ, H=H, CAP=cap, m=m,
         PEN=penalty_packets * 8,  # cost scale: occupancy*8 + jitter(3 bits)
-        mode=mode, arb=arb,
+        mode=mode, arb=arb, kernel=kernel,
         coords=lower(coords_np, n - 1),
         nbr=lower(nbr, S - 1),
         in_port_at_nb=lower(in_port_at_nb, IN - 1),

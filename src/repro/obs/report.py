@@ -13,7 +13,10 @@ run produced — no simulation is re-run — and renders:
                              from every ``sim.telemetry`` event (the
                              per-strategy heatmap data);
   * ``latency.csv``        — log2 ejection-latency histograms per label;
-  * ``queue_occupancy.csv``— per-pool queue-occupancy histograms per label.
+  * ``queue_occupancy.csv``— per-pool queue-occupancy histograms per label;
+  * ``device_timeline.csv``— per-grid device timings + ``jax.profiler``
+                             trace locations from a ``benchmarks.perf
+                             --profile`` run.
 
 Every table is also queryable in-process (:func:`span_rows`,
 :func:`sched_rows`, :func:`telemetry_events`, :func:`link_heatmap_rows`,
@@ -203,6 +206,31 @@ def hottest_links(source, k: int = 5) -> list[dict]:
     return list(source.get("top_links", []))[:k]
 
 
+def device_timeline_rows(events: list[dict]) -> list[dict]:
+    """Per-grid device timelines from a ``benchmarks.perf --profile`` run.
+
+    One row per ``perf.grid_metrics`` event: the headline timings next to
+    the ``xprof`` directory holding the raw ``jax.profiler`` trace for
+    that grid (open it with any perfetto/tensorboard viewer).
+    """
+    rows = []
+    for ev in events:
+        if ev.get("name") != "perf.grid_metrics":
+            continue
+        rows.append({
+            "grid": ev.get("grid", ""),
+            "lanes": ev.get("lanes", ""),
+            "compile_s": ev.get("compile_s", ""),
+            "device_s": ev.get("device_s", ""),
+            "wall_first_s": ev.get("wall_first_s", ""),
+            "wall_repeat_s": ev.get("wall_repeat_s", ""),
+            "cycles_per_s": ev.get("cycles_per_s", ""),
+            "bucket_hit_rate": ev.get("bucket_hit_rate", ""),
+            "xprof": ev.get("xprof", ""),
+        })
+    return rows
+
+
 def latency_rows(events: list[dict]) -> list[dict]:
     rows = []
     for ev in telemetry_events(events):
@@ -269,6 +297,10 @@ def _run_tables(events: list[dict], heading: str = "##") -> list[str]:
     if sched:
         parts.append(f"\n{heading} Scheduler streams (fragmentation & churn)\n")
         parts.append(_md_table(sched))
+    timelines = device_timeline_rows(events)
+    if timelines:
+        parts.append(f"\n{heading} Device timelines (perf profile)\n")
+        parts.append(_md_table(timelines))
     spans = span_rows(events)
     if spans:
         parts.append(f"\n{heading} Span timings\n")
@@ -335,6 +367,7 @@ def write_report(trace_dir: str, out_dir: str | None = None) -> dict[str, str]:
     emit_csv("link_heatmap", link_heatmap_rows)
     emit_csv("latency", latency_rows)
     emit_csv("queue_occupancy", queue_occupancy_rows)
+    emit_csv("device_timeline", device_timeline_rows)
     md = os.path.join(out_dir, "report.md")
     with open(md, "w") as f:
         f.write(render_markdown(manifest, events))

@@ -1,0 +1,102 @@
+"""Bucket canonicalization + persistent-cache plumbing pins.
+
+``SimEngine(canon=True)`` pow2-pads the stacked batch axes (workload
+count, seed count, lane count) so nearby grid sizes land on one compiled
+executable.  Padded lanes repeat real ones and are discarded — so the
+property under test is that canonicalization NEVER changes a SimResult,
+and the trace-counter pin is that two nearby grid sizes now share one
+compile (plus hit/miss counters that surface the amortization rate).
+"""
+
+import pytest
+
+from repro.core import traffic as tr
+from repro.core.allocation import allocate_partition
+from repro.core.engine import SimEngine
+from repro.core.engine import cache as engine_cache
+from repro.core.hyperx import HyperX
+
+SMALL = HyperX(n=4, q=2)
+HORIZON = 5000
+STRATS = ("row", "diagonal", "full_spread", "rectangular", "column")
+
+
+def _wl(strategy: str):
+    part = allocate_partition(strategy, SMALL, 0)
+    return tr.compose_workload(SMALL, [(tr.all_to_all(16), part)])
+
+
+def test_canon_never_changes_results():
+    """Property: pow2 padding of every batch axis is result-invariant —
+    delivered / latency / hops / makespan bit-identical, on odd-sized
+    workload lists, seed lists, and the single-run path."""
+    wls = [_wl(s) for s in STRATS[:3]]          # 3 -> pads to 4
+    seeds = (0, 3, 11)                          # 3 -> pads to 4
+    plain = SimEngine(SMALL, mode="omniwar")
+    canon = SimEngine(SMALL, mode="omniwar", canon=True)
+    assert canon.run_grid(wls, seeds=seeds, horizon=HORIZON) == \
+        plain.run_grid(wls, seeds=seeds, horizon=HORIZON)
+    assert canon.run_batch(wls, seeds=[1, 2, 3], horizon=HORIZON) == \
+        plain.run_batch(wls, seeds=[1, 2, 3], horizon=HORIZON)
+    assert canon.run_seeds(wls[0], seeds=seeds, horizon=HORIZON) == \
+        plain.run_seeds(wls[0], seeds=seeds, horizon=HORIZON)
+    assert canon.run(wls[0], seed=5, horizon=HORIZON) == \
+        plain.run(wls[0], seed=5, horizon=HORIZON)
+
+
+def test_canon_shares_compiles_across_nearby_sizes():
+    """The trace-counter pin: 3-workload and 4-workload grids (same shape
+    bucket) hit one compiled executable under canon — and the second
+    dispatch is recorded as a bucket hit."""
+    canon = SimEngine(SMALL, mode="omniwar", canon=True)
+    canon.run_grid([_wl(s) for s in STRATS[:3]], seeds=(0,),
+                   horizon=HORIZON)
+    t0 = canon.trace_count
+    assert canon.bucket_stats()["misses"] == 1
+    canon.run_grid([_wl(s) for s in STRATS[:4]], seeds=(0,),
+                   horizon=HORIZON)
+    assert canon.trace_count == t0  # no new compile: 3 padded to 4
+    assert canon.bucket_stats() == {
+        "hits": 1, "misses": 1, "hit_rate": 0.5}
+
+    # control: the uncanonicalized engine re-traces for the new size
+    plain = SimEngine(SMALL, mode="omniwar")
+    plain.run_grid([_wl(s) for s in STRATS[:3]], seeds=(0,),
+                   horizon=HORIZON)
+    t0 = plain.trace_count
+    plain.run_grid([_wl(s) for s in STRATS[:4]], seeds=(0,),
+                   horizon=HORIZON)
+    assert plain.trace_count == t0 + 1
+    assert plain.bucket_stats()["hits"] == 0
+
+
+def test_canon_pad_sizes():
+    eng = SimEngine(SMALL, mode="omniwar", canon=True)
+    assert [eng._canon_pad(n) for n in (1, 2, 3, 5, 8, 9)] == \
+        [1, 2, 4, 8, 8, 16]
+    off = SimEngine(SMALL, mode="omniwar")
+    assert [off._canon_pad(n) for n in (3, 5)] == [3, 5]
+
+
+# ------------------------------------------------------- persistent cache
+def test_enable_persistent_cache_env_gated(tmp_path, monkeypatch):
+    """Default-off contract + idempotence + the re-point guard."""
+    monkeypatch.setattr(engine_cache, "_configured", None)
+    monkeypatch.delenv(engine_cache.ENV_VAR, raising=False)
+    assert engine_cache.enable_persistent_cache() is None
+    assert engine_cache.cache_dir() is None
+
+    d = str(tmp_path / "xla-cache")
+    assert engine_cache.enable_persistent_cache(d) == d
+    assert engine_cache.cache_dir() == d
+    assert engine_cache.enable_persistent_cache(d) == d      # idempotent
+    assert engine_cache.enable_persistent_cache() == d       # no-arg: keeps
+    with pytest.raises(ValueError):
+        engine_cache.enable_persistent_cache(str(tmp_path / "other"))
+
+
+def test_enable_persistent_cache_reads_env(tmp_path, monkeypatch):
+    monkeypatch.setattr(engine_cache, "_configured", None)
+    d = str(tmp_path / "env-cache")
+    monkeypatch.setenv(engine_cache.ENV_VAR, d)
+    assert engine_cache.enable_persistent_cache() == d
